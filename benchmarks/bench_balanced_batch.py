@@ -1,0 +1,18 @@
+"""Paper-integration bench: partitioner-based LM batch balancing vs the
+naive dataloader (device-payload skew = SPMD straggler factor)."""
+from __future__ import annotations
+
+from repro.data import balanced, tokens
+
+from .common import emit, timeit
+
+
+def main() -> None:
+    lengths = tokens.doc_lengths(0, 16384, 8192)
+    for bins in [16, 256]:
+        us = timeit(lambda b=bins: balanced.balanced_bins(lengths, b)[0],
+                    warmup=0, iters=1)
+        _, s_bal = balanced.balanced_bins(lengths, bins)
+        _, s_naive = balanced.naive_bins(lengths, bins)
+        emit(f"balanced_batch/slc/bins{bins}", us,
+             f"skew={s_bal['skew']:.3f};naive={s_naive['skew']:.3f}")

@@ -1,0 +1,42 @@
+"""§2.3 cost model: predicted optimal granularity vs measured join time."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import cost_model, metrics
+from repro.core.partition import api, partition_counts
+from repro.data import spatial_gen
+from repro.query import engine
+
+from .common import emit, timeit
+
+N = 4000
+
+
+def main() -> None:
+    r = spatial_gen.dataset("osm", jax.random.PRNGKey(0), N)
+    s = spatial_gen.dataset("osm", jax.random.PRNGKey(1), N)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
+    merged = jax.numpy.concatenate([r, s])
+
+    ks, alphas, times = [], [], []
+    for payload in [100, 400, 1600]:
+        parts = api.partition("bos", merged, payload)
+        counts, _ = partition_counts(merged, parts)
+        lam = float(metrics.boundary_ratio(counts, parts.valid, 2 * N))
+        plan = engine.plan_join("bos", r, s, payload, 1)
+        us = timeit(lambda: engine.run_join_count(plan, mesh, "d"),
+                    warmup=1, iters=2)
+        ks.append(int(parts.k()))
+        alphas.append(lam)
+        times.append(us)
+        emit(f"cost_model/measured/b{payload}", us,
+             f"k={ks[-1]};alpha={lam:.3f}")
+
+    pred = [float(cost_model.join_cost(N, N, k, a)) for k, a in
+            zip(ks, alphas)]
+    # report rank agreement between model and measurement
+    agree = int(np.argmin(pred) == np.argmin(times))
+    emit("cost_model/rank_agreement", 0.0, f"argmin_match={agree}")

@@ -1,0 +1,45 @@
+"""Pallas kernel microbenches (interpret mode on CPU): kernel-vs-oracle
+wall time + the derived bytes/FLOP terms the TPU roofline uses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hilbert as chil
+from repro.kernels.hilbert import ops as hops
+from repro.kernels.mbr_join import ops as mops, ref as mref
+from repro.kernels.ssd import ops as sops
+
+from .common import emit, timeit
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    # mbr_join: 4096 x 4096 pairs
+    c = jax.random.uniform(key, (4096, 2))
+    sz = jax.random.uniform(jax.random.fold_in(key, 1), (4096, 2)) * 0.05
+    r = jnp.concatenate([c - sz, c + sz], -1)
+    us_k = timeit(lambda: mops.join_count(r, r))
+    us_r = timeit(lambda: mref.intersect_count(r, r))
+    # 4096² pair tests ≈ 8 compares each → VPU-bound: bytes = 2·4·4096·4
+    emit("kernel/mbr_join/4096x4096", us_k,
+         f"interp_vs_ref={us_k / us_r:.2f}")
+
+    # hilbert: 1M points
+    pts = jax.random.uniform(key, (1 << 20, 2))
+    bounds = jnp.array([0.0, 0.0, 1.0, 1.0])
+    us_k = timeit(lambda: hops.hilbert_keys(pts, bounds))
+    us_r = timeit(lambda: chil.hilbert_keys(pts, bounds))
+    emit("kernel/hilbert/1M", us_k, f"interp_vs_ref={us_k / us_r:.2f}")
+
+    # ssd: (B=2, L=1024, H=8, P=64, S=128)
+    x = jax.random.normal(key, (2, 1024, 8, 64)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 1024, 8))) * 0.1
+    a_log = -jnp.exp(jax.random.normal(key, (8,)) * 0.3)
+    bm = jax.random.normal(key, (2, 1024, 1, 128)) * 0.3
+    cm = jax.random.normal(key, (2, 1024, 1, 128)) * 0.3
+    us_k = timeit(lambda: sops.ssd_forward(x, dt, a_log, bm, cm,
+                                           use_kernel=True))
+    us_e = timeit(lambda: sops.ssd_forward(x, dt, a_log, bm, cm,
+                                           use_kernel=False))
+    emit("kernel/ssd/B2L1024H8", us_k, f"interp_vs_einsum={us_k / us_e:.2f}")

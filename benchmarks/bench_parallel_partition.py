@@ -1,0 +1,42 @@
+"""Fig 8: MapReduce-style parallel partitioning.
+
+Benches see one device, so true scaling lives in the dry-run/tests; here
+we measure the SPMD pipeline end-to-end on the local mesh and derive the
+phase decomposition (sample / map+shuffle / reduce) — the quantity the
+paper's Fig 8 scaling follows (reduce is embarrassingly parallel; the
+sampled coarse split is the serial fraction)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import geometry, hilbert
+from repro.data import spatial_gen
+from repro.query import parallel_partition as pp
+
+from .common import emit, timeit
+
+N = 50000
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    mbrs = spatial_gen.dataset("osm", key, N)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
+
+    us_total = timeit(
+        lambda: pp.parallel_partition(key, mbrs, 500, mesh, "d")[0].boxes,
+        warmup=1, iters=2)
+    emit(f"fig8_parallel/osm/pipeline/n{N}", us_total, "end-to-end")
+
+    us_sample = timeit(lambda: pp.coarse_splitters(key, mbrs, 8),
+                       warmup=1, iters=3)
+    emit(f"fig8_parallel/osm/phase_sample/n{N}", us_sample,
+         f"serial_frac={us_sample / us_total:.3f}")
+
+    keys_fn = jax.jit(lambda m: hilbert.hilbert_keys(
+        geometry.centroids(m), geometry.universe(m)))
+    us_map = timeit(keys_fn, mbrs, warmup=1, iters=3)
+    emit(f"fig8_parallel/osm/phase_map_keys/n{N}", us_map,
+         f"parallel_frac={us_map / us_total:.3f}")

@@ -1,0 +1,30 @@
+"""Figs 6 & 7: partitioner runtime per dataset and per granularity."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.partition import api
+from repro.data import spatial_gen
+
+from .common import emit, timeit
+
+N = 50000
+METHODS = ["fg", "bsp", "slc", "bos", "str", "hc"]
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    for ds in ["osm", "pi"]:
+        mbrs = spatial_gen.dataset(ds, key, N)
+        for m in METHODS:
+            us = timeit(lambda mm=m: api.partition(mm, mbrs, 500),
+                        warmup=1, iters=3)
+            emit(f"fig6_runtime/{ds}/{m}/n{N}", us, f"k~{N // 500}")
+    # Fig 7: granularity sensitivity (OSM)
+    mbrs = spatial_gen.dataset("osm", key, N)
+    for m in METHODS:
+        for payload in [100, 500, 2500]:
+            us = timeit(lambda mm=m, b=payload: api.partition(mm, mbrs, b),
+                        warmup=1, iters=1)
+            emit(f"fig7_granularity/osm/{m}/b{payload}", us,
+                 f"k~{N // payload}")

@@ -1,0 +1,32 @@
+"""Figs 3 & 4: partition balance (stddev) and boundary ratio λ per
+algorithm × granularity × dataset."""
+from __future__ import annotations
+
+import jax
+
+from repro.core import metrics
+from repro.core.partition import api, partition_counts
+from repro.data import spatial_gen
+
+from .common import emit, timeit
+
+N = 20000
+FRACTIONS = [0.001, 0.005, 0.01, 0.05]   # of N (paper Table 2 subset)
+METHODS = ["fg", "bsp", "slc", "bos", "str", "hc"]
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    for ds in ["osm", "pi"]:
+        mbrs = spatial_gen.dataset(ds, key, N)
+        for f in FRACTIONS:
+            payload = max(8, int(f * N))
+            for m in METHODS:
+                parts = api.partition(m, mbrs, payload)
+                counts, _ = partition_counts(mbrs, parts)
+                std = float(metrics.balance_stddev(counts, parts.valid))
+                lam = float(metrics.boundary_ratio(counts, parts.valid, N))
+                us = timeit(lambda mm=m: api.partition(mm, mbrs, payload),
+                            warmup=1, iters=1)
+                emit(f"fig3_balance/{ds}/{m}/b{payload}", us, f"{std:.2f}")
+                emit(f"fig4_lambda/{ds}/{m}/b{payload}", us, f"{lam:.4f}")

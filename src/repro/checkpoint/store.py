@@ -1,0 +1,93 @@
+"""Checkpoint save/restore with elastic re-sharding.
+
+Checkpoints are stored with *logical* (unsharded) shapes — one ``.npy``
+per leaf plus a JSON manifest — so a checkpoint written on a 256-chip
+mesh restores onto 512 chips, 8 chips, or 1 CPU device: restore simply
+``device_put``s each leaf with the sharding derived from the *target*
+mesh (elastic scaling).  Writes are atomic (tmp dir + rename) so a crash
+mid-save never corrupts the latest checkpoint — the FT runtime
+(``repro.ft``) relies on this.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        items.append((name, leaf))
+    return items, treedef
+
+
+def save(path: str, state, step: int) -> str:
+    """Atomically write ``state`` to ``path/step_<N>``."""
+    items, _ = _flatten(state)
+    final = os.path.join(path, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=path, prefix=".tmp_ckpt_")
+    manifest = {"step": step, "leaves": []}
+    try:
+        for i, (name, leaf) in enumerate(items):
+            arr = np.asarray(jax.device_get(leaf))
+            dtype = str(arr.dtype)
+            if dtype == "bfloat16":     # numpy can't round-trip ml_dtypes
+                arr = arr.view(np.uint16)
+            np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+            manifest["leaves"].append(
+                {"name": name, "file": f"leaf_{i:05d}.npy",
+                 "dtype": dtype, "shape": list(arr.shape)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(path)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, like, step: int | None = None, shardings=None):
+    """Restore into the structure of ``like``; per-leaf ``shardings``
+    (any target mesh) makes the restore elastic."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    items, treedef = _flatten(like)
+    by_name = {m["name"]: m for m in manifest["leaves"]}
+    leaves = []
+    shard_items = None
+    if shardings is not None:
+        shard_items, _ = _flatten(shardings)
+    for i, (name, leaf) in enumerate(items):
+        m = by_name[name]
+        arr = np.load(os.path.join(d, m["file"]))
+        if m["dtype"] == "bfloat16":
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if shard_items is not None:
+            leaves.append(jax.device_put(arr, shard_items[i][1]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["step"]

@@ -1,0 +1,3 @@
+"""Core library: the paper's contribution (partitioning, metrics, cost model)."""
+from . import cost_model, geometry, hilbert, metrics, sampling  # noqa: F401
+from .partition import Partitioning, partition  # noqa: F401

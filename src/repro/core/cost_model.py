@@ -1,0 +1,40 @@
+"""The paper's query-processing cost model (§2.3).
+
+    C(R ⋈ S) = (1+α)² · |R||S| / k  +  β(|R| + |S|)
+
+α — boundary-object replication fraction (a function of k and the layout),
+β — per-object de-duplication cost, k — partition count.  The model says
+granularity is a double-edged sword: larger k parallelises the join but
+inflates α.  ``optimal_k`` sweeps the trade-off given an empirical α(k).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    beta: float = 1.0          # dedup cost per object, in pair-test units
+    c_pair: float = 1.0        # cost of one pair predicate test
+
+
+def join_cost(n_r, n_s, k, alpha, params: CostParams = CostParams()):
+    part = params.c_pair * (1.0 + alpha) ** 2 * n_r * n_s / jnp.maximum(k, 1)
+    dedup = params.beta * (n_r + n_s)
+    return part + dedup
+
+
+def straggler_cost(n_r, n_s, k, alpha, skew, params: CostParams = CostParams()):
+    """SPMD refinement (beyond-paper): lock-step time is gated by the
+    *largest* tile, i.e. the mean per-tile cost times the skew ratio."""
+    return join_cost(n_r, n_s, k, alpha, params) * jnp.maximum(skew, 1.0)
+
+
+def optimal_k(n_r, n_s, ks, alphas, params: CostParams = CostParams()):
+    costs = join_cost(jnp.float32(n_r), jnp.float32(n_s),
+                      jnp.asarray(ks, jnp.float32),
+                      jnp.asarray(alphas, jnp.float32), params)
+    i = jnp.argmin(costs)
+    return i, costs

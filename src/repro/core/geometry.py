@@ -1,0 +1,83 @@
+"""MBR (minimum bounding rectangle) geometry primitives.
+
+Conventions
+-----------
+An MBR is a float32 vector ``[xmin, ymin, xmax, ymax]``; a dataset is an
+``(N, 4)`` array.  All predicates use *closed* boxes (touching boundaries
+intersect), matching ``st_intersects`` semantics used by the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+XMIN, YMIN, XMAX, YMAX = 0, 1, 2, 3
+
+
+def centroids(mbrs: jax.Array) -> jax.Array:
+    """(N, 4) -> (N, 2) box centers."""
+    return (mbrs[..., :2] + mbrs[..., 2:]) * 0.5
+
+
+def areas(mbrs: jax.Array) -> jax.Array:
+    """(N, 4) -> (N,) box areas (degenerate boxes have area 0)."""
+    w = jnp.maximum(mbrs[..., XMAX] - mbrs[..., XMIN], 0.0)
+    h = jnp.maximum(mbrs[..., YMAX] - mbrs[..., YMIN], 0.0)
+    return w * h
+
+
+def universe(mbrs: jax.Array, valid: jax.Array | None = None) -> jax.Array:
+    """Tight bounding box of the whole dataset -> (4,).
+
+    ``valid`` optionally masks out padding rows.
+    """
+    if valid is not None:
+        big = jnp.float32(jnp.inf)
+        lo = jnp.where(valid[:, None], mbrs[:, :2], big)
+        hi = jnp.where(valid[:, None], mbrs[:, 2:], -big)
+    else:
+        lo, hi = mbrs[:, :2], mbrs[:, 2:]
+    return jnp.concatenate([jnp.min(lo, axis=0), jnp.max(hi, axis=0)])
+
+
+def intersects(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Pairwise closed-box intersection: (..., 4) x (..., 4) -> (...,) bool."""
+    return (
+        (a[..., XMIN] <= b[..., XMAX])
+        & (b[..., XMIN] <= a[..., XMAX])
+        & (a[..., YMIN] <= b[..., YMAX])
+        & (b[..., YMIN] <= a[..., YMAX])
+    )
+
+
+def intersect_matrix(r: jax.Array, s: jax.Array) -> jax.Array:
+    """(N, 4) x (M, 4) -> (N, M) bool intersect table (reference path).
+
+    The Pallas kernel ``repro.kernels.mbr_join`` is the blocked production
+    implementation; this is the small-input / oracle path.
+    """
+    return intersects(r[:, None, :], s[None, :, :])
+
+
+def contains_point(boxes: jax.Array, pts: jax.Array) -> jax.Array:
+    """(K, 4) boxes x (N, 2) points -> (N, K) bool containment (closed)."""
+    x, y = pts[:, None, 0], pts[:, None, 1]
+    return (
+        (boxes[None, :, XMIN] <= x)
+        & (x <= boxes[None, :, XMAX])
+        & (boxes[None, :, YMIN] <= y)
+        & (y <= boxes[None, :, YMAX])
+    )
+
+
+def box_union(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.concatenate(
+        [jnp.minimum(a[..., :2], b[..., :2]), jnp.maximum(a[..., 2:], b[..., 2:])],
+        axis=-1,
+    )
+
+
+def clip_box(inner: jax.Array, outer: jax.Array) -> jax.Array:
+    lo = jnp.clip(inner[..., :2], outer[..., :2], outer[..., 2:])
+    hi = jnp.clip(inner[..., 2:], outer[..., :2], outer[..., 2:])
+    return jnp.concatenate([lo, hi], axis=-1)

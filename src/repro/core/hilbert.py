@@ -1,0 +1,58 @@
+"""Hilbert space-filling-curve encoding (pure-jnp reference).
+
+Maps 2-D grid coordinates to positions along a Hilbert curve of a given
+order.  Used by the HC partitioner and as the oracle for the Pallas kernel
+in ``repro.kernels.hilbert``.
+
+Algorithm: the classic iterative xy->d transform (Wikipedia / Hacker's
+Delight), vectorised over arrays with ``lax.fori_loop`` over bit planes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+DEFAULT_ORDER = 16  # 2^16 x 2^16 grid -> 32-bit curve index
+
+
+def xy2d(x: jax.Array, y: jax.Array, order: int = DEFAULT_ORDER) -> jax.Array:
+    """Vectorised Hilbert encode: uint32 grid coords -> uint32 curve index.
+
+    ``x``/``y`` must be in ``[0, 2**order)``.
+    """
+    x = x.astype(jnp.uint32)
+    y = y.astype(jnp.uint32)
+    d = jnp.zeros_like(x)
+
+    def body(i, carry):
+        x, y, d = carry
+        s = jnp.uint32(1) << jnp.uint32(order - 1 - i)
+        rx = ((x & s) > 0).astype(jnp.uint32)
+        ry = ((y & s) > 0).astype(jnp.uint32)
+        d = d + s * s * ((jnp.uint32(3) * rx) ^ ry)
+        # rotate quadrant
+        swap = ry == 0
+        flip = swap & (rx == 1)
+        x_f = jnp.where(flip, s - jnp.uint32(1) - x, x)
+        y_f = jnp.where(flip, s - jnp.uint32(1) - y, y)
+        x, y = jnp.where(swap, y_f, x_f), jnp.where(swap, x_f, y_f)
+        return x, y, d
+
+    _, _, d = lax.fori_loop(0, order, body, (x, y, d))
+    return d
+
+
+def quantize(pts: jax.Array, bounds: jax.Array, order: int = DEFAULT_ORDER) -> tuple[jax.Array, jax.Array]:
+    """(N, 2) float points + (4,) universe box -> uint32 grid coords."""
+    n = jnp.uint32(1) << jnp.uint32(order)
+    span = jnp.maximum(bounds[2:] - bounds[:2], 1e-30)
+    f = (pts - bounds[:2]) / span
+    g = jnp.clip((f * n.astype(jnp.float32)).astype(jnp.uint32), 0, n - 1)
+    return g[:, 0], g[:, 1]
+
+
+def hilbert_keys(pts: jax.Array, bounds: jax.Array, order: int = DEFAULT_ORDER) -> jax.Array:
+    """Float points -> uint32 Hilbert keys (the HC partitioner sort key)."""
+    gx, gy = quantize(pts, bounds, order)
+    return xy2d(gx, gy, order)

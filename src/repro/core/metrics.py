@@ -1,0 +1,47 @@
+"""Partition-quality metrics from the paper (§6.3, §6.4).
+
+- ``balance_stddev``  — Fig 3's skewness measure,
+- ``boundary_ratio``  — λ (eq. 2),
+- ``skew_ratio``      — max/mean payload (the SPMD straggler factor:
+  in lock-step execution the slowest shard gates the step, so this is
+  the *direct* slowdown multiplier — see DESIGN.md §2),
+- ``coverage``        — fraction of objects assigned to ≥1 partition.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def balance_stddev(counts, valid):
+    c = counts.astype(jnp.float32)
+    k = jnp.maximum(jnp.sum(valid), 1)
+    mean = jnp.sum(jnp.where(valid, c, 0.0)) / k
+    var = jnp.sum(jnp.where(valid, (c - mean) ** 2, 0.0)) / k
+    return jnp.sqrt(var)
+
+
+def boundary_ratio(counts, valid, n_objects):
+    """λ = Σ|p_i| / |R| − 1 (0 when no boundary objects)."""
+    total = jnp.sum(jnp.where(valid, counts, 0))
+    return total.astype(jnp.float32) / jnp.float32(n_objects) - 1.0
+
+
+def skew_ratio(counts, valid):
+    c = counts.astype(jnp.float32)
+    k = jnp.maximum(jnp.sum(valid), 1)
+    mean = jnp.sum(jnp.where(valid, c, 0.0)) / k
+    mx = jnp.max(jnp.where(valid, c, 0.0))
+    return mx / jnp.maximum(mean, 1e-9)
+
+
+def coverage(copies):
+    covered = jnp.sum((copies > 0).astype(jnp.int32))
+    return covered.astype(jnp.float32) / jnp.float32(copies.shape[0])
+
+
+def padding_waste(counts, valid, capacity):
+    """Fraction of padded-tile slots that are padding (SPMD-specific)."""
+    c = jnp.where(valid, counts, 0)
+    used = jnp.sum(jnp.minimum(c, capacity))
+    slots = jnp.maximum(jnp.sum(valid) * capacity, 1)
+    return 1.0 - used.astype(jnp.float32) / slots.astype(jnp.float32)

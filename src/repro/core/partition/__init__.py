@@ -1,0 +1,4 @@
+"""The paper's six spatial partitioning algorithms + MASJ assignment."""
+from . import api, assign, bos, bsp, fg, hc, slc, str_  # noqa: F401  (registration)
+from .api import Partitioning, info, methods, partition  # noqa: F401
+from .assign import assign_padded, partition_counts  # noqa: F401

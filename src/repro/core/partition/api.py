@@ -1,0 +1,70 @@
+"""Partitioner registry and the common result structure.
+
+Every partitioner is a function ``(mbrs, payload, **kw) -> Partitioning``
+with a *static* maximum partition count so the whole thing jits.  The
+paper's Table-1 classification is attached as registry metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Partitioning:
+    """A set of (possibly padded) partition regions.
+
+    boxes : (kmax, 4) float32 partition boundaries
+    valid : (kmax,)  bool — real partitions vs padding rows
+    """
+
+    boxes: jax.Array
+    valid: jax.Array
+
+    @property
+    def kmax(self) -> int:
+        return self.boxes.shape[0]
+
+    def k(self) -> jax.Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodInfo:
+    fn: Callable
+    overlapping: bool          # Table 1: partition-boundary dimension
+    search: str                # "top-down" | "bottom-up" | "na"
+    criterion: str             # "space" | "data"
+    covers_universe: bool      # tight-MBR methods may leave gaps
+
+
+_REGISTRY: dict[str, MethodInfo] = {}
+
+
+def register(name: str, *, overlapping: bool, search: str, criterion: str,
+             covers_universe: bool):
+    def deco(fn):
+        _REGISTRY[name] = MethodInfo(fn, overlapping, search, criterion,
+                                     covers_universe)
+        return fn
+    return deco
+
+
+def methods() -> dict[str, MethodInfo]:
+    return dict(_REGISTRY)
+
+
+def info(name: str) -> MethodInfo:
+    return _REGISTRY[name]
+
+
+def partition(method: str, mbrs: jax.Array, payload: int, **kw) -> Partitioning:
+    """Run a registered partitioner. ``payload`` is the paper's ``b``."""
+    if method not in _REGISTRY:
+        raise KeyError(f"unknown partition method {method!r}; "
+                       f"have {sorted(_REGISTRY)}")
+    return _REGISTRY[method].fn(mbrs, payload, **kw)

@@ -1,0 +1,71 @@
+"""MASJ assignment: replicate every object to every partition it touches.
+
+This is the paper's multi-assignment/single-join strategy (§2.2): after a
+layout is computed, each object is assigned to *all* partitions whose
+region intersects its MBR; duplicates produced by the replication are
+removed after the query (``repro.query.dedup``).
+
+Outputs are padded/masked so the whole pipeline stays statically shaped
+(SPMD requirement — see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import geometry
+from .api import Partitioning
+
+
+def partition_counts(mbrs: jax.Array, parts: Partitioning,
+                     block: int = 8192) -> tuple[jax.Array, jax.Array]:
+    """Per-partition payload counts and per-object copy counts.
+
+    Returns ``(counts[kmax], copies[N])`` where ``counts`` includes MASJ
+    replication (so ``sum(counts)/N - 1`` is the paper's λ).
+    Memory: O(block * kmax).
+    """
+    n = mbrs.shape[0]
+    kmax = parts.kmax
+    counts = jnp.zeros((kmax,), jnp.int32)
+    copies = jnp.zeros((n,), jnp.int32)
+    nblocks = -(-n // block)
+    for i in range(nblocks):
+        sl = slice(i * block, min((i + 1) * block, n))
+        hit = geometry.intersect_matrix(mbrs[sl], parts.boxes)
+        hit = hit & parts.valid[None, :]
+        counts = counts + jnp.sum(hit, axis=0, dtype=jnp.int32)
+        copies = copies.at[sl].set(jnp.sum(hit, axis=1, dtype=jnp.int32))
+    return counts, copies
+
+
+def assign_padded(mbrs: jax.Array, parts: Partitioning, capacity: int
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Build padded per-partition member lists.
+
+    Returns ``(members[kmax, capacity] int32 indices, mask[kmax, capacity],
+    overflow[kmax])``.  Objects beyond ``capacity`` in a partition are
+    dropped and counted in ``overflow`` (the engine sizes ``capacity``
+    from the cost model so overflow is an error signal, not a silent
+    truncation).
+    """
+    n = mbrs.shape[0]
+    kmax = parts.kmax
+    hit = geometry.intersect_matrix(mbrs, parts.boxes) & parts.valid[None, :]
+    rank = jnp.cumsum(hit.astype(jnp.int32), axis=0) - 1      # (N, k)
+    obj = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, kmax))
+    part = jnp.broadcast_to(jnp.arange(kmax, dtype=jnp.int32)[None, :],
+                            (n, kmax))
+    ok = hit & (rank < capacity)
+    # every real (part, slot) target is unique (rank is a per-partition
+    # running index); all masked-out entries collapse onto (0, 0) with
+    # identity values under `max`, so a single scatter-max builds the table.
+    p = jnp.where(ok, part, 0).ravel()
+    s = jnp.where(ok, jnp.clip(rank, 0, capacity - 1), 0).ravel()
+    members = jnp.full((kmax, capacity), -1, jnp.int32).at[p, s].max(
+        jnp.where(ok, obj, -1).ravel())
+    mask = jnp.zeros((kmax, capacity), bool).at[p, s].max(ok.ravel())
+    members = jnp.maximum(members, 0)
+    counts = jnp.sum(hit, axis=0, dtype=jnp.int32)
+    overflow = jnp.maximum(counts - capacity, 0)
+    return members, mask, overflow

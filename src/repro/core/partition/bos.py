@@ -1,0 +1,79 @@
+"""Boundary-Optimized Strip partitioning (BOS) — Algorithm 5.
+
+Data-oriented, non-overlapping.  Like SLC it slices strips of ``b``
+objects off the remaining universe, but at every step it evaluates the
+induced cut in *both* dimensions and takes the one crossing fewer object
+MBRs (``getCost``), directly minimising boundary objects.
+
+Implementation: a ``lax.scan`` over the (static) strip count.  Each step
+is O(N) masked vector work against precomputed per-dimension sort orders,
+so the whole partitioner is a single fused scan — no host loop.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .. import geometry
+from .api import Partitioning, register
+
+
+@register("bos", overlapping=False, search="bottom-up", criterion="data",
+          covers_universe=True)
+def bos_partition(mbrs: jax.Array, payload: int) -> Partitioning:
+    n = mbrs.shape[0]
+    kmax = max(1, math.ceil(n / payload))
+    bounds = geometry.universe(mbrs)
+    c = geometry.centroids(mbrs)
+    cx, cy = c[:, 0], c[:, 1]
+    ox = jnp.argsort(cx)
+    oy = jnp.argsort(cy)
+    cx_s, cy_s = cx[ox], cy[oy]
+
+    def cut_and_cost(alive, order, coord_sorted, lo_ext, hi_ext, take):
+        """b-th remaining order statistic as a cut + boundary-cross cost."""
+        alive_s = alive[order]
+        csum = jnp.cumsum(alive_s.astype(jnp.int32))
+        pos_b = jnp.searchsorted(csum, take, side="left")
+        pos_b1 = jnp.searchsorted(csum, take + 1, side="left")
+        nn = coord_sorted.shape[0]
+        v_b = coord_sorted[jnp.clip(pos_b, 0, nn - 1)]
+        v_b1 = coord_sorted[jnp.clip(pos_b1, 0, nn - 1)]
+        cut = (v_b + v_b1) * 0.5
+        cost = jnp.sum(alive & (lo_ext < cut) & (cut < hi_ext))
+        take_mask_s = alive_s & (csum <= take)
+        removed = jnp.zeros_like(alive).at[order].set(take_mask_s)
+        return cut, cost, removed
+
+    def step(carry, _):
+        alive, rem = carry
+        n_alive = jnp.sum(alive.astype(jnp.int32))
+        has = n_alive > 0
+        take = jnp.minimum(payload, n_alive)
+        last = n_alive <= payload
+
+        cut_x, cost_x, rm_x = cut_and_cost(
+            alive, ox, cx_s, mbrs[:, 0], mbrs[:, 2], take)
+        cut_y, cost_y, rm_y = cut_and_cost(
+            alive, oy, cy_s, mbrs[:, 1], mbrs[:, 3], take)
+        cut_x = jnp.where(last, rem[2], cut_x)
+        cut_y = jnp.where(last, rem[3], cut_y)
+        use_x = cost_x <= cost_y
+
+        box_x = jnp.stack([rem[0], rem[1], cut_x, rem[3]])
+        box_y = jnp.stack([rem[0], rem[1], rem[2], cut_y])
+        box = jnp.where(use_x, box_x, box_y)
+        rem_x = jnp.stack([cut_x, rem[1], rem[2], rem[3]])
+        rem_y = jnp.stack([rem[0], cut_y, rem[2], rem[3]])
+        new_rem = jnp.where(has, jnp.where(use_x, rem_x, rem_y), rem)
+        removed = jnp.where(use_x, rm_x, rm_y)
+        new_alive = alive & ~(removed & has)
+        return (new_alive, new_rem), (jnp.where(has, box, rem), has)
+
+    alive0 = jnp.ones((n,), bool)
+    (_, _), (boxes, valid) = lax.scan(step, (alive0, bounds), None,
+                                      length=kmax)
+    return Partitioning(boxes=boxes.astype(jnp.float32), valid=valid)

@@ -1,0 +1,93 @@
+"""Binary Split Partitioning (BSP) — Algorithm 3.
+
+Top-down, data-oriented, non-overlapping.  A node whose payload exceeds
+``b`` is split at the member-centroid median; the split dimension is the
+one maximising the product of children areas (the paper's probabilistic
+area-balance criterion).
+
+Implementation: level-synchronous kd construction.  Instead of recursion
+(which does not jit), each level splits *all* oversized nodes at once with
+segment ops over a (node, coord)-sorted order.  Child membership is
+assigned by rank (robust to ties); the cut coordinate is the midpoint of
+the two middle order statistics, so children boxes tile the parent
+exactly and the layout is non-overlapping with full universe coverage.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .. import geometry
+from .api import Partitioning, register
+
+
+def _per_node_median(coord, node, num_nodes, counts, starts):
+    """Per-node median cut + per-object rank in node, along one dim.
+
+    Returns (cut[num_nodes], pos_in_node[N]) where ``cut`` is the midpoint
+    of the two middle member coords.
+    """
+    n = coord.shape[0]
+    order_c = jnp.argsort(coord)                 # stable
+    order = order_c[jnp.argsort(node[order_c], stable=True)]
+    sorted_coord = coord[order]
+    sorted_node = node[order]
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - starts[sorted_node]
+    pos_in_node = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+    half = counts // 2
+    lo_idx = jnp.clip(starts + jnp.maximum(half - 1, 0), 0, n - 1)
+    hi_idx = jnp.clip(starts + half, 0, n - 1)
+    cut = (sorted_coord[lo_idx] + sorted_coord[hi_idx]) * 0.5
+    return cut, pos_in_node
+
+
+@register("bsp", overlapping=False, search="top-down", criterion="data",
+          covers_universe=True)
+def bsp_partition(mbrs: jax.Array, payload: int) -> Partitioning:
+    n = mbrs.shape[0]
+    depth = max(0, math.ceil(math.log2(max(n / payload, 1.0))))
+    kmax = 1 << depth
+    bounds = geometry.universe(mbrs)
+    cx, cy = geometry.centroids(mbrs).T
+
+    node = jnp.zeros((n,), jnp.int32)
+    obox = jnp.broadcast_to(bounds, (n, 4))      # per-object node box
+
+    for level in range(depth):
+        num_nodes = 1 << level
+        ones = jnp.ones((n,), jnp.int32)
+        counts = jax.ops.segment_sum(ones, node, num_segments=num_nodes)
+        starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                  jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+        cut_x, pos_x = _per_node_median(cx, node, num_nodes, counts, starts)
+        cut_y, pos_y = _per_node_median(cy, node, num_nodes, counts, starts)
+
+        # area products for the split-dimension criterion (per node)
+        nbox = jnp.zeros((num_nodes, 4), obox.dtype).at[node].set(obox)
+        w, h = nbox[:, 2] - nbox[:, 0], nbox[:, 3] - nbox[:, 1]
+        px = jnp.maximum(cut_x - nbox[:, 0], 0) * jnp.maximum(nbox[:, 2] - cut_x, 0) * h * h
+        py = jnp.maximum(cut_y - nbox[:, 1], 0) * jnp.maximum(nbox[:, 3] - cut_y, 0) * w * w
+        use_x = px >= py
+
+        split = counts > payload
+        half = counts // 2
+        o_split = split[node]
+        o_use_x = use_x[node]
+        o_left = jnp.where(o_use_x, pos_x, pos_y) < half[node]
+        child = 2 * node + jnp.where(o_split & ~o_left, 1, 0)
+
+        o_cut = jnp.where(o_use_x, cut_x[node], cut_y[node])
+        xm0, ym0, xm1, ym1 = obox[:, 0], obox[:, 1], obox[:, 2], obox[:, 3]
+        nx1 = jnp.where(o_split & o_use_x & o_left, o_cut, xm1)
+        nx0 = jnp.where(o_split & o_use_x & ~o_left, o_cut, xm0)
+        ny1 = jnp.where(o_split & ~o_use_x & o_left, o_cut, ym1)
+        ny0 = jnp.where(o_split & ~o_use_x & ~o_left, o_cut, ym0)
+        obox = jnp.stack([nx0, ny0, nx1, ny1], axis=-1)
+        node = child
+
+    boxes = jnp.broadcast_to(bounds, (kmax, 4)).astype(jnp.float32)
+    boxes = boxes.at[node].set(obox)
+    valid = jnp.zeros((kmax,), bool).at[node].set(True)
+    return Partitioning(boxes=boxes, valid=valid)

@@ -1,0 +1,38 @@
+"""Fixed Grid partitioning (FG) — Algorithm 2.
+
+Space-oriented, non-overlapping: the universe is split into an m x m grid
+with ``m = ceil(sqrt(N / b))``.  The grid is computed in O(1); objects are
+assigned later by MASJ box intersection (``partition/assign.py``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .. import geometry
+from .api import Partitioning, register
+
+
+def grid_boxes(bounds: jax.Array, mx: int, my: int) -> jax.Array:
+    """Tile ``bounds`` into an (mx*my, 4) grid of boxes (row-major in y)."""
+    xs = jnp.linspace(bounds[0], bounds[2], mx + 1)
+    ys = jnp.linspace(bounds[1], bounds[3], my + 1)
+    x0, x1 = xs[:-1], xs[1:]
+    y0, y1 = ys[:-1], ys[1:]
+    bx0 = jnp.repeat(x0, my)
+    bx1 = jnp.repeat(x1, my)
+    by0 = jnp.tile(y0, mx)
+    by1 = jnp.tile(y1, mx)
+    return jnp.stack([bx0, by0, bx1, by1], axis=-1).astype(jnp.float32)
+
+
+@register("fg", overlapping=False, search="na", criterion="space",
+          covers_universe=True)
+def fg_partition(mbrs: jax.Array, payload: int) -> Partitioning:
+    n = mbrs.shape[0]
+    m = max(1, math.ceil(math.sqrt(n / payload)))
+    bounds = geometry.universe(mbrs)
+    boxes = grid_boxes(bounds, m, m)
+    return Partitioning(boxes=boxes, valid=jnp.ones((m * m,), bool))

@@ -1,0 +1,52 @@
+"""Hilbert-Curve partitioning (HC).
+
+Bottom-up packing, data-oriented, *overlapping* (tight member MBRs).
+Centroids are mapped to Hilbert curve indices (order-16 grid), the
+dataset is sorted by curve value, and every consecutive run of ``b``
+objects forms a partition whose region is the tight union of member
+extents — exactly the Hilbert R-tree bulk-load leaf level.
+
+The curve encode itself is the compute hot spot for large N; the
+production path uses the Pallas kernel (``repro.kernels.hilbert``) and
+falls back to the pure-jnp reference here.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .. import geometry, hilbert
+from .api import Partitioning, register
+from .str_ import tight_group_boxes
+
+# injected by repro.kernels at import time to avoid a core->kernels dep
+_KEY_FN: Callable | None = None
+
+
+def set_key_fn(fn: Callable | None) -> None:
+    global _KEY_FN
+    _KEY_FN = fn
+
+
+@register("hc", overlapping=True, search="bottom-up", criterion="data",
+          covers_universe=False)
+def hc_partition(mbrs: jax.Array, payload: int,
+                 order: int = hilbert.DEFAULT_ORDER) -> Partitioning:
+    n = mbrs.shape[0]
+    k = max(1, math.ceil(n / payload))
+    bounds = geometry.universe(mbrs)
+    pts = geometry.centroids(mbrs)
+    key_fn = _KEY_FN or hilbert.hilbert_keys
+    keys = key_fn(pts, bounds, order)
+    perm = jnp.argsort(keys)
+
+    pad = k * payload - n
+    idx = jnp.pad(perm, (0, pad))
+    real = jnp.pad(jnp.ones((n,), bool), (0, pad))
+    member_boxes = mbrs[idx.reshape(k, payload)]
+    mask = real.reshape(k, payload)
+    boxes, valid = tight_group_boxes(member_boxes, mask)
+    return Partitioning(boxes=boxes.astype(jnp.float32), valid=valid)

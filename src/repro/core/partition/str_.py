@@ -1,0 +1,59 @@
+"""Sort-Tile-Recursive partitioning (STR) — Algorithm 6.
+
+Bottom-up packing, data-oriented, *overlapping* (tight member MBRs).
+``m = ceil(sqrt(N/b))`` vertical slabs by x-centroid, each slab sliced
+into runs of ``b`` by y-centroid; the partition region is the tight MBR
+of the run's members, as in R-tree bulk loading.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .. import geometry
+from .api import Partitioning, register
+
+
+def tight_group_boxes(mbrs_grouped: jax.Array, mask: jax.Array):
+    """(..., G, 4) member boxes + (..., G) mask -> (..., 4) tight MBR."""
+    big = jnp.float32(3.4e38)
+    lo = jnp.where(mask[..., None], mbrs_grouped[..., :2], big)
+    hi = jnp.where(mask[..., None], mbrs_grouped[..., 2:], -big)
+    out = jnp.concatenate([jnp.min(lo, axis=-2), jnp.max(hi, axis=-2)],
+                          axis=-1)
+    any_valid = jnp.any(mask, axis=-1)
+    return jnp.where(any_valid[..., None], out, jnp.zeros_like(out)), any_valid
+
+
+@register("str", overlapping=True, search="bottom-up", criterion="data",
+          covers_universe=False)
+def str_partition(mbrs: jax.Array, payload: int) -> Partitioning:
+    n = mbrs.shape[0]
+    m = max(1, math.ceil(math.sqrt(n / payload)))
+    slab = math.ceil(n / m)
+    kper = max(1, math.ceil(slab / payload))
+
+    c = geometry.centroids(mbrs)
+    pad = m * slab - n
+    big = jnp.float32(3.4e38)
+    cx = jnp.concatenate([c[:, 0], jnp.full((pad,), big)])
+    order_x = jnp.argsort(cx)
+    idx = jnp.where(order_x < n, order_x, 0).reshape(m, slab)
+    real = (order_x < n).reshape(m, slab)
+    cy = jnp.where(real, c[:, 1][idx], big)
+
+    order_y = jnp.argsort(cy, axis=1)
+    idx = jnp.take_along_axis(idx, order_y, axis=1)
+    real = jnp.take_along_axis(real, order_y, axis=1)
+
+    pad2 = kper * payload - slab
+    if pad2:
+        idx = jnp.pad(idx, ((0, 0), (0, pad2)))
+        real = jnp.pad(real, ((0, 0), (0, pad2)))
+    member_boxes = mbrs[idx.reshape(m, kper, payload)]
+    mask = real.reshape(m, kper, payload)
+    boxes, valid = tight_group_boxes(member_boxes, mask)
+    return Partitioning(boxes=boxes.reshape(-1, 4).astype(jnp.float32),
+                        valid=valid.reshape(-1))

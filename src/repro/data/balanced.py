@@ -1,0 +1,75 @@
+"""Paper-integration: partitioner-based load-balanced batch packing.
+
+Token pipelines feed variable-length documents to fixed-shape device
+batches; a skewed assignment leaves devices idle at every lock-step
+collective — exactly the paper's straggler argument.  We embed documents
+as degenerate MBRs in (arrival-index × length) space and reuse the
+paper's partitioners (SLC by default: strips of equal *token payload*)
+to build device bins, then report balance with the same metrics used
+for spatial tiles.  This is the technique applied where it IS applicable
+to LM training (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import metrics
+from ..core.partition import api
+from ..query import balance as qbalance
+
+
+def docs_as_mbrs(lengths: np.ndarray) -> jnp.ndarray:
+    """Documents -> point MBRs at (cumulative-token-position, length)."""
+    starts = np.concatenate([[0], np.cumsum(lengths)[:-1]]).astype(np.float32)
+    ln = lengths.astype(np.float32)
+    x = starts + ln * 0.5          # token-mass coordinate
+    y = ln
+    return jnp.stack([x, y, x, y], axis=-1)
+
+
+def balanced_bins(lengths: np.ndarray, n_bins: int, method: str = "slc"):
+    """Assign docs to ``n_bins`` device bins with ~equal token payload.
+
+    SLC in token-mass space gives equal-token strips (the paper's
+    payload bound); LPT on top handles stragglers from rounding.
+    Returns (bin_assignment[n_docs], stats).
+    """
+    n = len(lengths)
+    mbrs = docs_as_mbrs(lengths)
+    payload = max(1, n // n_bins)
+    parts = api.partition(method, mbrs, payload)
+    boxes = np.asarray(parts.boxes)
+    valid = np.asarray(parts.valid)
+    x = np.asarray(mbrs[:, 0])
+    # strip index via cut positions (SLC boxes tile the x axis)
+    order = np.argsort(boxes[:, 0])
+    order = order[valid[order]]
+    cuts = boxes[order, 0]
+    strip = np.clip(np.searchsorted(cuts, x, side="right") - 1, 0,
+                    len(order) - 1)
+    # strips -> bins by token cost (LPT), strips count may exceed bins
+    strip_tokens = np.zeros(len(order))
+    np.add.at(strip_tokens, strip, lengths)
+    sbin, makespan, mean = qbalance.lpt_pack(strip_tokens, n_bins)
+    assignment = sbin[strip]
+
+    bin_tokens = np.zeros(n_bins)
+    np.add.at(bin_tokens, assignment, lengths)
+    stats = {
+        "skew": float(bin_tokens.max() / max(bin_tokens.mean(), 1e-9)),
+        "stddev": float(bin_tokens.std()),
+        "makespan": makespan,
+    }
+    return assignment, stats
+
+
+def naive_bins(lengths: np.ndarray, n_bins: int):
+    """Round-robin baseline (what a plain dataloader does)."""
+    assignment = np.arange(len(lengths)) % n_bins
+    bin_tokens = np.zeros(n_bins)
+    np.add.at(bin_tokens, assignment, lengths)
+    return assignment, {
+        "skew": float(bin_tokens.max() / max(bin_tokens.mean(), 1e-9)),
+        "stddev": float(bin_tokens.std()),
+    }

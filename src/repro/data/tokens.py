@@ -1,0 +1,45 @@
+"""Deterministic synthetic token pipeline (host-sharded).
+
+Each data-parallel host materialises only its shard of the global batch
+(`host_id`/`n_hosts`), from a counter-based PRNG — no host ever holds
+the global batch, and any host can re-derive any shard (important for
+elastic restart: a new host joining at step N regenerates exactly the
+shard it owns).
+
+Documents have a heavy-tailed length distribution; ``balanced.py`` turns
+them into payload-balanced batches with the paper's partitioners.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenPipelineConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    n_hosts: int = 1
+    host_id: int = 0
+    seed: int = 0
+
+
+def batch_for_step(cfg: TokenPipelineConfig, step: int) -> dict:
+    """The host's shard of the step's global batch: (B/H, S) int32."""
+    per_host = cfg.global_batch // cfg.n_hosts
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step), cfg.host_id)
+    toks = jax.random.randint(key, (per_host, cfg.seq_len), 0, cfg.vocab,
+                              dtype=jnp.int32)
+    return {"tokens": toks}
+
+
+def doc_lengths(seed: int, n_docs: int, max_len: int) -> np.ndarray:
+    """Heavy-tailed document lengths (lognormal, clipped)."""
+    rng = np.random.default_rng(seed)
+    raw = rng.lognormal(mean=5.5, sigma=1.2, size=n_docs)
+    return np.clip(raw.astype(np.int64), 16, max_len)

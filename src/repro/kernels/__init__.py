@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package has ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper), and ``ref.py`` (pure-jnp oracle).
+Kernels target TPU (VMEM tiling, 128-aligned blocks) and are validated on
+CPU with ``interpret=True``.
+
+- ``mbr_join``: blocked pairwise MBR-intersection counting — the per-tile
+  spatial-join hot spot (the paper's query phase D).
+- ``hilbert``: Hilbert-curve xy→d bit transform — the HC partitioner and
+  MapReduce-shuffle anchor-key hot spot (paper §5.1).
+- ``ssd``: Mamba2 state-space-duality intra-chunk block — the assigned
+  arch pool's kernel-level hot spot.
+"""
+from . import hilbert, mbr_join, ssd  # noqa: F401
+
+# wire the Hilbert kernel into the HC partitioner (core has no kernels dep)
+from ..core.partition import hc as _hc
+from .hilbert import ops as _hops
+
+_hc.set_key_fn(_hops.hilbert_keys)

@@ -1,0 +1,39 @@
+"""Public jit'd wrappers for the Hilbert encode kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import hilbert as core_hilbert
+from . import kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("order", "interpret"))
+def encode(gx: jax.Array, gy: jax.Array,
+           order: int = core_hilbert.DEFAULT_ORDER,
+           interpret: bool | None = None) -> jax.Array:
+    """(N,) uint32 grid coords -> (N,) uint32 curve index via the kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    n = gx.shape[0]
+    tile = kernel.DEFAULT_ROWS * kernel.LANES
+    pad = (-n) % tile
+    gx_p = jnp.pad(gx.astype(jnp.uint32), (0, pad)).reshape(-1, kernel.LANES)
+    gy_p = jnp.pad(gy.astype(jnp.uint32), (0, pad)).reshape(-1, kernel.LANES)
+    d = kernel.encode_pallas(gx_p, gy_p, order, interpret=interpret)
+    return d.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("order", "interpret"))
+def hilbert_keys(pts: jax.Array, bounds: jax.Array,
+                 order: int = core_hilbert.DEFAULT_ORDER,
+                 interpret: bool | None = None) -> jax.Array:
+    """Drop-in replacement for ``core.hilbert.hilbert_keys`` (kernel path)."""
+    gx, gy = core_hilbert.quantize(pts, bounds, order)
+    return encode(gx, gy, order, interpret=interpret)

@@ -1,0 +1,2 @@
+"""Oracle for the Hilbert kernel — the core pure-jnp implementation."""
+from ...core.hilbert import hilbert_keys, quantize, xy2d  # noqa: F401

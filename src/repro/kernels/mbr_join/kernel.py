@@ -1,0 +1,82 @@
+"""Blocked pairwise MBR-intersection kernel (TPU Pallas).
+
+The per-tile spatial join tests every (r, s) MBR pair in a tile for
+closed-box intersection.  On TPU this is a VPU problem: a (BR, BS) block
+of boolean compares from rank-1 broadcasts.  Layout: coordinates arrive
+as (4, N) — component-major — so the object axis is the 128-lane axis.
+
+Two entry points:
+- ``count``: grid cell (i, j) reduces its (BR, BS) block to one int32 —
+  O(Nb×Mb) output, used for selectivity/λ statistics and join counting.
+- ``mask``:  writes the full boolean block — used for pair extraction on
+  moderate tile sizes.
+
+Padding contract: callers pad with *inverted* sentinel boxes
+(xmin > xmax) which intersect nothing, so no separate validity mask is
+streamed through VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BR = 256
+DEFAULT_BS = 128
+
+
+def _block_hits(r_ref, s_ref):
+    rx0 = r_ref[0, :][:, None]   # (BR, 1)
+    ry0 = r_ref[1, :][:, None]
+    rx1 = r_ref[2, :][:, None]
+    ry1 = r_ref[3, :][:, None]
+    sx0 = s_ref[0, :][None, :]   # (1, BS)
+    sy0 = s_ref[1, :][None, :]
+    sx1 = s_ref[2, :][None, :]
+    sy1 = s_ref[3, :][None, :]
+    return (rx0 <= sx1) & (sx0 <= rx1) & (ry0 <= sy1) & (sy0 <= ry1)
+
+
+def _count_kernel(r_ref, s_ref, out_ref):
+    hits = _block_hits(r_ref, s_ref)
+    out_ref[0, 0] = jnp.sum(hits.astype(jnp.int32))
+
+
+def _mask_kernel(r_ref, s_ref, out_ref):
+    out_ref[...] = _block_hits(r_ref, s_ref)
+
+
+def count_pallas(r4: jax.Array, s4: jax.Array, br: int = DEFAULT_BR,
+                 bs: int = DEFAULT_BS, interpret: bool = False) -> jax.Array:
+    """r4: (4, N), s4: (4, M), N % br == 0, M % bs == 0 -> (N/br, M/bs) int32."""
+    n, m = r4.shape[1], s4.shape[1]
+    grid = (n // br, m // bs)
+    return pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, br), lambda i, j: (0, i)),
+            pl.BlockSpec((4, bs), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], grid[1]), jnp.int32),
+        interpret=interpret,
+    )(r4, s4)
+
+
+def mask_pallas(r4: jax.Array, s4: jax.Array, br: int = DEFAULT_BR,
+                bs: int = DEFAULT_BS, interpret: bool = False) -> jax.Array:
+    """r4: (4, N), s4: (4, M) -> (N, M) bool intersection table."""
+    n, m = r4.shape[1], s4.shape[1]
+    grid = (n // br, m // bs)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, br), lambda i, j: (0, i)),
+            pl.BlockSpec((4, bs), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bs), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.bool_),
+        interpret=interpret,
+    )(r4, s4)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the mbr_join kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def intersect_mask(r: jax.Array, s: jax.Array) -> jax.Array:
+    """(N, 4) x (M, 4) -> (N, M) closed-box intersection."""
+    return (
+        (r[:, None, 0] <= s[None, :, 2])
+        & (s[None, :, 0] <= r[:, None, 2])
+        & (r[:, None, 1] <= s[None, :, 3])
+        & (s[None, :, 1] <= r[:, None, 3])
+    )
+
+
+def intersect_count(r: jax.Array, s: jax.Array) -> jax.Array:
+    return jnp.sum(intersect_mask(r, s).astype(jnp.int32))

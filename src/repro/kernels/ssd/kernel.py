@@ -1,0 +1,63 @@
+"""Mamba2 SSD intra-chunk kernel (TPU Pallas).
+
+State-space duality (arXiv:2405.21060) computes attention-like chunked
+matmuls instead of a sequential scan.  The intra-chunk block is the MXU
+hot spot:
+
+    G     = C @ Bᵀ                      (Q, Q)   MXU
+    M_ij  = G_ij · exp(cl_i − cl_j) · dt_j  for i ≥ j else 0
+    Y     = M @ X                       (Q, P)   MXU
+
+where ``cl`` is the within-chunk cumulative log-decay (cumsum of dt·A).
+Chunk length Q = 128 and state S = 128 align both matmuls with the MXU;
+inter-chunk state passing is cheap jnp around the kernel (see ops.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+CHUNK = 128
+
+
+def _ssd_kernel(x_ref, dt_ref, cl_ref, b_ref, c_ref, out_ref):
+    x = x_ref[0]                       # (Q, P)
+    dt = dt_ref[0]                     # (Q,)
+    cl = cl_ref[0]                     # (Q,)
+    b = b_ref[0]                       # (Q, S)
+    c = c_ref[0]                       # (Q, S)
+    q = x.shape[0]
+    g = jnp.dot(c, b.T, preferred_element_type=jnp.float32)     # (Q, Q)
+    decay = jnp.exp(cl[:, None] - cl[None, :])
+    i = lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    j = lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    m = jnp.where(i >= j, g * decay, 0.0) * dt[None, :]
+    out_ref[0] = jnp.dot(m.astype(x.dtype), x,
+                         preferred_element_type=jnp.float32).astype(out_ref.dtype)
+
+
+def intra_chunk_pallas(x: jax.Array, dt: jax.Array, cl: jax.Array,
+                       b: jax.Array, c: jax.Array,
+                       interpret: bool = False) -> jax.Array:
+    """All args flattened over (batch·head·chunk) instances.
+
+    x: (I, Q, P), dt/cl: (I, Q), b/c: (I, Q, S) -> (I, Q, P) float32.
+    """
+    inst, q, p = x.shape
+    s = b.shape[-1]
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=(inst,),
+        in_specs=[
+            pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q), lambda i: (i, 0)),
+            pl.BlockSpec((1, q), lambda i: (i, 0)),
+            pl.BlockSpec((1, q, s), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, q, s), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, p), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((inst, q, p), jnp.float32),
+        interpret=interpret,
+    )(x, dt, cl, b, c)

@@ -1,0 +1,137 @@
+"""Chunked SSD forward: Pallas intra-chunk kernel + jnp inter-chunk carry.
+
+The full SSD output decomposes per chunk c as
+
+    Y_c = intra(X_c)  +  C_c · exp(cl) · H_{c−1}
+
+with the chunk-final states H_c computed by a (cheap, O(L/Q)) scan:
+
+    H_c = exp(cl_last) · H_{c−1} + (dt·exp(cl_last − cl) B)ᵀ X_c
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# Pallas kernels are forward-only; differentiate through the pure-jnp
+# oracle formulas instead (kernel forward, oracle-derived backward).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _intra_chunk(x, dt, cl, b, c, interpret):
+    return kernel.intra_chunk_pallas(x, dt, cl, b, c, interpret=interpret)
+
+
+def _intra_fwd(x, dt, cl, b, c, interpret):
+    return _intra_chunk(x, dt, cl, b, c, interpret), (x, dt, cl, b, c)
+
+
+def _intra_bwd(interpret, res, g):
+    from . import ref
+    _, vjp = jax.vjp(ref.intra_chunk_ref, *res)
+    return vjp(g)
+
+
+_intra_chunk.defvjp(_intra_fwd, _intra_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_kernel"))
+def ssd_forward(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+                b: jax.Array, c: jax.Array, chunk: int = kernel.CHUNK,
+                interpret: bool | None = None,
+                use_kernel: bool | None = None):
+    """Multi-head chunked SSD.
+
+    x: (B, L, H, P), dt: (B, L, H), a_log: (H,) (negative),
+    b, c: (B, L, G, S) with H % G == 0.  Returns (B, L, H, P) float32.
+
+    ``use_kernel=None`` resolves to "Pallas on a single device, einsum
+    under GSPMD": pallas_call is an opaque custom-call to the SPMD
+    partitioner, so inside a multi-device jit the mathematically
+    identical einsum form (which GSPMD shards) is used; the kernel is
+    the per-shard hot-spot path (shard_map / single-device / TPU core).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    if use_kernel is None:
+        use_kernel = jax.device_count() == 1
+    bs, l, h, p = x.shape
+    g, s = b.shape[2], b.shape[3]
+    rep = h // g
+    assert l % chunk == 0, "sequence must be chunk-padded"
+    nc = l // chunk
+
+    bh = jnp.repeat(b, rep, axis=2)  # (B, L, H, S)
+    ch = jnp.repeat(c, rep, axis=2)
+
+    # per-step log decay and within-chunk cumulative
+    ld = dt * a_log[None, None, :]                      # (B, L, H)
+    ldc = ld.reshape(bs, nc, chunk, h)
+    cl = jnp.cumsum(ldc, axis=2)                        # inclusive cumsum
+
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h)
+    bc = bh.reshape(bs, nc, chunk, h, s)
+    cc = ch.reshape(bs, nc, chunk, h, s)
+
+    # ---- intra-chunk ----
+    if use_kernel:
+        # Pallas path: flatten (B, H, nc) into the kernel grid axis
+        def flat(t, feat):
+            return jnp.moveaxis(t, 3, 1).reshape(bs * h * nc, chunk, *feat)
+
+        xi, bi, ci = flat(xc, (p,)), flat(bc, (s,)), flat(cc, (s,))
+        dti = jnp.moveaxis(dtc, 3, 1).reshape(bs * h * nc, chunk)
+        cli = jnp.moveaxis(cl, 3, 1).reshape(bs * h * nc, chunk)
+        y_intra = _intra_chunk(xi, dti, cli, bi, ci, interpret)
+        y_intra = jnp.moveaxis(
+            y_intra.reshape(bs, h, nc, chunk, p), 1, 3)  # (B, nc, Q, H, P)
+    else:
+        # GSPMD path: batched einsums, batch/head axes kept separate so
+        # data/model shardings propagate without gathers
+        g = jnp.einsum("bnqhs,bnkhs->bnhqk", cc, bc)
+        # decay[b,n,h,q,k] = exp(cl[b,n,q,h] - cl[b,n,k,h])
+        clh = cl.transpose(0, 1, 3, 2)                   # (B, nc, H, Q)
+        decay = jnp.exp(clh[..., :, None] - clh[..., None, :])
+        q_i = jnp.arange(chunk)
+        mask = q_i[:, None] >= q_i[None, :]
+        m = jnp.where(mask[None, None, None], g * decay, 0.0) \
+            * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+        y_intra = jnp.einsum("bnhqk,bnkhp->bnqhp", m, xc)
+
+    # ---- inter-chunk state scan (jnp) ----
+    cl_last = cl[:, :, -1, :]                            # (B, nc, H)
+    # contribution of chunk c to its final state:
+    #   S_c = Σ_t dt_t · exp(cl_last − cl_t) · B_t ⊗ X_t
+    w = dtc * jnp.exp(cl_last[:, :, None, :] - cl)       # (B, nc, Q, H)
+    s_c = jnp.einsum("bnqh,bnqhs,bnqhp->bnhsp", w, bc, xc)
+
+    def carry(hprev, inp):
+        s_chunk, decay = inp                             # (B,H,S,P), (B,H)
+        hnew = hprev * decay[..., None, None] + s_chunk
+        return hnew, hprev
+
+    decays = jnp.exp(cl_last)                            # (B, nc, H)
+    h0 = jnp.zeros((bs, h, s, p), jnp.float32)
+    from ...models import layers as _layers
+    _unroll = nc if _layers.UNROLL_INNER_SCANS else 1
+    _, h_prevs = lax.scan(
+        carry, h0,
+        (jnp.moveaxis(s_c, 1, 0), jnp.moveaxis(decays, 1, 0)),
+        unroll=_unroll)
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                # (B, nc, H, S, P)
+
+    # inter-chunk output: y_t += C_t · exp(cl_t) · H_{c−1}
+    y_inter = jnp.einsum("bnqhs,bnhsp->bnqhp",
+                         cc * jnp.exp(cl)[..., None], h_prevs)
+
+    y = (y_intra + y_inter).reshape(bs, l, h, p)
+    return y

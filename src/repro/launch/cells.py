@@ -1,0 +1,241 @@
+"""Dry-run cell construction: shardings + abstract inputs + lowering.
+
+One "cell" = (architecture × input shape × mesh).  Everything here is
+allocation-free: params/caches come from ``jax.eval_shape`` and inputs
+are ``ShapeDtypeStruct``s, so a 480B-param cell lowers on a laptop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import configs
+from ..dist import sharding as shard_rules
+from ..models import api, lm
+from ..models.config import ModelConfig
+from ..optim import adamw
+from . import mesh as mesh_lib
+from . import shapes as shapes_lib
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _div(n, size):
+    return size > 1 and n % size == 0
+
+
+def batch_shardings(cfg: ModelConfig, shape, mesh: Mesh):
+    dp = mesh_lib.dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh_lib.axis_size(mesh, a)
+    b = shape.global_batch
+    bspec = P(dp) if _div(b, dp_size) else P()
+    out = {"tokens": _ns(mesh, P(*bspec, None))}
+    if cfg.family == "vlm":
+        out["img"] = _ns(mesh, P(*bspec, None, None))
+    if cfg.family == "encdec":
+        out["frames"] = _ns(mesh, P(*bspec, None, None))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape, mesh: Mesh, cache_tree,
+                cache_shard: str = "w"):
+    """Sharding rules for decode caches (see DESIGN.md §4).
+
+    Batch → data when divisible; otherwise the *length* axis of
+    attention caches is sequence-sharded over data (long_500k, batch=1)
+    — distributed flash-decode.  Head-like axes → model when divisible.
+    """
+    data = mesh_lib.axis_size(mesh, "data")
+    model = mesh_lib.axis_size(mesh, "model")
+    dp = mesh_lib.dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh_lib.axis_size(mesh, a)
+    b = shape.global_batch
+
+    def stacked_spec(base, shp):
+        """Spec for a layer-stacked cache leaf (leading L axis)."""
+        nd = len(shp)
+        bshard = dp if _div(b, dp_size) else None
+        spec = [None] * nd
+        if base in ("k", "v"):
+            # (L, B, W, KV, hd)  (cross/self caches share the layout).
+            # Batch → dp; then either the *length* axis → model (+ data
+            # when batch can't shard) — flash-decode partial-softmax
+            # combine — or, with cache_shard="hd", the head_dim axis →
+            # model (keeps the ring-buffer write local; §Perf variant).
+            spec[1] = bshard
+            if cache_shard == "hd" and _div(shp[4], model):
+                spec[4] = "model"
+                if bshard is None and _div(shp[2], data):
+                    spec[2] = "data"
+                return spec
+            w_axes = []
+            if bshard is None and _div(shp[2], data):
+                w_axes.append("data")
+            if _div(shp[2], model):
+                w_axes.append("model")
+            if w_axes:
+                spec[2] = tuple(w_axes) if len(w_axes) > 1 else w_axes[0]
+            elif _div(shp[3], model):
+                spec[3] = "model"
+            return spec
+        if base in ("state", "conv", "h"):
+            # state: (L, B, H, S, P) — H → model;
+            # conv:  (L, B, K, C)    — C → model;
+            # h:     (L, B, W)       — W → model.
+            spec[1] = bshard
+            axis = 2 if base == "state" else nd - 1
+            if _div(shp[axis], model):
+                spec[axis] = "model"
+            return spec
+        return spec
+
+    def leaf_spec(path, leaf):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        base = name.rsplit("/", 1)[-1]
+        if name.startswith("rest/") or "/rest/" in name:
+            # remainder layers are unstacked: rule shifts left by one
+            return P(*stacked_spec(base, (1,) + leaf.shape)[1:])
+        return P(*stacked_spec(base, leaf.shape))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    specs = [leaf_spec(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    cfg: ModelConfig
+    kind: str
+    lower_fn: object            # () -> jax.stages.Lowered
+
+
+def reduced_depth_cfg(cfg: ModelConfig, k: int) -> ModelConfig:
+    """Same config at k super-blocks of depth (for cost extrapolation —
+    XLA cost analysis counts while-loop bodies once, so per-layer costs
+    are recovered from the depth-1/depth-2 delta)."""
+    kw = dict(n_layers=k * len(cfg.pattern))
+    if cfg.family == "encdec":
+        kw["enc_layers"] = k
+    return dataclasses.replace(cfg, **kw)
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               remat: str = "full",
+               opt_policy: str | None = None,
+               cfg_override: ModelConfig | None = None,
+               n_micro: int = 1,
+               bf16_weight_gather: bool = False,
+               fast_attn: bool = False,
+               moe_local: bool = False,
+               cache_shard: str = "w") -> Cell | None:
+    from ..models import layers as layers_mod, moe as moe_mod
+    layers_mod.FAST_ATTN = fast_attn
+    cfg = cfg_override or configs.get(arch)
+    shape = shapes_lib.SHAPES[shape_name]
+    if moe_local and cfg.n_experts:
+        moe_mod.set_local_moe((mesh, mesh_lib.dp_axes(mesh), "model",
+                               "data"))
+        # local-TP MoE wants F-sharded expert weights (see moe.py)
+        cfg = dataclasses.replace(cfg, shard_experts=False)
+    else:
+        moe_mod.set_local_moe(None)
+    ok, why = shapes_lib.cell_supported(cfg, shape)
+    if not ok:
+        return None
+    model = api.build(cfg)
+    dp0 = mesh_lib.dp_axes(mesh)
+    dp0_size = 1
+    for a in dp0:
+        dp0_size *= mesh_lib.axis_size(mesh, a)
+    if _div(shape.global_batch, dp0_size):
+        lm.set_activation_spec(P(dp0, None, None))
+    else:
+        lm.set_activation_spec(None)
+    pspecs = shard_rules.param_specs(
+        model.init_params and shapes_lib.abstract_params(model),
+        shard_experts=cfg.shard_experts, mesh=mesh)
+    pshard = jax.tree.map(lambda s: _ns(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        policy = opt_policy or ("bf16_mv" if cfg.name == "arctic-480b"
+                                else "fp32")
+        opt_cfg = adamw.AdamWConfig(state_policy=policy)
+        step = api.make_train_step(model, opt_cfg, remat=remat,
+                                   n_micro=n_micro,
+                                   bf16_weight_gather=bf16_weight_gather)
+        a_state = jax.eval_shape(
+            partial(api.init_train_state, model, opt_cfg=opt_cfg),
+            jax.random.PRNGKey(0))
+        s_shard = api.TrainState(
+            params=pshard,
+            opt=adamw.OptState(m=pshard, v=pshard,
+                               step=_ns(mesh, P())),
+            step=_ns(mesh, P()))
+        b_shard = batch_shardings(cfg, shape, mesh)
+        a_batch = shapes_lib.batch_specs(cfg, shape)
+
+        def lower():
+            jf = jax.jit(step, in_shardings=(s_shard, b_shard),
+                         out_shardings=(s_shard, None),
+                         donate_argnums=(0,))
+            return jf.lower(a_state, a_batch)
+        return Cell(arch, shape_name, cfg, "train", lower)
+
+    if shape.kind == "prefill":
+        step = api.make_prefill_step(model)
+        a_params = shapes_lib.abstract_params(model)
+        b_shard = batch_shardings(cfg, shape, mesh)
+        a_batch = shapes_lib.batch_specs(cfg, shape)
+        dp = mesh_lib.dp_axes(mesh)
+        dp_size = 1
+        for a in dp:
+            dp_size *= mesh_lib.axis_size(mesh, a)
+        ospec = [dp if _div(shape.global_batch, dp_size) else None, None]
+        model_sz = mesh_lib.axis_size(mesh, "model")
+        if _div(cfg.vocab_padded, model_sz):
+            ospec[1] = "model"
+        o_shard = _ns(mesh, P(*ospec))
+
+        def lower():
+            jf = jax.jit(step, in_shardings=(pshard, b_shard),
+                         out_shardings=o_shard)
+            return jf.lower(a_params, a_batch)
+        return Cell(arch, shape_name, cfg, "prefill", lower)
+
+    # decode
+    step = api.make_serve_step(model)
+    a_params = shapes_lib.abstract_params(model)
+    with mesh:   # enc-dec cache init traces encode() → needs mesh context
+        a_cache = shapes_lib.abstract_cache(model, cfg, shape)
+    cspecs = cache_specs(cfg, shape, mesh, a_cache, cache_shard)
+    cshard = jax.tree.map(lambda s: _ns(mesh, s), cspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    dp = mesh_lib.dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh_lib.axis_size(mesh, a)
+    tok_spec = P(dp) if _div(shape.global_batch, dp_size) else P()
+    tok_shard = _ns(mesh, tok_spec)
+    a_tok = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    a_pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def lower():
+        jf = jax.jit(step,
+                     in_shardings=(pshard, cshard, tok_shard, None),
+                     out_shardings=(tok_shard, cshard),
+                     donate_argnums=(1,))     # cache is updated in place
+        return jf.lower(a_params, a_cache, a_tok, a_pos)
+    return Cell(arch, shape_name, cfg, "decode", lower)

@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ These MUST be the first two lines — before ANY other import — since
+# jax locks the device count on first init.  The 512 placeholder host
+# devices exist only in this process; tests and benches see 1 device.
+#
+# Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+# Usage:
+#   python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+#   python -m repro.launch.dryrun --all --mesh single --out runs/dryrun.jsonl
+
+import argparse  # noqa: E402
+import json
+import sys
+import time
+import traceback
+
+import jax  # noqa: E402  (after XLA_FLAGS on purpose)
+import numpy as np  # noqa: E402
+
+from .. import configs  # noqa: E402
+from . import cells, mesh as mesh_lib, roofline, shapes as shapes_lib  # noqa: E402
+
+
+def _cost_probe(arch, shape_name, mesh, remat, k, n_micro=1, **cellkw):
+    """Compile a k-super-block reduced-depth variant with inner scans
+    unrolled; returns its (flops, hbm_bytes, coll_bytes, coll_detail)."""
+    from ..models import layers as layers_mod
+    cfg = cells.reduced_depth_cfg(configs.get(arch), k)
+    cell = cells.build_cell(arch, shape_name, mesh, remat=remat,
+                            cfg_override=cfg, n_micro=n_micro, **cellkw)
+    layers_mod.UNROLL_INNER_SCANS = True
+    try:
+        with mesh:
+            compiled = cell.lower_fn().compile()
+    finally:
+        layers_mod.UNROLL_INNER_SCANS = False
+    rl = roofline.analyze(compiled)
+    return rl
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             remat: str = "full", verbose: bool = True,
+             extrapolate: bool = True, n_micro: int = 1, **cellkw) -> dict:
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rec: dict = {"arch": arch, "shape": shape_name,
+                 "mesh": "multi" if multi_pod else "single", "chips": chips,
+                 "n_micro": n_micro, **{k: v for k, v in cellkw.items() if v}}
+    cell = cells.build_cell(arch, shape_name, mesh, remat=remat,
+                            n_micro=n_micro, **cellkw)
+    if cell is None:
+        rec["status"] = "skipped"
+        rec["why"] = shapes_lib.cell_supported(
+            configs.get(arch), shapes_lib.SHAPES[shape_name])[1]
+        return rec
+    t0 = time.time()
+    try:
+        with mesh:
+            lowered = cell.lower_fn()
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            rl = roofline.analyze(compiled)
+        shape = shapes_lib.SHAPES[shape_name]
+        cfg = cell.cfg
+        flops, hbm, coll = rl.flops, rl.hbm_bytes, rl.coll_bytes
+        if extrapolate:
+            # XLA cost analysis counts while-loop bodies once; recover
+            # true totals from the depth-1/depth-2 reduced compiles:
+            #   metric(k supers) = a + b·k  →  full = a + b·(L/|pat|)
+            m1 = _cost_probe(arch, shape_name, mesh, remat, 1,
+                             n_micro=n_micro, **cellkw)
+            m2 = _cost_probe(arch, shape_name, mesh, remat, 2,
+                             n_micro=n_micro, **cellkw)
+            n_eff = cfg.n_layers / len(cfg.pattern)
+
+            def extr(f1, f2, measured):
+                # the single full-depth compile counts loop bodies once,
+                # so it is a LOWER bound — never report below it
+                return max((2 * f1 - f2) + (f2 - f1) * n_eff, measured, 0.0)
+
+            flops = extr(m1.flops, m2.flops, rl.flops)
+            hbm = extr(m1.hbm_bytes, m2.hbm_bytes, rl.hbm_bytes)
+            coll = extr(m1.coll_bytes, m2.coll_bytes, rl.coll_bytes)
+        tc = flops / roofline.PEAK_FLOPS
+        tm = hbm / roofline.HBM_BW
+        tl = coll / roofline.LINK_BW
+        bottleneck = max([("compute", tc), ("memory", tm),
+                          ("collective", tl)], key=lambda kv: kv[1])[0]
+        mf = roofline.model_flops(cfg, shape, chips)
+        if cell.kind == "decode":
+            # decode roofline is HBM-bound: floor = (bf16 weights + KV/SSM
+            # cache) read once per token, spread over the mesh
+            from ..models import api as api_mod
+            model_ = api_mod.build(cfg)
+            with mesh_lib.make_production_mesh(multi_pod=multi_pod):
+                a_cache = shapes_lib.abstract_cache(model_, cfg, shape)
+            cache_bytes = sum(
+                int(np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree.leaves(a_cache))
+            floor = (2.0 * cfg.n_params() + cache_bytes) / chips
+            rec["decode_mem_floor_bytes"] = floor
+            rec["decode_mem_fraction"] = round(floor / max(hbm, 1.0), 4)
+        rec.update(
+            status="ok", kind=cell.kind,
+            t_lower_s=round(t_lower, 1), t_compile_s=round(t_compile, 1),
+            flops_per_chip=flops, hbm_bytes_per_chip=hbm,
+            coll_bytes_per_chip=coll,
+            coll_detail={k: v for k, v in rl.coll_detail.items() if v},
+            t_compute_s=tc, t_memory_s=tm, t_collective_s=tl,
+            bottleneck=bottleneck,
+            peak_memory_bytes=rl.peak_memory,
+            model_flops_per_chip=mf,
+            useful_flop_ratio=round(mf / max(flops, 1.0), 4),
+            roofline_fraction=round(mf / roofline.PEAK_FLOPS
+                                    / max(tc, tm, tl, 1e-12), 4),
+            fits_hbm=bool(rl.peak_memory <= 16e9),
+        )
+        if verbose:
+            print(f"--- {arch} × {shape_name} × {rec['mesh']} ---")
+            print(compiled.memory_analysis())
+            print({k: rec[k] for k in ("flops_per_chip",
+                                       "hbm_bytes_per_chip",
+                                       "coll_bytes_per_chip", "bottleneck",
+                                       "roofline_fraction")})
+    except Exception as e:  # noqa: BLE001 — report, don't crash the sweep
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"[:500]
+        rec["trace"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(shapes_lib.SHAPES) + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--bf16-gather", action="store_true")
+    ap.add_argument("--fast-attn", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = configs.ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(shapes_lib.SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    out_f = open(args.out, "a") if args.out else None
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, remat=args.remat,
+                               verbose=not args.quiet, n_micro=args.micro,
+                               bf16_weight_gather=args.bf16_gather,
+                               fast_attn=args.fast_attn)
+                line = json.dumps(rec)
+                print(line if args.quiet else
+                      f"[{rec['status']}] {arch} {shape} {rec['mesh']}")
+                if out_f:
+                    out_f.write(line + "\n")
+                    out_f.flush()
+                if rec["status"] == "fail":
+                    n_fail += 1
+                    print(rec["error"], file=sys.stderr)
+    if out_f:
+        out_f.close()
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,77 @@
+"""§Perf hillclimb driver: A/B variants of one dry-run cell.
+
+Each named variant is a (hypothesis → change) pair from EXPERIMENTS.md
+§Perf; the driver lowers+compiles each and records the three roofline
+terms so before/after deltas are measured, not guessed.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb \
+      --arch qwen15_4b --shape train_4k --mesh single \
+      --variants baseline,micro4,micro4+fast,micro4+fast+bf16g
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+
+from . import dryrun  # noqa: E402
+
+VARIANTS = {
+    "baseline": {},
+    "micro2": dict(n_micro=2),
+    "micro4": dict(n_micro=4),
+    "micro8": dict(n_micro=8),
+    "fast": dict(fast_attn=True),
+    "bf16g": dict(bf16_weight_gather=True),
+    "dots": dict(remat="dots"),
+    "noremat": dict(remat="none"),
+    "moelocal": dict(moe_local=True),
+    "cachehd": dict(cache_shard="hd"),
+}
+
+
+def variant_kwargs(spec: str) -> dict:
+    kw: dict = {}
+    for part in spec.split("+"):
+        if part not in VARIANTS:
+            raise KeyError(f"unknown variant {part!r}")
+        kw.update(VARIANTS[part])
+    return kw
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--out", default="runs/perf_log.jsonl")
+    args = ap.parse_args(argv)
+
+    rows = []
+    with open(args.out, "a") as f:
+        for spec in args.variants.split(","):
+            kw = variant_kwargs(spec)
+            rec = dryrun.run_cell(args.arch, args.shape,
+                                  args.mesh == "multi", verbose=False, **kw)
+            rec["variant"] = spec
+            f.write(json.dumps(rec) + "\n")
+            f.flush()
+            rows.append(rec)
+            if rec["status"] == "ok":
+                print(f"{spec:>22}: t_comp={rec['t_compute_s']:.3f}s "
+                      f"t_mem={rec['t_memory_s']:.3f}s "
+                      f"t_coll={rec['t_collective_s']:.3f}s "
+                      f"bound={rec['bottleneck']} "
+                      f"roofline={rec['roofline_fraction']:.4f} "
+                      f"peakHBM={rec['peak_memory_bytes'] / 1e9:.1f}G "
+                      f"fits={rec['fits_hbm']}")
+            else:
+                print(f"{spec:>22}: {rec['status']} "
+                      f"{rec.get('error', '')[:120]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

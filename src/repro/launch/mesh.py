@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Single pod: 16×16 = 256 v5e chips, axes (data, model).
+Multi-pod:  2×16×16 = 512 chips, axes (pod, data, model) — ``pod`` is
+pure data parallelism over the (slow) inter-pod links; ``data`` carries
+batch + FSDP; ``model`` carries tensor/expert parallelism over fast ICI.
+
+Functions, not module constants: importing this module never touches
+jax device state (required by the dry-run bootstrap ordering).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    """Small test mesh over however many (host) devices exist."""
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return Mesh(devs, axes)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The pure-data-parallel axes (pod folds into DP)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)

@@ -1,0 +1,68 @@
+"""The paper's partitioning + spatial join as a distributed ETL job.
+
+  PYTHONPATH=src python -m repro.launch.partition_etl \
+      --dataset osm --n 20000 --method bos --payload 500
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from ..core import metrics
+from ..core.partition import api as papi, partition_counts
+from ..data import spatial_gen
+from ..query import engine, parallel_partition
+from . import mesh as mesh_lib
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="osm", choices=["osm", "pi"])
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--method", default="bos", choices=list(papi.methods()))
+    ap.add_argument("--payload", type=int, default=500)
+    ap.add_argument("--parallel", action="store_true",
+                    help="use the MapReduce-style distributed partitioner")
+    ap.add_argument("--join", action="store_true", help="run a self-join")
+    args = ap.parse_args(argv)
+
+    n_dev = jax.device_count()
+    mesh = Mesh(np.array(jax.devices()).reshape(n_dev), ("d",))
+    key = jax.random.PRNGKey(0)
+    mbrs = spatial_gen.dataset(args.dataset, key, args.n)
+
+    t0 = time.time()
+    if args.parallel:
+        parts, stats = parallel_partition.parallel_partition(
+            key, mbrs, args.payload, mesh, "d")
+        print(f"parallel partition stats: {stats}")
+    else:
+        parts = papi.partition(args.method, mbrs, args.payload)
+    jax.block_until_ready(parts.boxes)
+    t_part = time.time() - t0
+
+    counts, copies = partition_counts(mbrs, parts)
+    print(f"method={args.method} n={args.n} payload={args.payload} "
+          f"k={int(parts.k())} time={t_part * 1e3:.1f}ms")
+    print(f"  λ(boundary ratio) = {float(metrics.boundary_ratio(counts, parts.valid, args.n)):.4f}")
+    print(f"  balance stddev    = {float(metrics.balance_stddev(counts, parts.valid)):.2f}")
+    print(f"  skew (max/mean)   = {float(metrics.skew_ratio(counts, parts.valid)):.2f}")
+    print(f"  coverage          = {float(metrics.coverage(copies)):.4f}")
+
+    if args.join:
+        s = spatial_gen.dataset(args.dataset, jax.random.PRNGKey(7), args.n)
+        t0 = time.time()
+        plan = engine.plan_join(args.method, mbrs, s, args.payload, n_dev)
+        cnt = engine.spatial_join_count(plan, mesh, "d")
+        dt = time.time() - t0
+        print(f"  join: |R⋈S| = {cnt}  ({dt:.2f}s incl. planning; "
+              f"tile skew {plan.stats['skew']:.2f})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

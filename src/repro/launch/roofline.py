@@ -1,0 +1,145 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all per-chip (the compiled SPMD
+module is the per-device program, so its FLOPs/bytes/operand sizes are
+already shard-local):
+
+  compute    = HLO_FLOPs        / peak_FLOPs            [197e12 bf16]
+  memory     = HLO_bytes        / HBM_bw                [819e9 B/s]
+  collective = Σ link_bytes(op) / link_bw               [50e9 B/s]
+
+link_bytes applies the ring cost model per op: all-reduce moves ~2×
+its operand per link; all-gather / reduce-scatter / all-to-all /
+collective-permute move ~1× their (shard) operand.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16
+HBM_BW = 819e9               # B/s
+LINK_BW = 50e9               # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# Per-chip link bytes under a ring algorithm, in terms of the op's
+# RESULT size R and group size g (compiled HLO prints result types only;
+# operands are bare SSA refs):
+#   all-reduce:         operand==result==R; ring moves 2R(g−1)/g ≈ 2R
+#   all-gather:         result R = g·operand; ring moves R(g−1)/g ≈ R
+#   reduce-scatter:     result R = operand/g; ring moves R(g−1)
+#   all-to-all:         moves R(g−1)/g ≈ R
+#   collective-permute: moves R
+_COLL_RESULT_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / max(g, 1),
+    "all-gather": lambda g: 1.0 * (g - 1) / max(g, 1),
+    "reduce-scatter": lambda g: float(g - 1),
+    "all-to-all": lambda g: 1.0 * (g - 1) / max(g, 1),
+    "collective-permute": lambda g: 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_LINE_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+(all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _type_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str, default_group: int = 16) -> dict:
+    """Per-op-kind per-chip link bytes (ring model) from compiled HLO."""
+    out: dict[str, float] = {k: 0.0 for k in _COLL_RESULT_FACTOR}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if not m:
+            continue
+        result_type, kind = m.group(1), m.group(2)
+        r = _type_bytes(result_type)
+        gm = _GROUPS_RE.search(line)
+        g = int(gm.group(2)) if gm else default_group
+        out[kind] += r * _COLL_RESULT_FACTOR[kind](g)
+        counts[kind] = counts.get(kind, 0) + 1
+    out["total"] = sum(out.values())
+    out["ops"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                # per-chip HLO flops
+    hbm_bytes: float            # per-chip bytes accessed
+    coll_bytes: float           # per-chip link bytes (ring model)
+    coll_detail: dict
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    peak_memory: int            # per-chip bytes (from memory_analysis)
+
+    def dominant(self):
+        return max(("compute", self.t_compute),
+                   ("memory", self.t_memory),
+                   ("collective", self.t_collective), key=lambda kv: kv[1])
+
+
+def analyze(compiled) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    hbm = float(ca.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    tc = flops / PEAK_FLOPS
+    tm = hbm / HBM_BW
+    tl = coll["total"] / LINK_BW
+    ma = compiled.memory_analysis()
+    peak = 0
+    if ma is not None:
+        peak = int(getattr(ma, "argument_size_in_bytes", 0)
+                   + getattr(ma, "output_size_in_bytes", 0)
+                   + getattr(ma, "temp_size_in_bytes", 0)
+                   - getattr(ma, "alias_size_in_bytes", 0))
+    name = max([("compute", tc), ("memory", tm), ("collective", tl)],
+               key=lambda kv: kv[1])[0]
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll["total"],
+                    coll_detail=coll, t_compute=tc, t_memory=tm,
+                    t_collective=tl, bottleneck=name, peak_memory=peak)
+
+
+def model_flops(cfg, shape, chips: int) -> float:
+    """6·N_active·D per chip (dense: N_active = N)."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        factor = 2.0
+    return factor * n * tokens / chips
+
+
+def useful_ratio(cfg, shape, chips: int, rl: Roofline) -> float:
+    return model_flops(cfg, shape, chips) / max(rl.flops, 1.0)

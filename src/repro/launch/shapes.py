@@ -1,0 +1,75 @@
+"""Assigned input shapes and abstract input specs (no allocation).
+
+Four shapes per architecture:
+  train_4k     seq 4096,   global_batch 256  → train_step
+  prefill_32k  seq 32768,  global_batch 32   → prefill_step
+  decode_32k   seq 32768 (KV cache), gb 128  → serve_step
+  long_500k    seq 524288 (KV cache), gb 1   → serve_step (sub-quadratic
+               archs only; skips recorded in DESIGN.md §Arch-applicability)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..models import lm
+from ..models.api import Model
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str              # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k policy: sub-quadratic attention only (see DESIGN.md)
+LONG_OK = {"gemma2-27b", "mixtral-8x22b", "recurrentgemma-9b", "mamba2-1.3b"}
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.name not in LONG_OK:
+        return False, "pure full-attention arch: long_500k skipped"
+    return True, ""
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract ShapeDtypeStructs for the (train/prefill) batch."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.family == "vlm":
+        specs["img"] = jax.ShapeDtypeStruct(
+            (b, cfg.vis_tokens, cfg.vis_dim), jnp.bfloat16)
+    if cfg.family == "encdec":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.src_len, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def abstract_params(model: Model, key=None):
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(model.init_params, key)
+
+
+def abstract_cache(model: Model, cfg: ModelConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        from ..models import encdec
+        params = abstract_params(model)
+        frames = jax.ShapeDtypeStruct((b, cfg.src_len, cfg.d_model),
+                                      jnp.bfloat16)
+        return jax.eval_shape(
+            partial(encdec.init_cache, cfg=cfg, max_len=s), params, frames)
+    return jax.eval_shape(partial(lm.init_cache, cfg, b, s))

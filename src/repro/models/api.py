@@ -1,0 +1,144 @@
+"""Model factory: one entry point for every assigned architecture.
+
+``build(cfg)`` returns a ``Model`` with init/loss/decode functions;
+``make_train_step`` / ``make_prefill_step`` / ``make_serve_step`` build
+the jittable step functions the launcher lowers for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .config import ModelConfig
+from ..optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable
+    loss_fn: Callable                 # (params, batch) -> (loss, aux)
+    init_cache: Callable
+    decode_step: Callable             # (params, cache, token, pos) -> ...
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init_params=lambda key: encdec.init_params(key, cfg),
+            loss_fn=lambda p, b, remat="full": encdec.loss_fn(p, b, cfg, remat),
+            init_cache=None,
+            decode_step=lambda p, c, t, pos: encdec.decode_step(p, c, t, pos, cfg),
+        )
+    return Model(
+        cfg=cfg,
+        init_params=lambda key: lm.init_params(key, cfg),
+        loss_fn=lambda p, b, remat="full": lm.loss_fn(p, b, cfg, remat),
+        init_cache=lambda batch, max_len: lm.init_cache(cfg, batch, max_len),
+        decode_step=lambda p, c, t, pos: lm.decode_step(p, c, t, pos, cfg),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: adamw.OptState
+    step: jax.Array
+
+
+def init_train_state(model: Model, key, opt_cfg: adamw.AdamWConfig):
+    params = model.init_params(key)
+    return TrainState(params=params, opt=adamw.init_state(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    remat: str = "full", n_micro: int = 1,
+                    bf16_weight_gather: bool = False):
+    """Jittable train step.
+
+    ``n_micro`` > 1 accumulates gradients over sequential microbatches
+    (scan), dividing peak activation/logit memory by ``n_micro`` at the
+    cost of one fp32 gradient buffer — the standard HBM-fitting lever
+    for the big train cells (see EXPERIMENTS.md §Perf).
+
+    ``bf16_weight_gather`` casts fp32 master weights to bf16 *before*
+    the per-layer FSDP all-gather (GSPMD pushes the elementwise cast
+    below the gather), halving weight-gather + grad-reduce link bytes.
+    """
+    def _cast(params):
+        if not bf16_weight_gather:
+            return params
+        return jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if (p.dtype == jnp.float32 and p.ndim >= 2) else p, params)
+
+    def loss_fn(params, mb, remat_):
+        return model.loss_fn(_cast(params), mb, remat_)
+
+    def step(state: TrainState, batch):
+        if n_micro == 1:
+            (loss, aux), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch, remat)
+        else:
+            from ..models import layers as _layers
+            mbs = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def acc(gsum_loss, mb):
+                gsum, lsum = gsum_loss
+                (l, _), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(state.params, mb, remat)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            init = (jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params),
+                jnp.zeros((), jnp.float32))
+            (gsum, lsum), _ = jax.lax.scan(
+                acc, init, mbs,
+                unroll=n_micro if _layers.UNROLL_INNER_SCANS else 1)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss, aux = lsum / n_micro, {}
+        new_params, new_opt, om = adamw.update(grads, state.opt,
+                                               state.params, opt_cfg)
+        metrics = {"loss": loss, **om}
+        for k, v in aux.items():
+            if "skew" in k or "drop" in k:
+                metrics[k] = v
+        return TrainState(params=new_params, opt=new_opt,
+                          step=state.step + 1), metrics
+    return step
+
+
+def make_prefill_step(model: Model):
+    """Inference prefill: no-grad forward, last-position logits."""
+    cfg = model.cfg
+
+    def step(params, batch):
+        if cfg.family == "encdec":
+            logits, _ = encdec.forward(params, batch["frames"],
+                                       batch["tokens"], cfg,
+                                       logits_mode="last")
+        else:
+            logits, _ = lm.forward(params, batch["tokens"], cfg,
+                                   img=batch.get("img"), remat="none",
+                                   logits_mode="last")
+        return logits[:, -1]
+    return step
+
+
+def make_serve_step(model: Model):
+    """One decode step (greedy): token + cache -> next token + cache."""
+    def step(params, cache, token, pos):
+        logits, new_cache = model.decode_step(params, cache, token, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+    return step

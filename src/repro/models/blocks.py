@@ -1,0 +1,225 @@
+"""Decoder block assembly: attention/MoE/SSM/RG-LRU kinds, stacked for
+scan-over-layers.
+
+A model is ``n_super`` repetitions of ``cfg.pattern`` (super-blocks) plus
+``rest`` remainder layers (patterns that don't divide n_layers, e.g.
+recurrentgemma's 38 = 12×(rec,rec,local) + (rec,rec)).  All stacked
+params carry a leading super-block axis so the forward pass is a single
+``lax.scan`` — O(1-layer) HLO regardless of depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers, moe, rglru, ssm
+
+ATTN_KINDS = ("full", "local", "global", "cross")
+
+
+def window_for(kind, cfg, max_len=None):
+    if kind == "local":
+        w = cfg.local_window
+    elif cfg.window is not None:
+        w = cfg.window
+    else:
+        return None
+    return w
+
+
+# ----------------------------- init ---------------------------------------
+
+def attn_init(key, cfg, n_stack):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": layers.dense_init(ks[0], (n_stack, d, h * hd), jnp.float32),
+        "wk": layers.dense_init(ks[1], (n_stack, d, kv * hd), jnp.float32),
+        "wv": layers.dense_init(ks[2], (n_stack, d, kv * hd), jnp.float32),
+        "wo": layers.dense_init(ks[3], (n_stack, h * hd, d), jnp.float32),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((n_stack, h * hd), jnp.float32)
+        p["bk"] = jnp.zeros((n_stack, kv * hd), jnp.float32)
+        p["bv"] = jnp.zeros((n_stack, kv * hd), jnp.float32)
+    return p
+
+
+def mlp_init(key, cfg, n_stack):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": layers.dense_init(ks[0], (n_stack, d, f), jnp.float32),
+        "w3": layers.dense_init(ks[1], (n_stack, d, f), jnp.float32),
+        "w2": layers.dense_init(ks[2], (n_stack, f, d), jnp.float32),
+    }
+
+
+def block_init(key, cfg, kind, n_stack):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    norm = lambda: jnp.zeros((n_stack, d), jnp.float32)  # noqa: E731
+    if kind == "ssm":
+        return {"norm1": norm(), "ssm": ssm.init_params(ks[0], cfg, n_stack)}
+    if kind == "rec":
+        return {"norm1": norm(), "rec": rglru.init_params(ks[0], cfg, n_stack),
+                "norm2": norm(), "mlp": mlp_init(ks[1], cfg, n_stack)}
+    p = {"norm1": norm(), "attn": attn_init(ks[0], cfg, n_stack),
+         "norm2": norm()}
+    if kind == "moe":
+        p["moe"] = moe.init_params(ks[1], cfg, n_stack)
+        if cfg.dense_residual:
+            p["mlp"] = mlp_init(ks[2], cfg, n_stack)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg, n_stack)
+    if cfg.post_norms:
+        p["norm1b"] = norm()
+        p["norm2b"] = norm()
+    return p
+
+
+# ---------------------------- forward -------------------------------------
+
+def _attn_apply(x, p, cfg, kind, positions):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = layers.rope(q.reshape(b, s, h, hd), positions, cfg.rope_theta)
+    k = layers.rope(k.reshape(b, s, kv, hd), positions, cfg.rope_theta)
+    v = v.reshape(b, s, kv, hd)
+    out = layers.chunked_attention(
+        q, k, v, causal=True, window=window_for(kind, cfg),
+        softcap=cfg.attn_softcap)
+    return out.reshape(b, s, h * hd) @ p["wo"].astype(x.dtype)
+
+
+def apply_block(x, p, cfg, kind, positions):
+    """One block, training form. x: (B, S, D)."""
+    eps = cfg.norm_eps
+    aux = {}
+    if kind == "ssm":
+        return x + ssm.forward(
+            layers.rms_norm(x, p["norm1"], eps), p["ssm"], cfg), aux
+    if kind == "rec":
+        x = x + rglru.forward(layers.rms_norm(x, p["norm1"], eps),
+                              p["rec"], cfg)
+        x = x + layers.gated_mlp(layers.rms_norm(x, p["norm2"], eps),
+                                 p["mlp"]["w1"].astype(x.dtype),
+                                 p["mlp"]["w3"].astype(x.dtype),
+                                 p["mlp"]["w2"].astype(x.dtype), cfg.act)
+        return x, aux
+
+    a = _attn_apply(layers.rms_norm(x, p["norm1"], eps), p["attn"], cfg,
+                    kind, positions)
+    if cfg.post_norms:
+        a = layers.rms_norm(a, p["norm1b"], eps)
+    x = x + a
+    hin = layers.rms_norm(x, p["norm2"], eps)
+    if kind == "moe":
+        m, aux = moe.moe_ffn(hin, p["moe"], cfg)
+        if cfg.dense_residual:
+            m = m + layers.gated_mlp(hin, p["mlp"]["w1"].astype(x.dtype),
+                                     p["mlp"]["w3"].astype(x.dtype),
+                                     p["mlp"]["w2"].astype(x.dtype), cfg.act)
+    else:
+        m = layers.gated_mlp(hin, p["mlp"]["w1"].astype(x.dtype),
+                             p["mlp"]["w3"].astype(x.dtype),
+                             p["mlp"]["w2"].astype(x.dtype), cfg.act)
+    if cfg.post_norms:
+        m = layers.rms_norm(m, p["norm2b"], eps)
+    return x + m, aux
+
+
+# ---------------------------- decode --------------------------------------
+
+def attn_cache_init(cfg, kind, batch, max_len, n_stack, dtype):
+    w = window_for(kind, cfg)
+    wlen = min(max_len, w) if w else max_len
+    kv, hd = cfg.n_kv, cfg.hd
+    return {
+        "k": jnp.zeros((n_stack, batch, wlen, kv, hd), dtype),
+        "v": jnp.zeros((n_stack, batch, wlen, kv, hd), dtype),
+    }
+
+
+def block_cache_init(cfg, kind, batch, max_len, n_stack, dtype):
+    if kind == "ssm":
+        c = ssm.init_cache(cfg, batch, dtype)
+    elif kind == "rec":
+        c = rglru.init_cache(cfg, batch, dtype)
+    else:
+        return attn_cache_init(cfg, kind, batch, max_len, n_stack, dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (n_stack,) + a.shape), c)
+
+
+def _attn_decode(x, p, cache, cfg, kind, pos):
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    posv = jnp.full((b, 1), pos)
+    q = layers.rope(q.reshape(b, 1, h, hd), posv, cfg.rope_theta)
+    k = layers.rope(k.reshape(b, 1, kv, hd), posv, cfg.rope_theta)
+    v = v.reshape(b, 1, kv, hd)
+    wlen = cache["k"].shape[1]
+    slot = pos % wlen
+    # masked elementwise write instead of dynamic_update_slice: a DUS at
+    # a traced offset on a length-sharded cache forces GSPMD into full
+    # rematerialisation (cache all-gather per layer); the where() form
+    # shards cleanly (§Perf decode iteration)
+    hit = (jnp.arange(wlen) == slot)[None, :, None, None]
+    kc = jnp.where(hit, k.astype(cache["k"].dtype), cache["k"])
+    vc = jnp.where(hit, v.astype(cache["v"].dtype), cache["v"])
+    out = layers.decode_attention(q, kc, vc, pos + 1,
+                                  softcap=cfg.attn_softcap)
+    y = out.reshape(b, 1, h * hd) @ p["wo"].astype(x.dtype)
+    return y, {"k": kc, "v": vc}
+
+
+def decode_block(x, p, cache, cfg, kind, pos):
+    eps = cfg.norm_eps
+    if kind == "ssm":
+        y, nc = ssm.decode_step(layers.rms_norm(x, p["norm1"], eps),
+                                cache, p["ssm"], cfg)
+        return x + y, nc
+    if kind == "rec":
+        y, nc = rglru.decode_step(layers.rms_norm(x, p["norm1"], eps),
+                                  cache, p["rec"], cfg)
+        x = x + y
+        x = x + layers.gated_mlp(layers.rms_norm(x, p["norm2"], eps),
+                                 p["mlp"]["w1"].astype(x.dtype),
+                                 p["mlp"]["w3"].astype(x.dtype),
+                                 p["mlp"]["w2"].astype(x.dtype), cfg.act)
+        return x, nc
+
+    a, nc = _attn_decode(layers.rms_norm(x, p["norm1"], eps), p["attn"],
+                         cache, cfg, kind, pos)
+    if cfg.post_norms:
+        a = layers.rms_norm(a, p["norm1b"], eps)
+    x = x + a
+    hin = layers.rms_norm(x, p["norm2"], eps)
+    if kind == "moe":
+        m, _ = moe.moe_ffn(hin, p["moe"], cfg)
+        if cfg.dense_residual:
+            m = m + layers.gated_mlp(hin, p["mlp"]["w1"].astype(x.dtype),
+                                     p["mlp"]["w3"].astype(x.dtype),
+                                     p["mlp"]["w2"].astype(x.dtype), cfg.act)
+    else:
+        m = layers.gated_mlp(hin, p["mlp"]["w1"].astype(x.dtype),
+                             p["mlp"]["w3"].astype(x.dtype),
+                             p["mlp"]["w2"].astype(x.dtype), cfg.act)
+    if cfg.post_norms:
+        m = layers.rms_norm(m, p["norm2b"], eps)
+    return x + m, nc

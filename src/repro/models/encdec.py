@@ -1,0 +1,194 @@
+"""Whisper-style encoder-decoder backbone.
+
+Per the assignment, the conv/mel frontend is a STUB: ``input_specs``
+feeds precomputed frame embeddings (B, src_len, d_model) straight into
+the encoder.  Encoder = bidirectional attention blocks; decoder = causal
+self-attention + cross-attention blocks.  Norm/MLP reuse the shared
+layers (RMSNorm + gated-GELU; Whisper's LayerNorm/plain-GELU deviation is
+noted in DESIGN.md — the backbone shapes/FLOPs are identical).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks, layers
+from .config import ModelConfig
+from .lm import constrain
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab_padded
+    ks = jax.random.split(key, 8)
+    enc = {
+        "norm1": jnp.zeros((cfg.enc_layers, d), jnp.float32),
+        "attn": blocks.attn_init(ks[0], cfg, cfg.enc_layers),
+        "norm2": jnp.zeros((cfg.enc_layers, d), jnp.float32),
+        "mlp": blocks.mlp_init(ks[1], cfg, cfg.enc_layers),
+    }
+    dec = {
+        "norm1": jnp.zeros((cfg.n_layers, d), jnp.float32),
+        "attn": blocks.attn_init(ks[2], cfg, cfg.n_layers),
+        "normx": jnp.zeros((cfg.n_layers, d), jnp.float32),
+        "xattn": blocks.attn_init(ks[3], cfg, cfg.n_layers),
+        "norm2": jnp.zeros((cfg.n_layers, d), jnp.float32),
+        "mlp": blocks.mlp_init(ks[4], cfg, cfg.n_layers),
+    }
+    return {
+        "embed": layers.dense_init(ks[5], (v, d), jnp.float32),
+        "enc": enc,
+        "dec": dec,
+        "enc_norm": jnp.zeros((d,), jnp.float32),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def _mha(x, kv_src, p, cfg, *, causal, positions, kv_positions):
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (kv_src @ p["wk"].astype(x.dtype)).reshape(b, kv_src.shape[1], kv, hd)
+    v = (kv_src @ p["wv"].astype(x.dtype)).reshape(b, kv_src.shape[1], kv, hd)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, kv_positions, cfg.rope_theta)
+    out = layers.chunked_attention(q, k, v, causal=causal)
+    return out.reshape(b, s, h * hd) @ p["wo"].astype(x.dtype)
+
+
+def encode(params, frames, cfg: ModelConfig):
+    x = frames.astype(jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def body(h, p):
+        hn = layers.rms_norm(h, p["norm1"], cfg.norm_eps)
+        h = h + _mha(hn, hn, p["attn"], cfg, causal=False, positions=pos,
+                     kv_positions=pos)
+        h = h + layers.gated_mlp(
+            layers.rms_norm(h, p["norm2"], cfg.norm_eps),
+            p["mlp"]["w1"].astype(h.dtype), p["mlp"]["w3"].astype(h.dtype),
+            p["mlp"]["w2"].astype(h.dtype), cfg.act)
+        return constrain(h), None
+
+    x, _ = lax.scan(jax.checkpoint(body), x, params["enc"],
+                    unroll=cfg.enc_layers
+                    if layers.UNROLL_INNER_SCANS else 1)
+    return layers.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _logits_of(x, params, cfg):
+    logits = (x @ params["embed"].astype(x.dtype).T).astype(jnp.float32)
+    if cfg.vocab_padded != cfg.vocab:
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab, logits, -1e9)
+    return logits
+
+
+def forward(params, frames, tokens, cfg: ModelConfig,
+            logits_mode: str = "all"):
+    """Teacher-forcing enc-dec forward -> (logits, aux)."""
+    enc_out = encode(params, frames, cfg)
+    x = params["embed"].astype(enc_out.dtype)[tokens]
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    src = enc_out.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(src)[None], (b, src))
+
+    def body(h, p):
+        hn = layers.rms_norm(h, p["norm1"], cfg.norm_eps)
+        h = h + _mha(hn, hn, p["attn"], cfg, causal=True, positions=pos,
+                     kv_positions=pos)
+        hx = layers.rms_norm(h, p["normx"], cfg.norm_eps)
+        h = h + _mha(hx, enc_out, p["xattn"], cfg, causal=False,
+                     positions=pos, kv_positions=kv_pos)
+        h = h + layers.gated_mlp(
+            layers.rms_norm(h, p["norm2"], cfg.norm_eps),
+            p["mlp"]["w1"].astype(h.dtype), p["mlp"]["w3"].astype(h.dtype),
+            p["mlp"]["w2"].astype(h.dtype), cfg.act)
+        return constrain(h), None
+
+    x, _ = lax.scan(jax.checkpoint(body), x, params["dec"],
+                    unroll=cfg.n_layers
+                    if layers.UNROLL_INNER_SCANS else 1)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    return _logits_of(x, params, cfg), {}
+
+
+def loss_fn(params, batch, cfg: ModelConfig, remat: str = "full"):
+    logits, aux = forward(params, batch["frames"], batch["tokens"], cfg)
+    tgt = batch["tokens"][:, 1:]
+    txt = logits[:, :-1]
+    lse = jax.scipy.special.logsumexp(txt, axis=-1)
+    true = jnp.take_along_axis(txt, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - true) + 1e-4 * jnp.mean(lse ** 2), aux
+
+
+# ------------------------------ decode ------------------------------------
+
+def init_cache(params, frames, cfg: ModelConfig, max_len: int):
+    """Prefill the cross-attention K/V from the encoder, allocate the
+    decoder self-attention cache."""
+    enc_out = encode(params, frames, cfg)
+    b, src, _ = enc_out.shape
+    kv, hd = cfg.n_kv, cfg.hd
+    kv_pos = jnp.broadcast_to(jnp.arange(src)[None], (b, src))
+
+    def per_layer(p):
+        k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, src, kv, hd)
+        k = layers.rope(k, kv_pos, cfg.rope_theta)
+        v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, src, kv, hd)
+        return {"k": k, "v": v}
+
+    cross = jax.vmap(per_layer)(params["dec"]["xattn"])
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    self_c = {
+        "k": jnp.zeros((cfg.n_layers, b, max_len, kv, hd), dt),
+        "v": jnp.zeros((cfg.n_layers, b, max_len, kv, hd), dt),
+    }
+    return {"self": self_c, "cross": cross}
+
+
+def decode_step(params, cache, token, pos, cfg: ModelConfig):
+    x = params["embed"][token[:, None]].astype(
+        jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+
+    def body(hcur, inp):
+        p, selfc, crossc = inp
+        hn = layers.rms_norm(hcur, p["norm1"], cfg.norm_eps)
+        q = (hn @ p["attn"]["wq"].astype(hn.dtype)).reshape(b, 1, h, hd)
+        k = (hn @ p["attn"]["wk"].astype(hn.dtype)).reshape(b, 1, kv, hd)
+        v = (hn @ p["attn"]["wv"].astype(hn.dtype)).reshape(b, 1, kv, hd)
+        posv = jnp.full((b, 1), pos)
+        q = layers.rope(q, posv, cfg.rope_theta)
+        k = layers.rope(k, posv, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(
+            selfc["k"], k.astype(selfc["k"].dtype), (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            selfc["v"], v.astype(selfc["v"].dtype), (0, pos, 0, 0))
+        a = layers.decode_attention(q, kc, vc, pos + 1)
+        hcur = hcur + a.reshape(b, 1, h * hd) @ p["attn"]["wo"].astype(hn.dtype)
+        hx = layers.rms_norm(hcur, p["normx"], cfg.norm_eps)
+        qx = (hx @ p["xattn"]["wq"].astype(hx.dtype)).reshape(b, 1, h, hd)
+        qx = layers.rope(qx, posv, cfg.rope_theta)
+        ax = layers.decode_attention(qx, crossc["k"], crossc["v"],
+                                     crossc["k"].shape[1])
+        hcur = hcur + ax.reshape(b, 1, h * hd) @ p["xattn"]["wo"].astype(hx.dtype)
+        hcur = hcur + layers.gated_mlp(
+            layers.rms_norm(hcur, p["norm2"], cfg.norm_eps),
+            p["mlp"]["w1"].astype(hcur.dtype), p["mlp"]["w3"].astype(hcur.dtype),
+            p["mlp"]["w2"].astype(hcur.dtype), cfg.act)
+        return hcur, {"k": kc, "v": vc}
+
+    x, new_self = lax.scan(body, x, (params["dec"], cache["self"],
+                                     cache["cross"]),
+                           unroll=cfg.n_layers
+                           if layers.UNROLL_INNER_SCANS else 1)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits_of(x[:, 0], params, cfg)
+    return logits, {"self": new_self, "cross": cache["cross"]}

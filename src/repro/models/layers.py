@@ -1,0 +1,154 @@
+"""Shared neural layers: norms, RoPE, attention (train + decode), MLP.
+
+Training attention is *KV-chunked online-softmax* (flash-attention
+pattern in pure JAX): a ``lax.scan`` over KV chunks carrying running
+(max, denom, acc), bounding activation memory at O(S·C) per head instead
+of O(S²) while keeping the HLO small for scan-over-layers compilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_INIT = jax.nn.initializers.normal(stddev=0.02)
+
+# Roofline-accounting mode: XLA's cost analysis counts while-loop bodies
+# once, so the dry-run's reduced-depth cost cells unroll the inner
+# (KV-chunk) scans to make every FLOP visible in the HLO.
+UNROLL_INNER_SCANS = False
+
+# §Perf iteration: bf16 score/probability tensors in attention (fp32
+# running max/denominator, MXU-native bf16 matmuls) — halves the
+# dominant score-traffic term. Toggled by the launcher for A/B runs.
+FAST_ATTN = False
+
+
+def dense_init(key, shape, dtype):
+    return _INIT(key, shape, dtype)
+
+
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: (..., S, H, hd), positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # ang: (..., S, 1, half), broadcast over the head axis
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:2 * half]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    rest = x[..., 2 * half:]
+    return jnp.concatenate([out1.astype(x.dtype), out2.astype(x.dtype), rest],
+                           axis=-1)
+
+
+def _softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                      chunk=512, q_offset=0):
+    """Online-softmax attention.
+
+    q: (B, Sq, H, hd), k/v: (B, Sk, KV, hd) with H % KV == 0.
+    ``window``: sliding-window size (None = full causal).
+    ``q_offset``: absolute position of q[0] relative to k[0].
+    Returns (B, Sq, H, hd) in q.dtype.
+    """
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    rep = h // kv
+    scale = hd ** -0.5
+    score_dt = jnp.bfloat16 if FAST_ATTN else jnp.float32
+    qf = (q.astype(score_dt) * jnp.asarray(scale, score_dt)
+          ).reshape(b, sq, kv, rep, hd)
+    nchunks = -(-sk // chunk)
+    pad = nchunks * chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = jnp.moveaxis(kp.reshape(b, nchunks, chunk, kv, hd), 1, 0)
+    vc = jnp.moveaxis(vp.reshape(b, nchunks, chunk, kv, hd), 1, 0)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        m, l, acc, cidx = carry
+        k_blk, v_blk = inp
+        s = jnp.einsum("bqgrh,bcgh->bqgrc", qf, k_blk.astype(score_dt),
+                       preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = _softcap(s, softcap)
+        k_pos = cidx * chunk + jnp.arange(chunk)
+        valid = k_pos[None, :] < sk
+        if causal:
+            valid = valid & (q_pos[:, None] >= k_pos[None, :])
+        if window is not None:
+            valid = valid & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(valid[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqgrc,bcgh->bqgrh", p.astype(score_dt),
+            v_blk.astype(score_dt), preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new, cidx + 1), None
+
+    m0 = jnp.full((b, sq, kv, rep), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, kv, rep), jnp.float32)
+    a0 = jnp.zeros((b, sq, kv, rep, hd), jnp.float32)
+    (m, l, acc, _), _ = lax.scan(step, (m0, l0, a0, 0), (kc, vc),
+                                 unroll=nchunks if UNROLL_INNER_SCANS
+                                 else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window=None,
+                     softcap=None):
+    """Single-token attention against a (possibly ring-buffered) cache.
+
+    q: (B, 1, H, hd); k/v_cache: (B, W, KV, hd); ``length`` = number of
+    tokens written so far (ring wraps when length > W).  When the KV
+    cache is sequence-sharded under pjit, the max/sum reductions lower
+    to small all-reduces — distributed flash-decode for free.
+    """
+    b, w, kv, hd = k_cache.shape
+    h = q.shape[2]
+    rep = h // kv
+    scale = hd ** -0.5
+    # read the bf16 cache directly with fp32 accumulation — an explicit
+    # fp32 cast would materialise a 2× copy of the (dominant) cache
+    # traffic (§Perf decode iteration 1)
+    qf = (q.astype(k_cache.dtype) * jnp.asarray(scale, k_cache.dtype)
+          ).reshape(b, kv, rep, hd)
+    s = jnp.einsum("bgrh,bwgh->bgrw", qf, k_cache,
+                   preferred_element_type=jnp.float32)
+    if softcap is not None:
+        s = _softcap(s, softcap)
+    idx = jnp.arange(w)
+    valid = idx[None, :] < jnp.minimum(length, w)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrw,bwgh->bgrh", p.astype(k_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": partial(jax.nn.gelu, approximate=True)}[name]
+
+
+def gated_mlp(x, w1, w3, w2, act="silu"):
+    h = act_fn(act)(x @ w1) * (x @ w3)
+    return h @ w2

@@ -1,0 +1,223 @@
+"""Decoder-only LM assembly (dense / moe / ssm / hybrid / vlm families).
+
+Params are nested dicts; every per-layer leaf is stacked over the
+super-block axis and consumed by one ``lax.scan`` (plus unstacked
+``rest`` remainder layers).  Works under ``jax.eval_shape`` for the
+abstract dry-run path (no device allocation for 480B-param configs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks, layers
+from .config import ModelConfig
+
+
+def structure(cfg: ModelConfig):
+    pat = cfg.pattern
+    n_super = cfg.n_layers // len(pat)
+    rest = cfg.n_layers - n_super * len(pat)
+    return pat, n_super, rest
+
+
+# Residual-stream sharding constraint (set by the launcher under a mesh
+# context; None for single-device tests).  Pinning the layer-boundary
+# activations to (batch→dp, seq→None, d→None) stops GSPMD from trading
+# the batch sharding away for the FSDP weight sharding (see DESIGN.md).
+_ACT_SPEC = None
+
+
+def set_activation_spec(spec) -> None:
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def constrain(x):
+    if _ACT_SPEC is not None:
+        return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+    return x
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    pat, n_super, rest = structure(cfg)
+    ks = jax.random.split(key, 8 + len(pat) + rest)
+    d, v = cfg.d_model, cfg.vocab_padded
+    params: dict[str, Any] = {
+        "embed": layers.dense_init(ks[0], (v, d), jnp.float32),
+        "final_norm": jnp.zeros((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = layers.dense_init(ks[1], (v, d), jnp.float32)
+    params["blocks"] = {
+        f"p{i}": blocks.block_init(ks[2 + i], cfg, kind, n_super)
+        for i, kind in enumerate(pat)
+    }
+    if rest:
+        params["rest"] = {
+            f"r{i}": jax.tree.map(
+                lambda a: a[0],
+                blocks.block_init(ks[2 + len(pat) + i], cfg, pat[i], 1))
+            for i in range(rest)
+        }
+    if cfg.family == "vlm":
+        params["vis_proj"] = layers.dense_init(
+            ks[-1], (cfg.vis_dim, d), jnp.float32)
+    return params
+
+
+def _embed_in(params, tokens, cfg, img=None):
+    x = params["embed"].astype(_dt(cfg))[tokens]
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if img is not None:
+        vis = img.astype(x.dtype) @ params["vis_proj"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    return x
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _logits_of(x, params, cfg):
+    w_out = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ w_out.astype(x.dtype).T).astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    if cfg.vocab_padded != cfg.vocab:   # mask pad rows out of the softmax
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                        logits.ndim - 1)
+        logits = jnp.where(iota < cfg.vocab, logits, -1e9)
+    return logits
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            img: jax.Array | None = None, remat: str = "full",
+            logits_mode: str = "all") -> tuple:
+    """Teacher-forcing forward -> (logits fp32, aux).
+
+    logits_mode="last" computes the unembed only for the final position
+    (prefill path) — the (B, S, V) tensor never exists.
+    """
+    pat, n_super, rest = structure(cfg)
+    x = _embed_in(params, tokens, cfg, img)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    x = constrain(x)
+
+    def body(h, layer_params):
+        auxes = {}
+        for i, kind in enumerate(pat):
+            h, aux = blocks.apply_block(h, layer_params[f"p{i}"], cfg, kind,
+                                        positions)
+            h = constrain(h)
+            for k2, v2 in aux.items():
+                auxes[f"{kind}{i}_{k2}"] = v2
+        return h, auxes
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if n_super > 0:
+        x, auxes = lax.scan(body, x, params["blocks"],
+                            unroll=n_super
+                            if layers.UNROLL_INNER_SCANS else 1)
+        aux = {k2: jnp.mean(v2) for k2, v2 in auxes.items()}
+    else:
+        aux = {}
+    for i in range(rest):
+        x, a = blocks.apply_block(x, params["rest"][f"r{i}"], cfg, pat[i],
+                                  positions)
+        aux.update({f"rest{i}_{k2}": v2 for k2, v2 in a.items()})
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    logits = _logits_of(x, params, cfg)
+    return logits, aux
+
+
+def loss_fn(params, batch, cfg: ModelConfig, remat: str = "full"):
+    """Next-token CE (+ MoE load-balance aux).  batch: {tokens, [img]}.
+
+    Single-pass CE: nll = logsumexp(logits) − logits[label], so exactly
+    one (B, S, V) buffer is live (log_softmax would make two)."""
+    tokens = batch["tokens"]
+    img = batch.get("img")
+    logits, aux = forward(params, tokens, cfg, img=img, remat=remat)
+    # image prefix (if any) carries no labels
+    txt_logits = logits[:, -tokens.shape[1]:][:, :-1]
+    tgt = tokens[:, 1:]
+    lse = jax.scipy.special.logsumexp(txt_logits, axis=-1)
+    true = jnp.take_along_axis(txt_logits, tgt[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(lse - true)
+    # z-loss keeps the softmax normalizer in check (production trick)
+    loss = loss + 1e-4 * jnp.mean(lse ** 2)
+    for k, v in aux.items():
+        if k.endswith("lb_loss"):
+            loss = loss + 0.01 * v
+    return loss, aux
+
+
+# ------------------------------ decode ------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    pat, n_super, rest = structure(cfg)
+    dt = _dt(cfg)
+    cache = {
+        f"p{i}": blocks.block_cache_init(cfg, kind, batch, max_len, n_super, dt)
+        for i, kind in enumerate(pat)
+    }
+    if rest:
+        cache["rest"] = {
+            f"r{i}": jax.tree.map(
+                lambda a: a[0],
+                blocks.block_cache_init(cfg, pat[i], batch, max_len, 1, dt))
+            for i in range(rest)
+        }
+    return cache
+
+
+def decode_step(params: dict, cache: dict, token: jax.Array, pos: jax.Array,
+                cfg: ModelConfig):
+    """One greedy decode step.  token: (B,) int32 -> (logits, new_cache)."""
+    pat, n_super, rest = structure(cfg)
+    x = _embed_in(params, token[:, None], cfg)
+
+    def body(h, inp):
+        layer_params, layer_cache = inp
+        new_cache = {}
+        for i, kind in enumerate(pat):
+            h, nc = blocks.decode_block(h, layer_params[f"p{i}"],
+                                        layer_cache[f"p{i}"], cfg, kind, pos)
+            new_cache[f"p{i}"] = nc
+        return h, new_cache
+
+    blk_cache = {k: cache[k] for k in cache if k != "rest"}
+    if n_super > 0:
+        x, new_blk = lax.scan(body, x, (params["blocks"], blk_cache),
+                              unroll=n_super
+                              if layers.UNROLL_INNER_SCANS else 1)
+    else:
+        new_blk = blk_cache
+    new_cache = dict(new_blk)
+    if rest:
+        new_cache["rest"] = {}
+        for i in range(rest):
+            x, nc = blocks.decode_block(x, params["rest"][f"r{i}"],
+                                        cache["rest"][f"r{i}"], cfg, pat[i],
+                                        pos)
+            new_cache["rest"][f"r{i}"] = nc
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits_of(x[:, 0], params, cfg)
+    return logits, new_cache

@@ -1,0 +1,91 @@
+"""RecurrentGemma / Griffin RG-LRU recurrent block (arXiv:2402.19427).
+
+    r_t = σ(W_r x_t);  i_t = σ(W_i x_t);  a_t = a^(c·r_t)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses ``lax.associative_scan`` (log-depth, TPU-friendly); decode
+is the one-step recurrence.  The surrounding block is Griffin's:
+(linear → conv1d → RG-LRU) gated by (linear → gelu), then projected out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers
+
+_C = 8.0
+
+
+def init_params(key, cfg, n_stack):
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 7)
+    return {
+        "in_x": layers.dense_init(ks[0], (n_stack, d, w), jnp.float32),
+        "in_gate": layers.dense_init(ks[1], (n_stack, d, w), jnp.float32),
+        "conv_w": layers.dense_init(ks[2], (n_stack, 4, w), jnp.float32),
+        "w_r": layers.dense_init(ks[3], (n_stack, w, w), jnp.float32),
+        "w_i": layers.dense_init(ks[4], (n_stack, w, w), jnp.float32),
+        # Λ init so that a = σ(Λ) ∈ (0.9, 0.999)
+        "lam": jnp.full((n_stack, w), 4.0, jnp.float32),
+        "out": layers.dense_init(ks[5], (n_stack, w, d), jnp.float32),
+    }
+
+
+def _gates(u, p):
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_r"])
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_i"])
+    log_a = -_C * r * jax.nn.softplus(p["lam"])      # log a_t  (≤ 0)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def _conv(u, w):
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + pad[:, i:i + u.shape[1]] * w[i]
+    return out
+
+
+def forward(x, p, cfg):
+    """x: (B, L, D) -> (B, L, D)."""
+    u = x @ p["in_x"].astype(x.dtype)
+    gate = jax.nn.gelu(x @ p["in_gate"].astype(x.dtype))
+    u = _conv(u, p["conv_w"].astype(x.dtype))
+    a, b = _gates(u, p)
+
+    def op(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = lax.associative_scan(op, (a, b), axis=1)
+    y = (h.astype(x.dtype) * gate) @ p["out"].astype(x.dtype)
+    return y
+
+
+def init_cache(cfg, batch, dtype):
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, 3, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def decode_step(x, cache, p, cfg):
+    """x: (B, 1, D) -> (y, new_cache)."""
+    u = x @ p["in_x"].astype(x.dtype)
+    gate = jax.nn.gelu(x @ p["in_gate"].astype(x.dtype))
+    hist = jnp.concatenate([cache["conv"], u], axis=1)       # (B, 4, W)
+    w = p["conv_w"].astype(x.dtype)
+    u_c = jnp.einsum("bkw,kw->bw", hist, w)[:, None, :]
+    a, b = _gates(u_c, p)
+    h = cache["h"] * a[:, 0] + b[:, 0]
+    y = (h[:, None, :].astype(x.dtype) * gate) @ p["out"].astype(x.dtype)
+    return y, {"conv": hist[:, 1:], "h": h}

@@ -1,0 +1,122 @@
+"""Mamba2 (SSD) block — train via the chunked Pallas kernel, decode via
+the O(1)-state recurrence.
+
+Param/layout follows the paper (arXiv:2405.21060): in_proj → (z, x, B,
+C, dt); causal depthwise conv on (x, B, C); SSD; gated RMSNorm; out_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from ..kernels.ssd import ops as ssd_ops
+
+
+def dims(cfg):
+    din = cfg.ssm_expand * cfg.d_model
+    h = din // cfg.ssm_head_dim
+    return din, h, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+
+
+def init_params(key, cfg, n_stack):
+    d = cfg.d_model
+    din, h, p_, g, s = dims(cfg)
+    conv_ch = din + 2 * g * s
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": layers.dense_init(
+            ks[0], (n_stack, d, 2 * din + 2 * g * s + h), jnp.float32),
+        "conv_w": layers.dense_init(
+            ks[1], (n_stack, cfg.ssm_conv, conv_ch), jnp.float32),
+        "a_log": jnp.zeros((n_stack, h), jnp.float32),       # A = -exp(a_log)
+        "dt_bias": jnp.zeros((n_stack, h), jnp.float32),
+        "d_skip": jnp.ones((n_stack, h), jnp.float32),
+        "gnorm": jnp.zeros((n_stack, din), jnp.float32),
+        "out_proj": layers.dense_init(ks[2], (n_stack, din, d), jnp.float32),
+    }
+
+
+def _causal_dconv(u, w):
+    """u: (B, L, C), w: (K, C) depthwise causal conv."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(k):
+        out = out + pad[:, i:i + u.shape[1]] * w[i]
+    return out
+
+
+def _split(proj, cfg):
+    din, h, p_, g, s = dims(cfg)
+    z = proj[..., :din]
+    xbc = proj[..., din:din + din + 2 * g * s]
+    dt = proj[..., -h:]
+    return z, xbc, dt
+
+
+def forward(x, p, cfg, chunk=128):
+    """Train-time forward. x: (B, L, D) -> (B, L, D)."""
+    b, l, d = x.shape
+    din, h, hp, g, s = dims(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split(proj, cfg)
+    xbc = jax.nn.silu(_causal_dconv(xbc, p["conv_w"].astype(x.dtype)))
+    xs = xbc[..., :din].reshape(b, l, h, hp)
+    bmat = xbc[..., din:din + g * s].reshape(b, l, g, s)
+    cmat = xbc[..., din + g * s:].reshape(b, l, g, s)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a_log = -jnp.exp(p["a_log"])
+
+    pad = (-l) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y = ssd_ops.ssd_forward(xs.astype(jnp.float32), dt, a_log,
+                            bmat.astype(jnp.float32),
+                            cmat.astype(jnp.float32), chunk=chunk)
+    y = y[:, :l] + xs[:, :l].astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, l, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["gnorm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def init_cache(cfg, batch, dtype):
+    din, h, hp, g, s = dims(cfg)
+    conv_ch = din + 2 * g * s
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, h, s, hp), jnp.float32),
+    }
+
+
+def decode_step(x, cache, p, cfg):
+    """x: (B, 1, D) -> (y, new_cache); O(1) in sequence length."""
+    b = x.shape[0]
+    din, h, hp, g, s = dims(cfg)
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split(proj, cfg)
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    xbc_c = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w))[:, None, :]
+    new_conv = hist[:, 1:]
+    xs = xbc_c[..., :din].reshape(b, h, hp)
+    bmat = xbc_c[..., din:din + g * s].reshape(b, g, s)
+    cmat = xbc_c[..., din + g * s:].reshape(b, g, s)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    a = jnp.exp(dtv * (-jnp.exp(p["a_log"])))                # (B, H)
+    rep = h // g
+    bh = jnp.repeat(bmat, rep, axis=1)                       # (B, H, S)
+    ch = jnp.repeat(cmat, rep, axis=1)
+    state = cache["state"] * a[..., None, None] + \
+        dtv[..., None, None] * jnp.einsum("bhs,bhp->bhsp", bh,
+                                          xs.astype(jnp.float32))
+    y = jnp.einsum("bhs,bhsp->bhp", ch, state)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, 1, din).astype(x.dtype) * jax.nn.silu(z)
+    y = layers.rms_norm(y, p["gnorm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(x.dtype), {
+        "conv": new_conv, "state": state}

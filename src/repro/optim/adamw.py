@@ -1,0 +1,95 @@
+"""AdamW with global-norm clipping and memory-dtype policies.
+
+Policies (per-chip optimizer bytes/param, excluding the bf16 compute
+copy):  ``fp32`` m+v fp32 (8B) — default;  ``bf16_m`` m bf16, v fp32
+(6B);  ``bf16_mv`` m+v bf16 (4B) — used by the largest configs (arctic)
+to fit the v5e HBM budget (see EXPERIMENTS.md §Dry-run).
+Optimizer state inherits the parameter sharding (ZeRO-style: params are
+already FSDP-sharded over ``data``, so state is too).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_policy: str = "fp32"      # fp32 | bf16_m | bf16_mv
+    warmup: int = 100
+    total_steps: int = 10000
+
+
+def _m_dtype(p):
+    return jnp.bfloat16 if p in ("bf16_m", "bf16_mv") else jnp.float32
+
+
+def _v_dtype(p):
+    return jnp.bfloat16 if p == "bf16_mv" else jnp.float32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    m: Any
+    v: Any
+    step: jax.Array
+
+
+def init_state(params, cfg: AdamWConfig) -> OptState:
+    return OptState(
+        m=jax.tree.map(lambda p: jnp.zeros_like(p, _m_dtype(cfg.state_policy)),
+                       params),
+        v=jax.tree.map(lambda p: jnp.zeros_like(p, _v_dtype(cfg.state_policy)),
+                       params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads, state: OptState, params, cfg: AdamWConfig):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(step, cfg)
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * cfg.b1 + (1 - cfg.b1) * g
+        v32 = v.astype(jnp.float32) * cfg.b2 + (1 - cfg.b2) * g * g
+        u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p32 - lr * (u + decay * p32)
+        return (new_p.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, OptState(m=new_m, v=new_v, step=step), {
+        "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,37 @@
+"""MASJ duplicate elimination (the paper's query phase E).
+
+``unique_pairs`` is the paper-faithful global de-duplication: gather all
+candidate (r, s) id pairs, lexicographically sort, and keep first
+occurrences.  Runs in int32 via a two-pass stable argsort (no 64-bit
+keys needed).  Cost is the β(|R|+|S|) term of the cost model.
+
+The zero-communication alternative (reference-point ownership) lives in
+``join.py``; both are benchmarked in §Perf.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lexsort_pairs(rid: jax.Array, sid: jax.Array) -> jax.Array:
+    """Order permutation sorting (rid, sid) lexicographically (stable)."""
+    o1 = jnp.argsort(sid, stable=True)
+    o2 = jnp.argsort(rid[o1], stable=True)
+    return o1[o2]
+
+
+@jax.jit
+def unique_pairs(rid: jax.Array, sid: jax.Array):
+    """Count + mark unique non-padding pairs.  Padding = (-1, -1)."""
+    order = lexsort_pairs(rid, sid)
+    r_s, s_s = rid[order], sid[order]
+    first = jnp.concatenate([
+        jnp.ones((1,), bool),
+        (r_s[1:] != r_s[:-1]) | (s_s[1:] != s_s[:-1]),
+    ])
+    real = r_s >= 0
+    uniq_sorted = first & real
+    n_unique = jnp.sum(uniq_sorted.astype(jnp.int32))
+    uniq = jnp.zeros_like(uniq_sorted).at[order].set(uniq_sorted)
+    return n_unique, uniq

@@ -1,0 +1,72 @@
+"""Distributed spatial join vs brute-force oracle (1-device mesh here;
+multi-device covered in test_multidevice.py via subprocess)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.data import spatial_gen
+from repro.kernels.mbr_join import ref as mref
+from repro.query import balance, dedup, engine
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("d",))
+
+
+@pytest.fixture(scope="module")
+def rs():
+    r = spatial_gen.dataset("osm", jax.random.PRNGKey(0), 1200)
+    s = spatial_gen.dataset("osm", jax.random.PRNGKey(9), 900)
+    return r, s, int(mref.intersect_count(r, s))
+
+
+@pytest.mark.parametrize("method", ["fg", "bsp", "slc", "bos", "str", "hc"])
+def test_join_count_matches_oracle(rs, method):
+    r, s, oracle = rs
+    plan = engine.plan_join(method, r, s, 200, 1)
+    got = engine.spatial_join_count(plan, _mesh(), "d",
+                                    max_pairs_per_tile=8192)
+    assert got == oracle, f"{method}: {got} != {oracle}"
+
+
+@pytest.mark.parametrize("method", ["fg", "bsp", "slc", "bos"])
+def test_rp_dedup_equals_masj_for_nonoverlapping(rs, method):
+    r, s, oracle = rs
+    plan = engine.plan_join(method, r, s, 250, 1)
+    rp = engine.run_join_count(plan, _mesh(), "d", dedup="rp")
+    masj = engine.run_join_pairs_masj(plan, _mesh(), "d",
+                                      max_pairs_per_tile=8192)
+    assert rp == masj == oracle
+
+
+def test_unique_pairs_vs_numpy():
+    rng = np.random.default_rng(0)
+    rid = rng.integers(0, 50, 500).astype(np.int32)
+    sid = rng.integers(0, 50, 500).astype(np.int32)
+    pad = rng.random(500) < 0.2
+    rid[pad] = -1
+    sid[pad] = -1
+    n, _ = dedup.unique_pairs(jax.numpy.asarray(rid), jax.numpy.asarray(sid))
+    want = len(set(zip(rid[~pad], sid[~pad])))
+    assert int(n) == want
+
+
+def test_lpt_beats_round_robin():
+    rng = np.random.default_rng(1)
+    costs = rng.pareto(1.3, 300) + 1.0
+    _, mk_lpt, mean = balance.lpt_pack(costs, 16)
+    _, mk_rr, _ = balance.round_robin_pack(costs, 16)
+    assert mk_lpt <= mk_rr
+    # Graham bound: LPT ≤ 4/3·OPT, and OPT ≥ max(mean load, biggest tile)
+    opt_lb = max(mean, float(costs.max()))
+    assert mk_lpt <= 4.0 / 3.0 * opt_lb + 1e-9
+
+
+def test_plan_stats_sane(rs):
+    r, s, _ = rs
+    plan = engine.plan_join("bos", r, s, 200, 4)
+    st = plan.stats
+    assert st["lambda_r"] >= 0 and st["lambda_s"] >= 0
+    assert st["skew"] >= 1.0
+    assert st["k"] >= 1 and not st["overlapping"]

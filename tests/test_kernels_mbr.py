@@ -1,0 +1,57 @@
+"""mbr_join Pallas kernel: shape/dtype sweep vs the pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.mbr_join import kernel, ops, ref
+
+
+def _boxes(key, n, scale=0.1):
+    k1, k2 = jax.random.split(key)
+    c = jax.random.uniform(k1, (n, 2))
+    s = jax.random.uniform(k2, (n, 2)) * scale
+    return jnp.concatenate([c - s, c + s], axis=-1)
+
+
+@pytest.mark.parametrize("n,m", [(1, 1), (7, 5), (128, 128), (300, 257),
+                                 (1024, 513)])
+def test_count_matches_ref(n, m):
+    r = _boxes(jax.random.PRNGKey(n), n)
+    s = _boxes(jax.random.PRNGKey(m + 1), m)
+    assert int(ops.join_count(r, s)) == int(ref.intersect_count(r, s))
+
+
+@pytest.mark.parametrize("n,m", [(5, 9), (130, 260), (511, 140)])
+def test_mask_matches_ref(n, m):
+    r = _boxes(jax.random.PRNGKey(n), n)
+    s = _boxes(jax.random.PRNGKey(m), m)
+    assert bool(jnp.all(ops.join_mask(r, s) == ref.intersect_mask(r, s)))
+
+
+@pytest.mark.parametrize("br,bs", [(128, 128), (256, 128), (512, 256)])
+def test_block_shape_sweep(br, bs):
+    r = _boxes(jax.random.PRNGKey(0), 700)
+    s = _boxes(jax.random.PRNGKey(1), 300)
+    assert int(ops.join_count(r, s, br=br, bs=bs)) == \
+        int(ref.intersect_count(r, s))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dtype_sweep(dtype):
+    r = _boxes(jax.random.PRNGKey(2), 256).astype(dtype)
+    s = _boxes(jax.random.PRNGKey(3), 256).astype(dtype)
+    # wrapper casts to f32; compare against f32 oracle on the cast data
+    rf, sf = r.astype(jnp.float32), s.astype(jnp.float32)
+    assert int(ops.join_count(r, s)) == int(ref.intersect_count(rf, sf))
+
+
+def test_touching_boxes_intersect():
+    r = jnp.array([[0.0, 0.0, 1.0, 1.0]])
+    s = jnp.array([[1.0, 1.0, 2.0, 2.0]])   # shares exactly one corner
+    assert int(ops.join_count(r, s)) == 1
+
+
+def test_sentinel_padding_never_matches():
+    r = _boxes(jax.random.PRNGKey(4), 3)    # heavy padding to 256
+    s = _boxes(jax.random.PRNGKey(5), 2)
+    assert int(ops.join_count(r, s)) == int(ref.intersect_count(r, s))

@@ -1,0 +1,101 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step,
+shape + finiteness assertions (assignment requirement)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import api, encdec, lm
+from repro.optim.adamw import AdamWConfig
+
+
+def _batch(cfg, key, b=2, s=32):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        batch["img"] = jax.random.normal(
+            key, (b, cfg.vis_tokens, cfg.vis_dim), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (b, cfg.src_len, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.smoke(arch)
+    model = api.build(cfg)
+    key = jax.random.PRNGKey(0)
+    state = api.init_train_state(model, key, AdamWConfig())
+    b, s = 2, 32
+    batch = _batch(cfg, key, b, s)
+
+    # forward shapes
+    if cfg.family == "encdec":
+        logits, _ = encdec.forward(state.params, batch["frames"],
+                                   batch["tokens"], cfg)
+    else:
+        logits, _ = lm.forward(state.params, batch["tokens"], cfg,
+                               img=batch.get("img"), remat="none")
+    exp_s = s + (cfg.vis_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (b, exp_s, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits[..., :cfg.vocab])))
+
+    # one train step: finite loss, params change
+    step = jax.jit(api.make_train_step(model, AdamWConfig()))
+    state2, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                      - b2.astype(jnp.float32))))
+                for a, b2 in zip(jax.tree.leaves(state.params),
+                                 jax.tree.leaves(state2.params)))
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("arch", ["gemma2_27b", "mixtral_8x22b",
+                                  "recurrentgemma_9b", "mamba2_1p3b",
+                                  "whisper_medium"])
+def test_decode_matches_teacher_forcing(arch):
+    """Ring caches / SSM recurrences / cross-attn caches reproduce the
+    training forward exactly (fp32, high MoE capacity)."""
+    cfg = dataclasses.replace(configs.smoke(arch), dtype="float32",
+                              capacity_factor=16.0)
+    model = api.build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    b, s = 2, 40
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    if cfg.family == "encdec":
+        frames = jax.random.normal(key, (b, cfg.src_len, cfg.d_model))
+        tf_logits, _ = encdec.forward(params, frames, toks, cfg)
+        cache = encdec.init_cache(params, frames, cfg, s)
+    else:
+        tf_logits, _ = lm.forward(params, toks, cfg, remat="none")
+        cache = model.init_cache(b, s)
+    step = jax.jit(lambda p, c, t, pos: model.decode_step(p, c, t, pos))
+    for pos in range(s):
+        logits, cache = step(params, cache, toks[:, pos], pos)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(tf_logits[:, pos]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_param_counts_match_published_scale():
+    """Full configs land near their published parameter counts."""
+    expect = {
+        "gemma2_27b": 27e9, "stablelm_12b": 12e9, "qwen15_4b": 4e9,
+        "command_r_35b": 35e9, "mixtral_8x22b": 141e9, "arctic_480b": 480e9,
+        "internvl2_26b": 20e9,  # LM backbone only (ViT is stubbed)
+        "recurrentgemma_9b": 9e9, "mamba2_1p3b": 1.3e9,
+    }
+    for arch, want in expect.items():
+        got = configs.get(arch).n_params()
+        assert 0.5 * want < got < 1.7 * want, \
+            f"{arch}: n_params()={got / 1e9:.1f}B vs published {want / 1e9:.0f}B"
+
+
+def test_moe_active_params_below_total():
+    cfg = configs.get("mixtral_8x22b")
+    assert cfg.n_active_params() < 0.45 * cfg.n_params()

@@ -1,0 +1,108 @@
+"""Structural invariants of the six partitioners (paper Table 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import geometry, metrics
+from repro.core.partition import api, partition_counts
+from repro.data import spatial_gen
+
+METHODS = ["fg", "bsp", "slc", "bos", "str", "hc"]
+NON_OVERLAPPING = ["fg", "bsp", "slc", "bos"]
+
+
+def _data(name="osm", n=1500, seed=0):
+    return spatial_gen.dataset(name, jax.random.PRNGKey(seed), n)
+
+
+@pytest.mark.parametrize("method", METHODS)
+@pytest.mark.parametrize("dataset", ["osm", "pi"])
+def test_full_coverage_of_objects(method, dataset):
+    """MASJ: every object lands in ≥1 partition (paper §2.2)."""
+    mbrs = _data(dataset)
+    parts = api.partition(method, mbrs, 100)
+    _, copies = partition_counts(mbrs, parts)
+    assert float(metrics.coverage(copies)) == 1.0
+
+
+@pytest.mark.parametrize("method", NON_OVERLAPPING)
+def test_non_overlapping_boxes(method):
+    """Table 1: FG/BSP/SLC/BOS regions have disjoint interiors."""
+    mbrs = _data(n=800)
+    parts = api.partition(method, mbrs, 100)
+    boxes = np.asarray(parts.boxes)[np.asarray(parts.valid)]
+    eps = 1e-5
+    shrunk = boxes + np.array([eps, eps, -eps, -eps])
+    inter = np.array(geometry.intersect_matrix(
+        jnp.asarray(shrunk), jnp.asarray(shrunk)))
+    np.fill_diagonal(inter, False)
+    assert not inter.any(), f"{method} produced overlapping regions"
+
+
+@pytest.mark.parametrize("method", NON_OVERLAPPING)
+def test_universe_coverage(method):
+    """Space-covering methods tile the whole universe: any random point
+    hits exactly one region (interior)."""
+    mbrs = _data(n=700, seed=3)
+    parts = api.partition(method, mbrs, 80)
+    uni = np.asarray(geometry.universe(mbrs))
+    rng = np.random.default_rng(0)
+    pts = rng.uniform(uni[:2] + 1e-6, uni[2:] - 1e-6, size=(512, 2))
+    hits = np.asarray(geometry.contains_point(
+        parts.boxes, jnp.asarray(pts, jnp.float32)))
+    hits = hits & np.asarray(parts.valid)[None, :]
+    assert (hits.sum(1) >= 1).all(), f"{method} leaves gaps"
+
+
+@pytest.mark.parametrize("method", ["slc", "bos", "hc", "str"])
+def test_packing_k_near_optimal(method):
+    """Bottom-up packers produce k ≈ ceil(N/b) partitions (size bound)."""
+    mbrs = _data(n=1000, seed=1)
+    parts = api.partition(method, mbrs, 100)
+    k = int(parts.k())
+    assert k >= 10
+    assert k <= 16, f"{method}: k={k} far above ceil(N/b)=10"
+
+
+def test_fg_grid_count():
+    mbrs = _data(n=1000)
+    parts = api.partition("fg", mbrs, 100)
+    m = int(np.ceil(np.sqrt(1000 / 100)))
+    assert parts.kmax == m * m
+
+
+def test_bsp_payload_bound():
+    """BSP splits until every leaf holds ≤ b construction members."""
+    mbrs = _data(n=1024, seed=2)
+    b = 64
+    parts = api.partition("bsp", mbrs, b)
+    # count by centroid containment (construction membership, no MASJ)
+    c = geometry.centroids(mbrs)
+    hits = np.asarray(geometry.contains_point(parts.boxes, c))
+    hits = hits & np.asarray(parts.valid)[None, :]
+    # centroid on a shared edge may double-count; use first hit
+    first = hits.argmax(1)
+    counts = np.bincount(first[hits.any(1)], minlength=parts.kmax)
+    assert counts.max() <= b + 1
+
+
+def test_bos_fewer_boundary_objects_than_slc():
+    """BOS exists to beat SLC on boundary objects (paper §4.2)."""
+    mbrs = _data("osm", n=2000, seed=5)
+    lam = {}
+    for m in ["slc", "bos"]:
+        parts = api.partition(m, mbrs, 150)
+        counts, _ = partition_counts(mbrs, parts)
+        lam[m] = float(metrics.boundary_ratio(counts, parts.valid, 2000))
+    assert lam["bos"] <= lam["slc"] + 1e-6
+
+
+def test_classification_registry_matches_table1():
+    info = api.methods()
+    assert not info["fg"].overlapping and info["fg"].criterion == "space"
+    assert not info["bsp"].overlapping and info["bsp"].search == "top-down"
+    assert info["hc"].overlapping and info["hc"].search == "bottom-up"
+    assert info["str"].overlapping and info["str"].criterion == "data"
+    assert not info["slc"].overlapping and info["slc"].criterion == "data"
+    assert not info["bos"].overlapping

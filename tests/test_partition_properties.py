@@ -1,0 +1,62 @@
+"""Hypothesis property tests on partitioner invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import geometry, metrics
+from repro.core.partition import api, partition_counts
+
+coords = st.integers(min_value=0, max_value=10_000)
+
+
+@st.composite
+def mbr_sets(draw, min_n=8, max_n=120):
+    n = draw(st.integers(min_n, max_n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    c = rng.uniform(0, 1, (n, 2)).astype(np.float32)
+    sz = rng.uniform(1e-4, 0.05, (n, 2)).astype(np.float32)
+    return jnp.asarray(np.concatenate([c - sz, c + sz], axis=1))
+
+
+@settings(max_examples=25, deadline=None)
+@given(mbrs=mbr_sets(), payload=st.integers(4, 64))
+def test_lambda_nonnegative_and_coverage(mbrs, payload):
+    for method in ["fg", "bsp", "slc", "bos", "str", "hc"]:
+        parts = api.partition(method, mbrs, payload)
+        counts, copies = partition_counts(mbrs, parts)
+        lam = float(metrics.boundary_ratio(counts, parts.valid,
+                                           mbrs.shape[0]))
+        assert lam >= -1e-6, (method, lam)
+        assert float(metrics.coverage(copies)) == 1.0, method
+
+
+@settings(max_examples=25, deadline=None)
+@given(mbrs=mbr_sets(min_n=16), payload=st.integers(4, 32))
+def test_bsp_tiles_parent_exactly(mbrs, payload):
+    parts = api.partition("bsp", mbrs, payload)
+    boxes = np.asarray(parts.boxes)[np.asarray(parts.valid)]
+    uni = np.asarray(geometry.universe(mbrs))
+    area = ((boxes[:, 2] - boxes[:, 0]) * (boxes[:, 3] - boxes[:, 1])).sum()
+    uni_area = (uni[2] - uni[0]) * (uni[3] - uni[1])
+    assert np.isclose(area, uni_area, rtol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(mbrs=mbr_sets(min_n=20), payload=st.integers(5, 40))
+def test_hc_groups_bounded(mbrs, payload):
+    """HC packs ≤ payload objects per group by construction."""
+    parts = api.partition("hc", mbrs, payload)
+    k = int(parts.k())
+    assert k == -(-mbrs.shape[0] // payload)
+
+
+@settings(max_examples=20, deadline=None)
+@given(mbrs=mbr_sets(min_n=24), payload=st.integers(6, 24))
+def test_slc_strips_are_ordered_and_disjoint(mbrs, payload):
+    parts = api.partition("slc", mbrs, payload)
+    boxes = np.asarray(parts.boxes)[np.asarray(parts.valid)]
+    order = np.argsort(boxes[:, 0])
+    b = boxes[order]
+    assert (b[1:, 0] >= b[:-1, 2] - 1e-5).all()

@@ -1,0 +1,55 @@
+"""Sampling-based partitioning (paper §5.2 / Fig 9)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import metrics, sampling
+from repro.core.partition import api, partition_counts
+from repro.data import spatial_gen
+
+
+@pytest.fixture(scope="module")
+def osm():
+    return spatial_gen.dataset("osm", jax.random.PRNGKey(0), 4000)
+
+
+@pytest.mark.parametrize("method", ["fg", "bsp", "slc", "bos"])
+def test_sampled_layout_covers_full_dataset(osm, method):
+    res = sampling.sampled_partition(method, osm, 200, 0.2,
+                                     jax.random.PRNGKey(1))
+    counts, copies = sampling.evaluate_on_full(res, osm)
+    assert float(metrics.coverage(copies)) == 1.0
+
+
+@pytest.mark.parametrize("method", ["hc", "str"])
+def test_tight_mbr_methods_leave_gaps_on_samples(osm, method):
+    """The paper's §5.2 caveat: HC/STR sampled layouts don't cover."""
+    res = sampling.sampled_partition(method, osm, 200, 0.1,
+                                     jax.random.PRNGKey(2))
+    counts, copies = sampling.evaluate_on_full(res, osm)
+    uncovered = float(np.mean(np.asarray(copies) == 0))
+    assert uncovered > 0.0   # gaps exist...
+    fb = sampling.nearest_box_fallback(osm, res.parts)
+    assert fb.shape == (4000,)  # ...and the fallback assigns everyone
+    assert int(fb.max()) < res.parts.kmax
+
+
+def test_higher_sampling_rate_improves_balance(osm):
+    """Fig 9: balance quality improves with γ (on the skewed dataset)."""
+    stds = []
+    for gamma in [0.05, 0.5]:
+        res = sampling.sampled_partition("bsp", osm, 200, gamma,
+                                         jax.random.PRNGKey(3))
+        counts, _ = sampling.evaluate_on_full(res, osm)
+        stds.append(float(metrics.balance_stddev(counts, res.parts.valid)))
+    assert stds[1] <= stds[0] * 1.5   # allow noise, demand no blow-up
+
+
+def test_sample_payload_scaling():
+    mbrs = spatial_gen.dataset("pi", jax.random.PRNGKey(1), 1000)
+    res = sampling.sampled_partition("slc", mbrs, 100, 0.3,
+                                     jax.random.PRNGKey(0))
+    assert res.sample_size == 300
+    assert res.sample_payload == 30
+    # layout granularity ~ full-data granularity
+    assert abs(int(res.parts.k()) - 10) <= 2

@@ -1,0 +1,156 @@
+"""Optimizer, checkpoint/elastic-restore, FT runtime, data pipeline."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.core import cost_model
+from repro.data import balanced, spatial_gen, tokens
+from repro.dist import compress
+from repro.ft.runtime import FTConfig, run_loop
+from repro.optim import adamw
+
+
+def test_adamw_optimizes_quadratic():
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup=0,
+                            total_steps=200)
+    state = adamw.init_state(params, cfg)
+    grad_fn = jax.grad(lambda p: jnp.sum(p["w"] ** 2))
+    for _ in range(150):
+        params, state, _ = adamw.update(grad_fn(params), state, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.3
+
+
+@pytest.mark.parametrize("policy", ["fp32", "bf16_m", "bf16_mv"])
+def test_adamw_state_policies(policy):
+    params = {"w": jnp.ones((8, 8))}
+    cfg = adamw.AdamWConfig(state_policy=policy)
+    st = adamw.init_state(params, cfg)
+    assert st.m["w"].dtype == (jnp.bfloat16 if policy != "fp32"
+                               else jnp.float32)
+    assert st.v["w"].dtype == (jnp.bfloat16 if policy == "bf16_mv"
+                               else jnp.float32)
+    g = {"w": jnp.full((8, 8), 0.1)}
+    p2, st2, m = adamw.update(g, st, params, cfg)
+    assert np.isfinite(float(m["grad_norm"]))
+
+
+def test_grad_clip():
+    params = {"w": jnp.zeros(4)}
+    cfg = adamw.AdamWConfig(grad_clip=1.0, lr=1.0, warmup=0, weight_decay=0)
+    st = adamw.init_state(params, cfg)
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, m = adamw.update(g, st, params, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_checkpoint_roundtrip_and_elastic_restore():
+    state = {"p": jnp.arange(12.0).reshape(3, 4),
+             "n": {"s": jnp.ones((5,), jnp.bfloat16)}}
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, state, 7)
+        store.save(d, jax.tree.map(lambda x: x * 2, state), 9)
+        assert store.latest_step(d) == 9
+        got, step = store.restore(d, state)
+        assert step == 9
+        np.testing.assert_allclose(np.asarray(got["p"]),
+                                   np.asarray(state["p"]) * 2)
+        got7, _ = store.restore(d, state, step=7)
+        np.testing.assert_allclose(np.asarray(got7["p"]),
+                                   np.asarray(state["p"]))
+
+
+def test_checkpoint_atomicity_on_failure(monkeypatch):
+    state = {"p": jnp.ones((4,))}
+    with tempfile.TemporaryDirectory() as d:
+        store.save(d, state, 1)
+        calls = {"n": 0}
+        orig = np.save
+
+        def boom(*a, **k):
+            calls["n"] += 1
+            if calls["n"] > 1:
+                raise IOError("disk died")
+            return orig(*a, **k)
+
+        monkeypatch.setattr(np, "save", boom)
+        state2 = {"p": jnp.ones((4,)), "q": jnp.zeros((2,))}
+        with pytest.raises(IOError):
+            store.save(d, state2, 2)
+        monkeypatch.setattr(np, "save", orig)
+        # step 1 still intact; no step_2 garbage
+        assert store.latest_step(d) == 1
+        got, _ = store.restore(d, state)
+        np.testing.assert_allclose(np.asarray(got["p"]), 1.0)
+
+
+def test_ft_restart_resumes_from_checkpoint():
+    with tempfile.TemporaryDirectory() as d:
+        cfg = FTConfig(ckpt_dir=d, ckpt_every=3, max_restarts=2)
+
+        def step(st, _):
+            return {"x": st["x"] + 1}, {}
+
+        st, _, info = run_loop(step, {"x": jnp.zeros(())}, list(range(10)),
+                               cfg, inject_failure_at=7)
+        assert info["restarts"] == 1
+        assert float(st["x"]) == 10.0
+
+
+def test_balanced_batching_beats_naive():
+    lengths = tokens.doc_lengths(0, 2048, 8192)
+    _, s_bal = balanced.balanced_bins(lengths, 16)
+    _, s_naive = balanced.naive_bins(lengths, 16)
+    assert s_bal["skew"] < s_naive["skew"]
+    assert s_bal["skew"] < 1.6
+
+
+def test_token_pipeline_determinism_and_host_sharding():
+    cfg = tokens.TokenPipelineConfig(vocab=1000, seq_len=16, global_batch=8,
+                                     n_hosts=4, host_id=2)
+    b1 = tokens.batch_for_step(cfg, 5)
+    b2 = tokens.batch_for_step(cfg, 5)
+    assert b1["tokens"].shape == (2, 16)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    other = tokens.TokenPipelineConfig(vocab=1000, seq_len=16, global_batch=8,
+                                       n_hosts=4, host_id=3)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(tokens.batch_for_step(other, 5)["tokens"]))
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jnp.linspace(-3, 3, 100)
+    q, scale = compress.quantize(x)
+    err = jnp.max(jnp.abs(compress.dequantize(q, scale) - x))
+    assert float(err) <= float(scale) * 0.5 + 1e-6
+
+
+def test_cost_model_interior_optimum():
+    """With α(k) rising in k, cost has an interior sweet spot (paper §2.3)."""
+    ks = np.array([1, 4, 16, 64, 256, 1024, 4096], np.float32)
+    alphas = 0.002 * np.sqrt(ks)            # boundary ratio grows with k
+    params = cost_model.CostParams(beta=2000.0)
+    i, costs = cost_model.optimal_k(1e5, 1e5, ks, alphas, params)
+    costs = np.asarray(costs)
+    assert 0 < int(i) < len(ks) - 1 or costs[int(i)] <= costs.min() + 1e-3
+
+
+def test_spatial_generators_calibration():
+    """OSM-like data is far more skewed than PI-like (paper §6.2)."""
+    from repro.core import metrics
+    from repro.core.partition import api, partition_counts
+    key = jax.random.PRNGKey(0)
+    skews = {}
+    for name in ["osm", "pi"]:
+        m = spatial_gen.dataset(name, key, 4000)
+        assert bool(jnp.all(m[:, 2] >= m[:, 0]))
+        parts = api.partition("fg", m, 100)
+        counts, _ = partition_counts(m, parts)
+        skews[name] = float(metrics.skew_ratio(counts, parts.valid))
+    assert skews["osm"] > 3.0 * skews["pi"]
