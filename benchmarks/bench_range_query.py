@@ -1,0 +1,54 @@
+"""Range/kNN serving throughput and per-query partition fan-out across
+all six layouts — the paper's layout-quality thesis on the workloads of
+§6 (queries/sec from the batched server, fan-out as the boundary-object
+cost made workload-facing)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import spatial_gen
+from repro.query import range as range_mod
+from repro.serve import SpatialServer
+
+from .common import emit, timeit
+
+N = 6000
+Q = 512
+K = 8
+METHODS = ["fg", "bsp", "slc", "bos", "str", "hc"]
+
+
+def _qboxes(key, q, scale=0.05):
+    k1, k2 = jax.random.split(key)
+    c = jax.random.uniform(k1, (q, 2))
+    s = jax.random.uniform(k2, (q, 2)) * scale
+    return jnp.concatenate([c - s, c + s], axis=-1)
+
+
+def main() -> None:
+    mbrs = spatial_gen.dataset("osm", jax.random.PRNGKey(0), N)
+    qb = _qboxes(jax.random.PRNGKey(1), Q)
+    pts = jax.random.uniform(jax.random.PRNGKey(2), (Q, 2))
+    ref = range_mod.range_query_ref(np.asarray(mbrs), np.asarray(qb))
+    want = [len(r) for r in ref]
+    for m in METHODS:
+        srv = SpatialServer.from_method(m, mbrs, 300)
+        counts, rstats = srv.range_counts(qb)
+        assert [int(c) for c in counts] == want, m
+
+        us = timeit(lambda: srv.range_counts(qb)[0], warmup=1, iters=3)
+        qps = Q / (us * 1e-6)
+        emit(f"range_serve/osm/{m}/q{Q}", us,
+             f"qps={qps:.0f};fanout={rstats['fanout_mean']:.2f}")
+
+        _, _, _, kstats = srv.knn(pts, K)
+        us = timeit(lambda: srv.knn(pts, K)[0], warmup=1, iters=3)
+        qps = Q / (us * 1e-6)
+        emit(f"knn_serve/osm/{m}/k{K}", us,
+             f"qps={qps:.0f};fanout={kstats['fanout_mean']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

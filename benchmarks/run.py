@@ -10,11 +10,12 @@ import traceback
 from . import (bench_balanced_batch, bench_cost_model, bench_join,
                bench_kernels, bench_paper_hillclimb,
                bench_parallel_partition, bench_partition_runtime,
-               bench_quality, bench_sampling)
+               bench_quality, bench_range_query, bench_sampling)
 
 ALL = {
     "quality": bench_quality,            # Figs 3 & 4
     "join": bench_join,                  # Fig 5
+    "range_query": bench_range_query,    # §6 selection workloads
     "partition_runtime": bench_partition_runtime,   # Figs 6 & 7
     "parallel_partition": bench_parallel_partition,  # Fig 8
     "sampling": bench_sampling,          # Fig 9

@@ -1,0 +1,25 @@
+"""Version compatibility shims for jax API drift.
+
+The repo targets the container's pinned jax; newer/older releases moved
+``shard_map`` (``jax.experimental.shard_map`` → ``jax.shard_map``) and
+renamed its replication-check kwarg (``check_rep`` → ``check_vma``).
+Everything in-repo imports ``shard_map`` from here so call sites can use
+the modern spelling regardless of the installed version.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.6: top-level export, kwarg is check_vma
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax 0.4.x: experimental module, kwarg is check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` with the modern signature on any supported jax."""
+    kw = {_CHECK_KW: check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)

@@ -13,6 +13,10 @@ import jax.numpy as jnp
 
 XMIN, YMIN, XMAX, YMAX = 0, 1, 2, 3
 
+# inverted box (xmin > xmax): intersects nothing under the closed-box
+# predicates below — the padding sentinel shared by kernels and staging
+SENTINEL_BOX = (9e9, 9e9, -9e9, -9e9)
+
 
 def centroids(mbrs: jax.Array) -> jax.Array:
     """(N, 4) -> (N, 2) box centers."""

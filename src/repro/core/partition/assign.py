@@ -17,6 +17,11 @@ from .. import geometry
 from .api import Partitioning
 
 
+def round_up(x: int, m: int) -> int:
+    """Round ``x`` up to a multiple of ``m`` (capacity lane alignment)."""
+    return int(-(-x // m) * m)
+
+
 def partition_counts(mbrs: jax.Array, parts: Partitioning,
                      block: int = 8192) -> tuple[jax.Array, jax.Array]:
     """Per-partition payload counts and per-object copy counts.

@@ -33,7 +33,27 @@ def sampled_partition(method: str, mbrs: jax.Array, payload: int,
     perm = jax.random.permutation(key, n)[:s]
     sample = mbrs[perm]
     parts = api.partition(method, sample, payload_s)
+    if api.info(method).covers_universe:
+        # the sampled layout covers the SAMPLE's universe; snap its rim
+        # outward to the full-data universe so the transfer stays gap-free
+        parts = _extend_rim(parts, geometry.universe(sample),
+                            geometry.universe(mbrs))
     return SampledResult(parts=parts, sample_size=s, sample_payload=payload_s)
+
+
+def _extend_rim(parts: api.Partitioning, uni_s: jax.Array,
+                uni_f: jax.Array) -> api.Partitioning:
+    """Stretch boxes touching the sample-universe rim to the full one."""
+    eps = 1e-6 * jnp.maximum(uni_s[2:] - uni_s[:2], 1e-9)
+    b = parts.boxes
+    lo = jnp.where(b[:, :2] <= uni_s[:2] + eps,
+                   jnp.minimum(b[:, :2], uni_f[:2]), b[:, :2])
+    hi = jnp.where(b[:, 2:] >= uni_s[2:] - eps,
+                   jnp.maximum(b[:, 2:], uni_f[2:]), b[:, 2:])
+    boxes = jnp.where(parts.valid[:, None],
+                      jnp.concatenate([lo, hi], axis=-1), b)
+    return api.Partitioning(boxes=boxes.astype(jnp.float32),
+                            valid=parts.valid)
 
 
 def evaluate_on_full(res: SampledResult, mbrs: jax.Array):

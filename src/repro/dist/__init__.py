@@ -1,0 +1,1 @@
+from . import compress, sharding  # noqa: F401

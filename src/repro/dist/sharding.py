@@ -1,0 +1,71 @@
+"""GSPMD parameter partitioning rules (name + shape driven).
+
+``param_specs`` maps a (possibly abstract) parameter tree to
+``PartitionSpec``s over the ``"model"`` mesh axis: contraction-friendly
+tensor-parallel layout for attention/MLP stacks, expert- or
+FF-sharding for MoE stacks (``shard_experts``), replication for norms,
+biases, and anything whose target dim does not divide the axis.  A
+``mesh`` is required to check divisibility; with no ``"model"`` axis
+everything replicates.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# stacked weights: name -> axis to shard over "model" (negative = from end)
+_TP_AXIS = {
+    "wq": -1, "wk": -1, "wv": -1,        # (L, D, H·hd): split heads
+    "wo": -2,                            # (L, H·hd, D): split contraction
+    "w1": -1, "w3": -1,                  # (L, [E,] D, F): split FF
+    "w2": -2,                            # (L, [E,] F, D): split contraction
+}
+_MOE_NAMES = {"wr", "w1", "w3", "w2"}
+
+
+def _model_size(mesh) -> int:
+    try:
+        return int(mesh.shape["model"])
+    except (KeyError, TypeError, AttributeError):
+        return 0
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _in_moe(path) -> bool:
+    return any(getattr(e, "key", None) == "moe" for e in path)
+
+
+def _spec(path, leaf, tp: int, shard_experts: bool) -> P:
+    shape = getattr(leaf, "shape", ())
+    name = _leaf_name(path)
+    ndim = len(shape)
+    if tp <= 1 or ndim < 2:
+        return P()
+    axis = None
+    if _in_moe(path) and name in _MOE_NAMES:
+        if shard_experts:
+            # expert axis: wr (L, D, E) -> -1; w1/w3/w2 (L, E, ..) -> 1
+            axis = ndim - 1 if name == "wr" else 1
+        elif name != "wr":
+            axis = _TP_AXIS[name] % ndim
+    elif name in _TP_AXIS:
+        axis = _TP_AXIS[name] % ndim
+    if axis is None or shape[axis] % tp != 0:
+        return P()
+    spec = [None] * ndim
+    spec[axis] = "model"
+    return P(*spec)
+
+
+def param_specs(params, *, shard_experts: bool = False, mesh=None):
+    """Parameter tree -> PartitionSpec tree (same structure)."""
+    tp = _model_size(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec(path, leaf, tp, shard_experts), params)

@@ -7,12 +7,14 @@ CPU with ``interpret=True``.
 
 - ``mbr_join``: blocked pairwise MBR-intersection counting — the per-tile
   spatial-join hot spot (the paper's query phase D).
+- ``range_probe``: batched query-box vs tiled-layout probe — the range/kNN
+  serving hot spot (``repro.serve``).
 - ``hilbert``: Hilbert-curve xy→d bit transform — the HC partitioner and
   MapReduce-shuffle anchor-key hot spot (paper §5.1).
 - ``ssd``: Mamba2 state-space-duality intra-chunk block — the assigned
   arch pool's kernel-level hot spot.
 """
-from . import hilbert, mbr_join, ssd  # noqa: F401
+from . import hilbert, mbr_join, range_probe, ssd  # noqa: F401
 
 # wire the Hilbert kernel into the HC partitioner (core has no kernels dep)
 from ..core.partition import hc as _hc

@@ -10,9 +10,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ...core.geometry import SENTINEL_BOX
 from . import kernel
 
-_SENTINEL = jnp.array([9e9, 9e9, -9e9, -9e9], jnp.float32)
+_SENTINEL = jnp.array(SENTINEL_BOX, jnp.float32)
 
 
 def _interpret_default() -> bool:

@@ -1,0 +1,90 @@
+"""Blocked range-probe kernel (TPU Pallas): query boxes vs tiled layout.
+
+The serving hot spot: a (Q, 4) batch of range-query boxes is tested
+against a (T, cap, 4) partitioned layout (T tiles of cap member slots,
+the staging format of ``serve.engine``).  Like ``mbr_join`` this is a
+VPU problem — a (BQ, cap) block of boolean closed-box compares from
+rank-1 broadcasts; the member axis is the 128-lane axis.
+
+Layout: queries arrive component-major (4, Q); tiles arrive per-tile
+component-major (T, 4, cap) so grid cell (t, i) streams one tile's
+coordinate block and one query block through VMEM.
+
+Two entry points:
+- ``count``: grid cell (t, i) reduces its (BQ, cap) hit block over the
+  member axis — per-(tile, query) hit counts, O(T×Q) output.  This is
+  the throughput path (count/selectivity queries, kNN deepening).
+- ``mask``: writes the full (BQ, cap) boolean block — used for hit-id
+  extraction on moderate tile counts.
+
+Padding contract (same as mbr_join): callers pad query and member slots
+with *inverted* sentinel boxes (xmin > xmax), which intersect nothing,
+so no validity mask is streamed through VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BQ = 128
+
+
+def _block_hits(q_ref, t_ref):
+    qx0 = q_ref[0, :][:, None]   # (BQ, 1)
+    qy0 = q_ref[1, :][:, None]
+    qx1 = q_ref[2, :][:, None]
+    qy1 = q_ref[3, :][:, None]
+    sx0 = t_ref[0, 0, :][None, :]   # (1, cap)
+    sy0 = t_ref[0, 1, :][None, :]
+    sx1 = t_ref[0, 2, :][None, :]
+    sy1 = t_ref[0, 3, :][None, :]
+    return (qx0 <= sx1) & (sx0 <= qx1) & (qy0 <= sy1) & (sy0 <= qy1)
+
+
+def _count_kernel(q_ref, t_ref, out_ref):
+    hits = _block_hits(q_ref, t_ref)
+    out_ref[0, :] = jnp.sum(hits.astype(jnp.int32), axis=1)
+
+
+def _mask_kernel(q_ref, t_ref, out_ref):
+    out_ref[0, ...] = _block_hits(q_ref, t_ref)
+
+
+def count_pallas(q4: jax.Array, tiles: jax.Array, bq: int = DEFAULT_BQ,
+                 interpret: bool = False) -> jax.Array:
+    """q4: (4, Q), tiles: (T, 4, cap); Q % bq == 0, cap % 128 == 0
+    -> (T, Q) int32 per-(tile, query) hit counts."""
+    q = q4.shape[1]
+    t, _, cap = tiles.shape
+    grid = (t, q // bq)
+    return pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, bq), lambda ti, i: (0, i)),
+            pl.BlockSpec((1, 4, cap), lambda ti, i: (ti, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq), lambda ti, i: (ti, i)),
+        out_shape=jax.ShapeDtypeStruct((t, q), jnp.int32),
+        interpret=interpret,
+    )(q4, tiles)
+
+
+def mask_pallas(q4: jax.Array, tiles: jax.Array, bq: int = DEFAULT_BQ,
+                interpret: bool = False) -> jax.Array:
+    """q4: (4, Q), tiles: (T, 4, cap) -> (T, Q, cap) bool hit table."""
+    q = q4.shape[1]
+    t, _, cap = tiles.shape
+    grid = (t, q // bq)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, bq), lambda ti, i: (0, i)),
+            pl.BlockSpec((1, 4, cap), lambda ti, i: (ti, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, cap), lambda ti, i: (ti, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, q, cap), jnp.bool_),
+        interpret=interpret,
+    )(q4, tiles)

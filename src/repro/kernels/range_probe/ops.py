@@ -1,0 +1,80 @@
+"""Public jit'd wrappers for the range_probe kernel.
+
+Handles padding to block multiples (with never-intersecting sentinel
+boxes), the component-major layouts the kernel wants, and CPU fallback
+to interpret mode.  The natural caller is ``repro.serve.engine``, whose
+staged layouts are already sentinel-padded and 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core.geometry import SENTINEL_BOX
+from . import kernel
+
+_SENTINEL = jnp.array(SENTINEL_BOX, jnp.float32)
+_LANE = 128
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_queries_cm(qboxes: jax.Array, bq: int) -> jax.Array:
+    """(Q, 4) -> component-major (4, Q_pad) with sentinel padding."""
+    q = qboxes.shape[0]
+    pad = (-q) % bq
+    if pad:
+        qboxes = jnp.concatenate(
+            [qboxes, jnp.broadcast_to(_SENTINEL, (pad, 4))], axis=0)
+    return qboxes.T
+
+
+def _pad_tiles_cm(tiles: jax.Array) -> jax.Array:
+    """(T, cap, 4) -> per-tile component-major (T, 4, cap_pad)."""
+    cap = tiles.shape[1]
+    pad = (-cap) % _LANE
+    if pad:
+        tiles = jnp.concatenate(
+            [tiles, jnp.broadcast_to(_SENTINEL, (tiles.shape[0], pad, 4))],
+            axis=1)
+    return jnp.swapaxes(tiles, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def probe_counts(qboxes: jax.Array, tiles: jax.Array,
+                 bq: int = kernel.DEFAULT_BQ,
+                 interpret: bool | None = None) -> jax.Array:
+    """Per-(query, tile) hit counts.
+
+    qboxes: (Q, 4), tiles: (T, cap, 4) sentinel-padded member boxes
+    -> (Q, T) int32.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    q = qboxes.shape[0]
+    q4 = _pad_queries_cm(qboxes.astype(jnp.float32), bq)
+    t3 = _pad_tiles_cm(tiles.astype(jnp.float32))
+    counts = kernel.count_pallas(q4, t3, bq, interpret=interpret)
+    return counts.T[:q]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def probe_mask(qboxes: jax.Array, tiles: jax.Array,
+               bq: int = kernel.DEFAULT_BQ,
+               interpret: bool | None = None) -> jax.Array:
+    """Full hit table for id extraction.
+
+    qboxes: (Q, 4), tiles: (T, cap, 4) -> (Q, T, cap) bool (un-padded
+    view).  O(Q·T·cap) output — the count path is the throughput path.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    q, cap = qboxes.shape[0], tiles.shape[1]
+    q4 = _pad_queries_cm(qboxes.astype(jnp.float32), bq)
+    t3 = _pad_tiles_cm(tiles.astype(jnp.float32))
+    full = kernel.mask_pallas(q4, t3, bq, interpret=interpret)
+    return jnp.swapaxes(full, 0, 1)[:q, :, :cap]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the range_probe kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def probe_mask(qboxes: jax.Array, tiles: jax.Array) -> jax.Array:
+    """(Q, 4) x (T, cap, 4) -> (T, Q, cap) closed-box intersection."""
+    q = qboxes[None, :, None, :]
+    s = tiles[:, None, :, :]
+    return (
+        (q[..., 0] <= s[..., 2])
+        & (s[..., 0] <= q[..., 2])
+        & (q[..., 1] <= s[..., 3])
+        & (s[..., 1] <= q[..., 3])
+    )
+
+
+def probe_counts(qboxes: jax.Array, tiles: jax.Array) -> jax.Array:
+    """(Q, 4) x (T, cap, 4) -> (Q, T) per-(query, tile) hit counts."""
+    return jnp.sum(probe_mask(qboxes, tiles).astype(jnp.int32), axis=2).T

@@ -69,7 +69,8 @@ def moe_ffn_local(x, p, cfg):
         return y, aux
 
     act = P(dp, None, None)
-    return jax.shard_map(
+    from ..core.compat import shard_map
+    return shard_map(
         local_fn, mesh=mesh,
         in_specs=(act, P(fsdp, None), P(None, fsdp, tp), P(None, fsdp, tp),
                   P(None, tp, fsdp)),

@@ -18,13 +18,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from ..core.compat import shard_map
 
 from ..core import geometry
 from ..core.partition import api, assign
+from ..core.partition.assign import round_up as _round_up
 from . import balance, join
 
-_SENTINEL_BOX = np.array([9e9, 9e9, -9e9, -9e9], np.float32)
+_SENTINEL_BOX = np.array(geometry.SENTINEL_BOX, np.float32)
 
 
 @dataclasses.dataclass
@@ -38,10 +40,6 @@ class JoinPlan:
     tile_boxes: np.ndarray  # (D, Tpd, 4)
     universe: np.ndarray  # (4,)
     stats: dict
-
-
-def _round_up(x: int, m: int) -> int:
-    return int(-(-x // m) * m)
 
 
 def plan_join(method: str, r: jax.Array, s: jax.Array, payload: int,

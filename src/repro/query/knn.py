@@ -1,0 +1,145 @@
+"""Batched k-nearest-neighbour queries over staged layouts.
+
+kNN is built as **iterative-deepening range probes** (LocationSpark's
+local strategy): each query point grows an L∞ box until it provably
+contains ≥ k distinct objects, then one refinement pass extracts the
+candidates within radius ``r·√2`` (the Euclidean guarantee: d∞ ≤ r ⇒
+d₂ ≤ r·√2, so the √2-inflated box contains every true neighbour) and
+takes an exact top-k by ``(distance, id)`` — ties broken by id, fully
+deterministic.
+
+Counting during deepening runs against the *canonical-copy* tiles (see
+``query.range``), so counts are unique-object counts — raw MASJ counts
+would overcount replicas and stop the deepening too early, which is a
+correctness bug, not a tuning knob.
+
+The layout's kNN quality metric is MINDIST fan-out: the number of
+partitions a best-first search (ordered by MINDIST, à la R*-Grove /
+classic R-tree NN) must visit before the kth distance prunes the rest.
+``serve.router.route_knn`` produces that ordering; ``knn_fanout`` turns
+an answered batch into the per-query metric.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.range_probe import ops as rops
+
+_INF = jnp.float32(jnp.inf)
+_BIG_ID = jnp.int32(2**30)
+
+
+def mindist2(pts: jax.Array, boxes: jax.Array) -> jax.Array:
+    """Squared Euclidean MINDIST, point to closed box.
+
+    pts: (..., 2), boxes: (K, 4) -> (..., K); 0 inside the box.
+    """
+    x, y = pts[..., None, 0], pts[..., None, 1]
+    dx = jnp.maximum(jnp.maximum(boxes[..., 0] - x, x - boxes[..., 2]), 0.0)
+    dy = jnp.maximum(jnp.maximum(boxes[..., 1] - y, y - boxes[..., 3]), 0.0)
+    return dx * dx + dy * dy
+
+
+def knn_ref(mbrs: np.ndarray, pts: np.ndarray, k: int
+            ) -> tuple[np.ndarray, np.ndarray]:
+    """Numpy brute-force oracle: (Q, k) ids and squared distances,
+    ordered by (distance, id)."""
+    px, py = pts[:, None, 0], pts[:, None, 1]
+    dx = np.maximum(np.maximum(mbrs[None, :, 0] - px, px - mbrs[None, :, 2]),
+                    0.0)
+    dy = np.maximum(np.maximum(mbrs[None, :, 1] - py, py - mbrs[None, :, 3]),
+                    0.0)
+    d2 = dx * dx + dy * dy
+    ids = np.broadcast_to(np.arange(mbrs.shape[0]), d2.shape)
+    order = np.lexsort((ids, d2), axis=1)[:, :k]
+    return order.astype(np.int32), np.take_along_axis(d2, order, axis=1)
+
+
+def _qboxes(pts: jax.Array, r: jax.Array) -> jax.Array:
+    rr = r[:, None]
+    return jnp.concatenate([pts - rr, pts + rr], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand"))
+def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
+                ids: jax.Array, uni: jax.Array, r0: float | None = None,
+                max_rounds: int = 32, max_cand: int = 1024):
+    """Exact batched kNN against a staged layout.
+
+    pts: (Q, 2) query points; canon_tiles/ids: staging from
+    ``serve.engine`` — canonical copies only, so deepening counts are
+    unique-object counts.  Returns ``(nn_ids[Q, k] int32,
+    nn_d2[Q, k] f32, radius[Q] f32, overflow[Q] bool)``; overflow marks
+    queries whose refinement box held more than ``max_cand`` candidates
+    (re-run with a bigger ``max_cand`` — exactness is flagged, never
+    silently lost).
+    """
+    q = pts.shape[0]
+    diag = jnp.sqrt(jnp.sum((uni[2:] - uni[:2]) ** 2))
+    if r0 is None:
+        n_slots = canon_tiles.shape[0] * canon_tiles.shape[1]
+        r_init = diag * 0.5 * jnp.sqrt(k / jnp.float32(max(n_slots, 1)))
+    else:
+        r_init = jnp.float32(r0)
+    r_init = jnp.maximum(r_init, diag * 1e-6)
+
+    # per-query L∞ radius at which the box provably covers the universe
+    # (query points may lie outside it), so deepening always terminates
+    # with >= min(k, n) unique hits
+    r_cover = jnp.maximum(
+        jnp.maximum(pts[:, 0] - uni[0], uni[2] - pts[:, 0]),
+        jnp.maximum(pts[:, 1] - uni[1], uni[3] - pts[:, 1]))
+    r_cover = jnp.maximum(r_cover, diag * 1e-6)
+
+    def counts_at(r):
+        return jnp.sum(rops.probe_counts(_qboxes(pts, r), canon_tiles),
+                       axis=1)
+
+    def cond(state):
+        r, counts, i = state
+        return jnp.any((counts < k) & (r < r_cover)) & (i < max_rounds)
+
+    def body(state):
+        r, counts, i = state
+        r = jnp.where(counts < k, jnp.minimum(r * 2.0, r_cover), r)
+        return r, counts_at(r), i + 1
+
+    r = jnp.full((q,), r_init, jnp.float32)
+    counts = counts_at(r)
+    r, counts, _ = jax.lax.while_loop(cond, body, (r, counts, jnp.int32(0)))
+
+    # refinement: the √2-inflated box provably contains all true kNN
+    re = r * jnp.sqrt(jnp.float32(2.0))
+    mask = rops.probe_mask(_qboxes(pts, re), canon_tiles)   # (Q, T, cap)
+    ids_flat = ids.reshape(-1)
+    flat = mask.reshape(q, -1) & (ids_flat >= 0)[None, :]
+    n_cand = jnp.sum(flat, axis=1, dtype=jnp.int32)
+
+    tiles_flat = canon_tiles.reshape(-1, 4)
+
+    def refine(pt, hit):
+        slots = jnp.nonzero(hit, size=max_cand, fill_value=-1)[0]
+        live = slots >= 0
+        boxes = tiles_flat[jnp.maximum(slots, 0)]
+        cid = jnp.where(live, ids_flat[jnp.maximum(slots, 0)], _BIG_ID)
+        d2 = jnp.where(live, mindist2(pt, boxes), _INF)
+        o1 = jnp.argsort(cid)
+        o2 = jnp.argsort(d2[o1], stable=True)
+        order = o1[o2][:k]
+        return jnp.where(d2[order] < _INF, cid[order], -1), d2[order]
+
+    nn_ids, nn_d2 = jax.vmap(refine)(pts, flat)
+    return nn_ids, nn_d2, r, n_cand > max_cand
+
+
+def knn_fanout(pts: jax.Array, kth_d2: jax.Array, part_boxes: jax.Array,
+               valid: jax.Array) -> jax.Array:
+    """Per-query MINDIST fan-out: partitions a best-first search must
+    visit, i.e. valid partitions with MINDIST² ≤ kth distance²."""
+    d2 = mindist2(pts, part_boxes)
+    return jnp.sum((d2 <= kth_d2[:, None]) & valid[None, :], axis=1,
+                   dtype=jnp.int32)

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from ..core.compat import shard_map
 
 from ..core import geometry, hilbert
 from ..core.partition.api import Partitioning
@@ -31,13 +32,18 @@ BIG = jnp.float32(3.4e38)
 
 def coarse_splitters(key: jax.Array, mbrs: jax.Array, n_buckets: int,
                      sample: int = 4096) -> jax.Array:
-    """Anchor-sample Hilbert quantiles -> (n_buckets-1,) uint32 splitters."""
+    """Anchor-sample Hilbert quantiles -> (n_buckets-1,) uint32 splitters.
+
+    Sampling is without replacement and quantile positions are rounded
+    (not truncated) — with-replacement draws plus ``astype(int32)``
+    floor both bias the splitters low on small samples.
+    """
     n = mbrs.shape[0]
-    idx = jax.random.randint(key, (min(sample, n),), 0, n)
+    idx = jax.random.choice(key, n, (min(sample, n),), replace=False)
     pts = geometry.centroids(mbrs[idx])
     keys = jnp.sort(hilbert.hilbert_keys(pts, geometry.universe(mbrs)))
     q = jnp.linspace(0, keys.shape[0] - 1, n_buckets + 1)[1:-1]
-    return keys[q.astype(jnp.int32)]
+    return keys[jnp.round(q).astype(jnp.int32)]
 
 
 def _slc_masked(local_mbrs, real, payload: int, kmax: int):

@@ -1,0 +1,11 @@
+"""Batched spatial query serving over partitioned layouts.
+
+- ``router``: the global index — jit-compatible query→partition routing
+  (box overlap for range, MINDIST best-first order for kNN) and the
+  per-query partition fan-out metric.
+- ``engine``: stage a dataset once under any ``Partitioning``, then
+  answer streams of range/kNN batches with an SPMD ``shard_map`` step
+  and LPT query packing.
+"""
+from . import engine, router  # noqa: F401
+from .engine import SpatialServer, stage  # noqa: F401

@@ -1,0 +1,237 @@
+"""The batched spatial query server (stage once, serve forever).
+
+LocationSpark's architecture in SPMD form: a dataset is staged **once**
+under any of the six layouts — MASJ assignment into padded
+``(T, cap, 4)`` member tiles (reusing ``assign.assign_padded``) plus a
+canonical-copy mark so selection queries dedup for free (see
+``query.range``) — then streams of query batches are answered by a
+jitted ``shard_map`` step:
+
+  route   — the global index maps the batch to partitions and yields
+            per-query fan-out (the layout-quality metric reported with
+            every answer),
+  pack    — queries are LPT-packed onto devices with fan-out as the
+            cost (the join engine's straggler story, applied to the
+            query side: a batch of hotspot queries must not serialise
+            on one device),
+  probe   — each device sweeps its query shard over the replicated
+            tile set with the ``range_probe`` Pallas kernel (dense
+            local probe; per-partition local indexes are a later PR),
+  gather  — results come back query-sharded and are unpermuted.
+
+Single-process use passes ``mesh=None`` and gets the same jitted maths
+without the collective plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import geometry
+from ..core.compat import shard_map
+from ..core.partition import api, assign
+from ..core.partition.assign import round_up
+from ..query import balance, knn as knn_mod, range as range_mod
+from . import router
+
+_SENTINEL = np.array(geometry.SENTINEL_BOX, np.float32)
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("tiles", "ids", "canon_tiles", "tile_boxes", "uni"),
+         meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class StagedLayout:
+    """Device-resident staging of one partitioned dataset.
+
+    tiles       : (T, cap, 4) member MBRs, sentinel-padded (all copies)
+    ids         : (T, cap) int32 member ids, -1 in padding slots
+    canon_tiles : (T, cap, 4) canonical copies only (others sentineled)
+    tile_boxes  : (T, 4) partition regions (sentinel for invalid rows)
+    uni         : (4,) dataset universe
+    """
+
+    tiles: jax.Array
+    ids: jax.Array
+    canon_tiles: jax.Array
+    tile_boxes: jax.Array
+    uni: jax.Array
+
+
+def stage(parts: api.Partitioning, mbrs: jax.Array,
+          capacity: int | None = None) -> tuple[StagedLayout, dict]:
+    """MASJ-stage ``mbrs`` under ``parts``; 128-aligned, overflow-checked."""
+    n = mbrs.shape[0]
+    counts, copies = assign.partition_counts(mbrs, parts)
+    if capacity is None:
+        capacity = round_up(max(int(jnp.max(counts)), 1), 128)
+    members, mask, overflow = assign.assign_padded(mbrs, parts, capacity)
+    if int(jnp.sum(overflow)) > 0:
+        raise ValueError(f"staging overflow: capacity {capacity} too small")
+
+    sentinel = jnp.asarray(_SENTINEL)
+    tiles = jnp.where(mask[..., None], mbrs[members], sentinel)
+    ids = jnp.where(mask, members, -1).astype(jnp.int32)
+
+    # canonical mark: first copy of each id in tile-major order wins,
+    # so every object has exactly one canonical slot
+    flat = ids.reshape(-1)
+    order = jnp.argsort(flat, stable=True)
+    s = flat[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    canon = jnp.zeros_like(flat, bool).at[order].set(first & (s >= 0))
+    canon = canon.reshape(ids.shape)
+    canon_tiles = jnp.where(canon[..., None], tiles, sentinel)
+
+    tile_boxes = jnp.where(parts.valid[:, None], parts.boxes, sentinel)
+    layout = StagedLayout(tiles=tiles, ids=ids, canon_tiles=canon_tiles,
+                          tile_boxes=tile_boxes,
+                          uni=geometry.universe(mbrs))
+    stats = dict(
+        n=n, t=int(parts.k()), cap=capacity,
+        replication=float(jnp.sum(counts)) / n - 1.0,
+    )
+    return layout, stats
+
+
+# --------------------------------------------------------------------------
+# query packing (host): fan-out-weighted LPT onto devices
+# --------------------------------------------------------------------------
+
+def pack_queries(costs: np.ndarray, n_devices: int
+                 ) -> tuple[np.ndarray, dict]:
+    """LPT-pack queries onto devices by per-query cost.
+
+    Returns ``(slots[D, Qpd] int32 query indices, stats)``; -1 slots are
+    padding.  Qpd is the max per-device group size, so one straggler
+    hotspot group bounds the step — exactly what LPT minimises.
+    """
+    d = max(1, n_devices)
+    dev, makespan, mean_load = balance.lpt_pack(
+        costs.astype(np.float64), d)
+    groups = [np.flatnonzero(dev == i) for i in range(d)]
+    qpd = max(1, max(len(g) for g in groups))
+    slots = np.full((d, qpd), -1, np.int32)
+    for i, g in enumerate(groups):
+        slots[i, :len(g)] = g
+    stats = dict(makespan=makespan, mean_load=mean_load,
+                 skew=makespan / max(mean_load, 1e-9), qpd=qpd)
+    return slots, stats
+
+
+class SpatialServer:
+    """Stage once, then serve batched range / kNN queries.
+
+    ``mesh=None`` serves in-process; with a mesh, every batch runs as a
+    query-sharded SPMD step over ``mesh[axis]`` with the staged layout
+    replicated (it was built once; queries are the streaming side).
+    """
+
+    def __init__(self, parts: api.Partitioning, mbrs: jax.Array,
+                 mesh: Mesh | None = None, axis: str = "d",
+                 capacity: int | None = None, method: str | None = None):
+        self.parts = parts
+        self.layout, self.stats = stage(parts, mbrs, capacity)
+        self.stats["method"] = method
+        self.mesh, self.axis = mesh, axis
+        self.n_devices = int(mesh.shape[axis]) if mesh is not None else 1
+        self._steps: dict = {}
+
+    @classmethod
+    def from_method(cls, method: str, mbrs: jax.Array, payload: int,
+                    mesh: Mesh | None = None, axis: str = "d",
+                    **kw) -> "SpatialServer":
+        parts = api.partition(method, mbrs, payload)
+        return cls(parts, mbrs, mesh=mesh, axis=axis, method=method, **kw)
+
+    # -- SPMD plumbing ----------------------------------------------------
+
+    def _sharded_call(self, name: str, fn, queries: jax.Array,
+                      costs: np.ndarray, pad_query: np.ndarray):
+        """Run ``fn(local_queries) -> pytree`` query-sharded over the mesh."""
+        if self.mesh is None:
+            return fn(queries), dict(skew=1.0)
+        slots, pstats = pack_queries(costs, self.n_devices)
+        q_np = np.asarray(queries)
+        packed = np.broadcast_to(
+            pad_query, (slots.shape[0], slots.shape[1]) + pad_query.shape
+        ).copy()
+        live = slots >= 0
+        packed[live] = q_np[slots[live]]
+
+        step = self._steps.get(name)
+        if step is None:
+            spec = P(self.axis)
+
+            def spmd(qs):
+                return fn(qs[0])
+
+            step = jax.jit(shard_map(
+                spmd, mesh=self.mesh, in_specs=(spec,), out_specs=spec,
+                check_vma=False))
+            self._steps[name] = step
+
+        sharding = NamedSharding(self.mesh, P(self.axis))
+        out = step(jax.device_put(jnp.asarray(packed), sharding))
+
+        def unpack(x):
+            x = np.asarray(x).reshape((slots.size,) + x.shape[1:])
+            res = np.zeros((len(q_np),) + x.shape[1:], x.dtype)
+            res[slots[live]] = x[live.ravel()]
+            return res
+
+        return jax.tree.map(unpack, out), pstats
+
+    # -- queries ----------------------------------------------------------
+
+    def range_counts(self, qboxes: jax.Array):
+        """Exact unique hit counts; stats carry the fan-out metric."""
+        _, fanout = router.route_range(self.parts, qboxes)
+        fanout_np = np.asarray(fanout)
+        layout = self.layout
+        # dense probe: per-query cost is uniform, so LPT packs by count;
+        # fan-out becomes the cost weight once the local probe is pruned
+        counts, pstats = self._sharded_call(
+            "range_counts",
+            lambda qs: range_mod.range_counts(qs, layout.canon_tiles),
+            qboxes, np.ones(qboxes.shape[0], np.float64), _SENTINEL)
+        stats = dict(fanout_mean=float(fanout_np.mean()),
+                     fanout_max=int(fanout_np.max()), **pstats)
+        return counts, stats
+
+    def range_ids(self, qboxes: jax.Array, max_hits: int = 1024):
+        """Exact unique hit-id sets (ascending, -1 padded) + overflow."""
+        _, fanout = router.route_range(self.parts, qboxes)
+        fanout_np = np.asarray(fanout)
+        layout = self.layout
+        (hit_ids, counts, overflow), pstats = self._sharded_call(
+            f"range_ids_{max_hits}",
+            lambda qs: range_mod.range_ids(qs, layout.canon_tiles,
+                                           layout.ids, max_hits),
+            qboxes, np.ones(qboxes.shape[0], np.float64), _SENTINEL)
+        stats = dict(fanout_mean=float(fanout_np.mean()),
+                     fanout_max=int(fanout_np.max()), **pstats)
+        return hit_ids, counts, overflow, stats
+
+    def knn(self, pts: jax.Array, k: int, max_cand: int = 1024):
+        """Exact batched kNN; fan-out = MINDIST partitions a best-first
+        search would visit given the answered kth distance."""
+        layout = self.layout
+        pad_pt = np.asarray((layout.uni[:2] + layout.uni[2:]) * 0.5)
+        (nn_ids, nn_d2, radius, overflow), pstats = self._sharded_call(
+            f"knn_{k}_{max_cand}",
+            lambda qs: knn_mod.batched_knn(qs, k, layout.canon_tiles,
+                                           layout.ids, layout.uni,
+                                           max_cand=max_cand),
+            pts, np.ones(pts.shape[0], np.float64), pad_pt)
+        fanout = knn_mod.knn_fanout(jnp.asarray(pts),
+                                    jnp.asarray(nn_d2[:, -1]),
+                                    self.parts.boxes, self.parts.valid)
+        stats = dict(fanout_mean=float(jnp.mean(fanout)),
+                     fanout_max=int(jnp.max(fanout)), **pstats)
+        return nn_ids, nn_d2, overflow, stats

@@ -1,0 +1,46 @@
+"""The global partition index (LocationSpark's router, jit form).
+
+For any ``Partitioning`` the router maps a query batch to the
+partitions that must be probed.  There is no tree — with kmax in the
+hundreds-to-thousands a dense vectorised scan of partition boxes beats
+pointer chasing on accelerators — but the *semantics* are the global
+index: range queries route by box overlap, kNN queries get a best-first
+partition ordering by MINDIST.
+
+Per-query fan-out (how many partitions one query touches) is the
+paper's boundary-object cost made workload-facing: replicated boundary
+objects are exactly what forces a range query into multiple partitions,
+so layouts with lower λ route narrower and serve faster.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import geometry
+from ..core.partition.api import Partitioning
+from ..query.knn import mindist2
+
+
+@jax.jit
+def route_range(parts: Partitioning, qboxes: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """(Q, 4) query boxes -> ((Q, kmax) routing mask, (Q,) fan-out)."""
+    mask = geometry.intersects(qboxes[:, None, :], parts.boxes[None, :, :])
+    mask = mask & parts.valid[None, :]
+    return mask, jnp.sum(mask, axis=1, dtype=jnp.int32)
+
+
+@jax.jit
+def route_knn(parts: Partitioning, pts: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """(Q, 2) query points -> best-first partition visit order.
+
+    Returns ``(order[Q, kmax] int32, d2[Q, kmax] f32)``: partitions
+    sorted by ascending MINDIST² (invalid partitions at the end with
+    +inf), the order a branch-and-bound NN search visits them.
+    """
+    d2 = mindist2(pts, parts.boxes)
+    d2 = jnp.where(parts.valid[None, :], d2, jnp.inf)
+    order = jnp.argsort(d2, axis=1).astype(jnp.int32)
+    return order, d2

@@ -1,0 +1,58 @@
+"""range_probe Pallas kernel: shape sweep vs the pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.range_probe import ops, ref
+
+
+def _boxes(key, n, scale=0.1):
+    k1, k2 = jax.random.split(key)
+    c = jax.random.uniform(k1, (n, 2))
+    s = jax.random.uniform(k2, (n, 2)) * scale
+    return jnp.concatenate([c - s, c + s], axis=-1)
+
+
+def _tiles(key, t, cap, scale=0.1):
+    return _boxes(key, t * cap, scale).reshape(t, cap, 4)
+
+
+@pytest.mark.parametrize("q,t,cap", [(1, 1, 1), (7, 3, 50), (128, 4, 128),
+                                     (300, 9, 257), (513, 2, 640)])
+def test_counts_match_ref(q, t, cap):
+    qb = _boxes(jax.random.PRNGKey(q), q, 0.2)
+    tiles = _tiles(jax.random.PRNGKey(t + 1), t, cap)
+    assert bool(jnp.all(ops.probe_counts(qb, tiles)
+                        == ref.probe_counts(qb, tiles)))
+
+
+@pytest.mark.parametrize("q,t,cap", [(5, 2, 30), (130, 3, 140)])
+def test_mask_matches_ref(q, t, cap):
+    qb = _boxes(jax.random.PRNGKey(q), q, 0.2)
+    tiles = _tiles(jax.random.PRNGKey(t), t, cap)
+    got = ops.probe_mask(qb, tiles)
+    want = jnp.swapaxes(ref.probe_mask(qb, tiles), 0, 1)
+    assert bool(jnp.all(got == want))
+
+
+@pytest.mark.parametrize("bq", [128, 256])
+def test_block_shape_sweep(bq):
+    qb = _boxes(jax.random.PRNGKey(0), 700, 0.15)
+    tiles = _tiles(jax.random.PRNGKey(1), 5, 200)
+    assert bool(jnp.all(ops.probe_counts(qb, tiles, bq=bq)
+                        == ref.probe_counts(qb, tiles)))
+
+
+def test_sentinel_padding_never_matches():
+    """Heavy query and member padding must contribute zero hits."""
+    qb = _boxes(jax.random.PRNGKey(4), 3, 0.5)
+    tiles = _tiles(jax.random.PRNGKey(5), 2, 5, 0.5)
+    counts = ops.probe_counts(qb, tiles)
+    assert counts.shape == (3, 2)
+    assert bool(jnp.all(counts == ref.probe_counts(qb, tiles)))
+
+
+def test_touching_boxes_hit():
+    qb = jnp.array([[0.0, 0.0, 1.0, 1.0]])
+    tiles = jnp.array([[[1.0, 1.0, 2.0, 2.0]]])   # shares one corner
+    assert int(ops.probe_counts(qb, tiles)[0, 0]) == 1

@@ -69,17 +69,53 @@ print(json.dumps({'dropped': stats['dropped'],
 
 
 @pytest.mark.slow
+def test_spmd_serving_matches_bruteforce():
+    """Range counts + kNN from the 8-device serving step equal the
+    brute-force oracle, and the fan-out stats survive the packing."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np, json
+from jax.sharding import Mesh
+from repro.data import spatial_gen
+from repro.query import knn as kq, range as rq
+from repro.serve import SpatialServer
+mbrs = spatial_gen.dataset('osm', jax.random.PRNGKey(0), 3000)
+mesh = Mesh(np.array(jax.devices()).reshape(8), ('d',))
+k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+c = jax.random.uniform(k1, (64, 2)); s = jax.random.uniform(k2, (64, 2)) * 0.05
+qb = jnp.concatenate([c - s, c + s], axis=-1)
+pts = jax.random.uniform(jax.random.PRNGKey(2), (64, 2))
+ref = rq.range_query_ref(np.asarray(mbrs), np.asarray(qb))
+want_ids, _ = kq.knn_ref(np.asarray(mbrs), np.asarray(pts), 5)
+res = {}
+for m in ['bsp', 'hc']:
+    srv = SpatialServer.from_method(m, mbrs, 200, mesh=mesh)
+    counts, stats = srv.range_counts(qb)
+    nn_ids, _, _, _ = srv.knn(pts, 5)
+    res[m] = dict(
+        range_ok=bool(all(int(counts[i]) == len(ref[i]) for i in range(64))),
+        knn_ok=bool(np.array_equal(np.asarray(nn_ids), want_ids)),
+        fanout=stats['fanout_mean'], skew=stats['skew'])
+print(json.dumps(res))
+""")
+    res = json.loads(out.strip().splitlines()[-1])
+    for m, r in res.items():
+        assert r["range_ok"] and r["knn_ok"], (m, r)
+        assert r["fanout"] >= 1.0
+
+
+@pytest.mark.slow
 def test_compressed_psum_error_feedback_converges():
     out = _run("""
 import jax, jax.numpy as jnp, numpy as np, json
 from jax.sharding import Mesh, PartitionSpec as P
 from repro.dist.compress import compressed_psum
+from repro.core.compat import shard_map
 mesh = Mesh(np.array(jax.devices()).reshape(8), ('pod',))
 g = {'w': jnp.linspace(-1, 1, 64)}
 def step(t, e):
     return compressed_psum(t, 'pod', e)
-fn = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(P(), P()),
-                           out_specs=(P(), P()), check_vma=False))
+fn = jax.jit(shard_map(step, mesh=mesh, in_specs=(P(), P()),
+                       out_specs=(P(), P()), check_vma=False))
 err = jax.tree.map(jnp.zeros_like, g)
 accum_true = jnp.zeros(64); accum_q = jnp.zeros(64)
 for i in range(20):

@@ -1,0 +1,151 @@
+"""Batched range + kNN vs numpy brute force: exact hit sets and exact
+k-neighbour sets (ties by id) across overlapping (hc/str) and
+non-overlapping (fg/bsp) layouts, on skewed (osm) and uniform (pi) data
+— the acceptance bar for the serving subsystem."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partition import api
+from repro.data import spatial_gen
+from repro.query import knn as knn_mod, range as range_mod
+from repro.serve import engine as serve_engine, router
+
+LAYOUTS = ["hc", "str", "fg", "bsp"]
+DATASETS = ["osm", "pi"]
+
+
+def _qboxes(key, q, scale=0.06):
+    k1, k2 = jax.random.split(key)
+    c = jax.random.uniform(k1, (q, 2))
+    s = jax.random.uniform(k2, (q, 2)) * scale
+    return jnp.concatenate([c - s, c + s], axis=-1)
+
+
+@pytest.fixture(scope="module", params=DATASETS)
+def data(request):
+    mbrs = spatial_gen.dataset(request.param, jax.random.PRNGKey(0), 2500)
+    return mbrs, np.asarray(mbrs)
+
+
+@pytest.fixture(scope="module")
+def staged(data):
+    mbrs, _ = data
+    out = {}
+    for m in LAYOUTS:
+        parts = api.partition(m, mbrs, 150)
+        out[m] = (parts,) + serve_engine.stage(parts, mbrs)
+    return out
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+def test_range_counts_exact(data, staged, method):
+    _, mbrs_np = data
+    _, layout, _ = staged[method]
+    qb = _qboxes(jax.random.PRNGKey(1), 40)
+    counts = range_mod.range_counts(qb, layout.canon_tiles)
+    ref = range_mod.range_query_ref(mbrs_np, np.asarray(qb))
+    assert [int(c) for c in counts] == [len(r) for r in ref]
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+def test_range_hit_sets_exact(data, staged, method):
+    _, mbrs_np = data
+    _, layout, _ = staged[method]
+    qb = _qboxes(jax.random.PRNGKey(2), 40)
+    hit_ids, counts, overflow = range_mod.range_ids(
+        qb, layout.canon_tiles, layout.ids, max_hits=1024)
+    assert not bool(jnp.any(overflow))
+    ref = range_mod.range_query_ref(mbrs_np, np.asarray(qb))
+    for i, want in enumerate(ref):
+        got = np.asarray(hit_ids[i][hit_ids[i] >= 0])
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("method", ["fg", "bsp"])
+def test_range_counts_rp_exact_nonoverlapping(data, staged, method):
+    """Reference-point dedup needs no canonical mark — exact for
+    non-overlapping covering layouts (Table 1), like the join's rp path."""
+    _, mbrs_np = data
+    _, layout, _ = staged[method]
+    qb = _qboxes(jax.random.PRNGKey(3), 40)
+    counts = range_mod.range_counts_rp(qb, layout.tiles, layout.tile_boxes,
+                                       layout.uni)
+    ref = range_mod.range_query_ref(mbrs_np, np.asarray(qb))
+    assert [int(c) for c in counts] == [len(r) for r in ref]
+
+
+@pytest.mark.parametrize("method", ["fg", "bsp"])
+def test_routed_range_counts_exact(data, staged, method):
+    """The pruned path (global-index gather) agrees with brute force when
+    max_fanout is sized from the router."""
+    _, mbrs_np = data
+    parts, layout, _ = staged[method]
+    qb = _qboxes(jax.random.PRNGKey(4), 25)
+    rmask, fanout = router.route_range(parts, qb)
+    counts, overflow = range_mod.routed_range_counts(
+        qb, layout.tiles, layout.tile_boxes, layout.uni, rmask,
+        max_fanout=int(jnp.max(fanout)))
+    assert not bool(jnp.any(overflow))
+    ref = range_mod.range_query_ref(mbrs_np, np.asarray(qb))
+    assert [int(c) for c in counts] == [len(r) for r in ref]
+    # undersized fan-out budget must be flagged, not silent
+    if int(jnp.max(fanout)) > 1:
+        _, overflow = range_mod.routed_range_counts(
+            qb, layout.tiles, layout.tile_boxes, layout.uni, rmask,
+            max_fanout=1)
+        assert bool(jnp.any(overflow))
+        np.testing.assert_array_equal(np.asarray(overflow),
+                                      np.asarray(fanout) > 1)
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+@pytest.mark.parametrize("k", [1, 5])
+def test_knn_exact(data, staged, method, k):
+    _, mbrs_np = data
+    _, layout, _ = staged[method]
+    pts = jax.random.uniform(jax.random.PRNGKey(5), (30, 2))
+    nn_ids, nn_d2, _, overflow = knn_mod.batched_knn(
+        pts, k, layout.canon_tiles, layout.ids, layout.uni)
+    assert not bool(jnp.any(overflow))
+    want_ids, want_d2 = knn_mod.knn_ref(mbrs_np, np.asarray(pts), k)
+    np.testing.assert_array_equal(np.asarray(nn_ids), want_ids)
+    np.testing.assert_allclose(np.asarray(nn_d2), want_d2, rtol=1e-5,
+                               atol=1e-7)
+
+
+def test_knn_tie_break_by_id():
+    """Coincident objects: the k reported neighbours are the lowest ids."""
+    mbrs = jnp.broadcast_to(jnp.array([0.5, 0.5, 0.6, 0.6]), (8, 4))
+    parts = api.partition("fg", mbrs, 4)
+    layout, _ = serve_engine.stage(parts, mbrs)
+    pts = jnp.array([[0.1, 0.1]])
+    nn_ids, _, _, _ = knn_mod.batched_knn(pts, 3, layout.canon_tiles,
+                                          layout.ids, layout.uni)
+    np.testing.assert_array_equal(np.asarray(nn_ids[0]), [0, 1, 2])
+
+
+def test_router_fanout_orders_layouts(data):
+    """Low-replication layouts route narrower (the paper's thesis made a
+    serving metric): fan-out is at least 1 and bounded by k."""
+    mbrs, _ = data
+    qb = _qboxes(jax.random.PRNGKey(6), 50)
+    for m in LAYOUTS:
+        parts = api.partition(m, mbrs, 150)
+        mask, fanout = router.route_range(parts, qb)
+        assert int(jnp.min(fanout)) >= 0
+        assert int(jnp.max(fanout)) <= int(parts.k())
+        assert bool(jnp.all(jnp.sum(mask, axis=1) == fanout))
+
+
+def test_route_knn_orders_by_mindist(data):
+    mbrs, _ = data
+    parts = api.partition("bsp", mbrs, 150)
+    pts = jax.random.uniform(jax.random.PRNGKey(8), (10, 2))
+    order, d2 = router.route_knn(parts, pts)
+    picked = jnp.take_along_axis(d2, order, axis=1)
+    assert bool(jnp.all(picked[:, 1:] >= picked[:, :-1]))  # ascending
+    # valid partitions come first
+    n_valid = int(parts.k())
+    assert bool(jnp.all(jnp.isfinite(picked[:, :n_valid])))

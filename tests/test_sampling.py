@@ -53,3 +53,27 @@ def test_sample_payload_scaling():
     assert res.sample_payload == 30
     # layout granularity ~ full-data granularity
     assert abs(int(res.parts.k()) - 10) <= 2
+
+
+@pytest.mark.parametrize("method", ["hc", "str"])
+def test_nearest_box_fallback_assigns_all_gap_objects(osm, method):
+    """Gap objects from sampled tight-MBR layouts must land in a valid
+    partition, agreeing with a numpy brute-force nearest-center scan."""
+    res = sampling.sampled_partition(method, osm, 200, 0.1,
+                                     jax.random.PRNGKey(4))
+    counts, copies = sampling.evaluate_on_full(res, osm)
+    gaps = np.asarray(copies) == 0
+    assert gaps.any()                      # §5.2: samples leave gaps
+
+    fb = np.asarray(sampling.nearest_box_fallback(osm, res.parts))
+    valid = np.asarray(res.parts.valid)
+    assert fb.min() >= 0 and fb.max() < res.parts.kmax
+    assert valid[fb].all()                 # never a padding partition
+
+    mbrs = np.asarray(osm)
+    c = (mbrs[:, :2] + mbrs[:, 2:]) * 0.5
+    boxes = np.asarray(res.parts.boxes)
+    bc = (boxes[:, :2] + boxes[:, 2:]) * 0.5
+    d2 = np.sum((c[:, None, :] - bc[None, :, :]) ** 2, axis=-1)
+    d2[:, ~valid] = np.inf
+    np.testing.assert_array_equal(fb, np.argmin(d2, axis=1))

@@ -1,0 +1,86 @@
+"""SpatialServer end-to-end: staging invariants, SPMD step on a 1-device
+mesh (multi-device covered in test_multidevice.py), packing, stats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.data import spatial_gen
+from repro.query import knn as knn_mod, range as range_mod
+from repro.serve import SpatialServer, engine as serve_engine
+
+
+def _mesh():
+    return Mesh(np.array(jax.devices()[:1]), ("d",))
+
+
+@pytest.fixture(scope="module")
+def mbrs():
+    return spatial_gen.dataset("osm", jax.random.PRNGKey(0), 2000)
+
+
+@pytest.fixture(scope="module")
+def qboxes():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    c = jax.random.uniform(k1, (30, 2))
+    s = jax.random.uniform(k2, (30, 2)) * 0.07
+    return jnp.concatenate([c - s, c + s], axis=-1)
+
+
+def test_staging_canonical_is_a_partition_of_ids(mbrs):
+    """Every object has exactly one canonical slot; ids/masks agree."""
+    from repro.core.partition import api
+    parts = api.partition("hc", mbrs, 100)   # overlapping, replicated
+    layout, stats = serve_engine.stage(parts, mbrs)
+    ids = np.asarray(layout.ids)
+    canon = np.asarray(layout.canon_tiles[..., 0] < 1e9)  # non-sentinel
+    n = mbrs.shape[0]
+    counts = np.bincount(ids[canon].ravel(), minlength=n)
+    assert ids[canon].min() >= 0
+    np.testing.assert_array_equal(counts, np.ones(n))
+    assert stats["replication"] > 0.0   # hc replicates on this data
+
+
+@pytest.mark.parametrize("mesh", [None, "one"])
+def test_server_matches_bruteforce(mbrs, qboxes, mesh):
+    srv = SpatialServer.from_method("bsp", mbrs, 150,
+                                    mesh=_mesh() if mesh else None)
+    ref = range_mod.range_query_ref(np.asarray(mbrs), np.asarray(qboxes))
+    counts, stats = srv.range_counts(qboxes)
+    assert [int(c) for c in counts] == [len(r) for r in ref]
+    assert stats["fanout_mean"] >= 1.0
+    hit_ids, cnts, ovf, _ = srv.range_ids(qboxes, max_hits=1024)
+    assert not ovf.any()
+    for i, want in enumerate(ref):
+        np.testing.assert_array_equal(
+            np.asarray(hit_ids[i][hit_ids[i] >= 0]), want)
+    pts = jax.random.uniform(jax.random.PRNGKey(3), (12, 2))
+    nn_ids, nn_d2, ovk, kst = srv.knn(pts, 3)
+    want_ids, _ = knn_mod.knn_ref(np.asarray(mbrs), np.asarray(pts), 3)
+    np.testing.assert_array_equal(np.asarray(nn_ids), want_ids)
+    assert kst["fanout_mean"] >= 1.0
+
+
+def test_range_ids_overflow_is_flagged(mbrs, qboxes):
+    srv = SpatialServer.from_method("fg", mbrs, 150)
+    hit_ids, counts, overflow, _ = srv.range_ids(qboxes, max_hits=4)
+    big = np.asarray(counts) > 4
+    assert big.any()                      # the fixture has fat queries
+    np.testing.assert_array_equal(np.asarray(overflow), big)
+
+
+def test_pack_queries_balances_and_covers():
+    costs = np.array([8.0, 1, 1, 1, 1, 1, 1, 6], np.float64)
+    slots, stats = serve_engine.pack_queries(costs, 2)
+    live = slots[slots >= 0]
+    assert sorted(live.tolist()) == list(range(8))   # each query once
+    assert stats["makespan"] < costs.sum()           # actually split
+    assert stats["skew"] < 1.5                       # LPT balances 8|6+rest
+
+
+def test_server_rejects_overflowing_capacity(mbrs):
+    from repro.core.partition import api
+    parts = api.partition("fg", mbrs, 200)
+    with pytest.raises(ValueError, match="overflow"):
+        serve_engine.stage(parts, mbrs, capacity=1)
