@@ -1,8 +1,15 @@
-"""Range/kNN serving throughput and per-query partition fan-out across
-all six layouts — the paper's layout-quality thesis on the workloads of
-§6 (queries/sec from the batched server, fan-out as the boundary-object
-cost made workload-facing)."""
+"""Range/kNN serving throughput across all six layouts × both datasets,
+pruned (routed candidate-tile probe) vs dense (all-tile oracle sweep) —
+the paper's layout-quality thesis measured as queries/sec, not just
+mean fan-out: the better the layout routes, the smaller each query's
+candidate list and the larger the pruned speedup.
+
+``--smoke`` runs a small configuration (CI: exercises the pruned path
+and the exactness assertions on every push without the full timing).
+"""
 from __future__ import annotations
+
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -14,10 +21,8 @@ from repro.serve import SpatialServer
 
 from .common import emit, timeit
 
-N = 6000
-Q = 512
-K = 8
 METHODS = ["fg", "bsp", "slc", "bos", "str", "hc"]
+DATASETS = ["osm", "pi"]
 
 
 def _qboxes(key, q, scale=0.05):
@@ -27,28 +32,41 @@ def _qboxes(key, q, scale=0.05):
     return jnp.concatenate([c - s, c + s], axis=-1)
 
 
-def main() -> None:
-    mbrs = spatial_gen.dataset("osm", jax.random.PRNGKey(0), N)
-    qb = _qboxes(jax.random.PRNGKey(1), Q)
-    pts = jax.random.uniform(jax.random.PRNGKey(2), (Q, 2))
-    ref = range_mod.range_query_ref(np.asarray(mbrs), np.asarray(qb))
-    want = [len(r) for r in ref]
-    for m in METHODS:
-        srv = SpatialServer.from_method(m, mbrs, 300)
-        counts, rstats = srv.range_counts(qb)
-        assert [int(c) for c in counts] == want, m
+def main(smoke: bool = False) -> None:
+    n, q, k, payload = (1200, 128, 4, 100) if smoke else (6000, 512, 8, 120)
+    for ds in DATASETS:
+        mbrs = spatial_gen.dataset(ds, jax.random.PRNGKey(0), n)
+        qb = _qboxes(jax.random.PRNGKey(1), q)
+        pts = jax.random.uniform(jax.random.PRNGKey(2), (q, 2))
+        ref = range_mod.range_query_ref(np.asarray(mbrs), np.asarray(qb))
+        want = [len(r) for r in ref]
+        for m in METHODS:
+            srv = SpatialServer.from_method(m, mbrs, payload)
+            counts, rstats = srv.range_counts(qb)
+            assert [int(c) for c in counts] == want, (ds, m, "pruned")
+            dcounts, _ = srv.range_counts(qb, pruned=False)
+            assert [int(c) for c in dcounts] == want, (ds, m, "dense")
 
-        us = timeit(lambda: srv.range_counts(qb)[0], warmup=1, iters=3)
-        qps = Q / (us * 1e-6)
-        emit(f"range_serve/osm/{m}/q{Q}", us,
-             f"qps={qps:.0f};fanout={rstats['fanout_mean']:.2f}")
+            us_p = timeit(lambda: srv.range_counts(qb)[0],
+                          warmup=1, iters=3)
+            us_d = timeit(lambda: srv.range_counts(qb, pruned=False)[0],
+                          warmup=1, iters=3)
+            emit(f"range_serve/{ds}/{m}/q{q}", us_p,
+                 f"qps={q / (us_p * 1e-6):.0f}"
+                 f";fanout={rstats['fanout_mean']:.2f}"
+                 f";f_max={rstats['f_max']};tiles={srv.stats['t']}"
+                 f";dense_us={us_d:.1f};speedup={us_d / us_p:.2f}")
 
-        _, _, _, kstats = srv.knn(pts, K)
-        us = timeit(lambda: srv.knn(pts, K)[0], warmup=1, iters=3)
-        qps = Q / (us * 1e-6)
-        emit(f"knn_serve/osm/{m}/k{K}", us,
-             f"qps={qps:.0f};fanout={kstats['fanout_mean']:.2f}")
+            _, _, _, kstats = srv.knn(pts, k)
+            us_p = timeit(lambda: srv.knn(pts, k)[0], warmup=1, iters=3)
+            us_d = timeit(lambda: srv.knn(pts, k, pruned=False)[0],
+                          warmup=1, iters=3)
+            emit(f"knn_serve/{ds}/{m}/k{k}", us_p,
+                 f"qps={q / (us_p * 1e-6):.0f}"
+                 f";fanout={kstats['fanout_mean']:.2f}"
+                 f";f_max={kstats['f_max']}"
+                 f";dense_us={us_d:.1f};speedup={us_d / us_p:.2f}")
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv)

@@ -1,7 +1,8 @@
 """Scenario: batched range + kNN serving over a partitioned layout.
 
 Stages an OSM-like dataset once per layout, then streams query batches
-through the SPMD serving step, printing queries/sec and the per-query
+through the SPMD serving step — routed/pruned (the default) vs the
+dense oracle sweep — printing queries/sec for both and the per-query
 partition fan-out that separates the layouts (the paper's
 boundary-object cost, workload-facing).
 
@@ -33,11 +34,16 @@ if __name__ == "__main__":
     for method in ["fg", "bsp", "slc", "bos", "str", "hc"]:
         srv = SpatialServer.from_method(method, mbrs, 500, mesh=mesh)
         srv.range_counts(qboxes)                      # warm the jit cache
+        srv.range_counts(qboxes, pruned=False)
         t0 = time.perf_counter()
-        counts, stats = srv.range_counts(qboxes)
+        counts, stats = srv.range_counts(qboxes)      # routed candidates
         dt = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        srv.range_counts(qboxes, pruned=False)        # dense oracle
+        dt_dense = time.perf_counter() - t0
         nn_ids, _, _, kstats = srv.knn(pts, K)
-        print(f"{method:>4}: range {Q / dt:>9.0f} q/s  "
+        print(f"{method:>4}: pruned {Q / dt:>9.0f} q/s "
+              f"(dense {Q / dt_dense:>9.0f}, f_max {stats['f_max']:>3d})  "
               f"fanout {stats['fanout_mean']:.2f}  "
               f"knn fanout {kstats['fanout_mean']:.2f}  "
               f"replication {srv.stats['replication']:.3f}")

@@ -1,1 +1,10 @@
+"""range_probe: batched query-box vs tiled-layout Pallas kernels.
+
+Dense (``probe_counts`` / ``probe_mask``: every query vs every tile)
+and routed (``gathered_counts`` / ``gathered_mask``: every query vs
+only its ``(Q, F)`` candidate tiles) variants; ``ops`` is the public
+jit'd surface, ``ref`` the pure-jnp oracle, ``kernel`` the raw
+``pallas_call`` layer.  Padding everywhere is the inverted sentinel
+box (xmin > xmax), which intersects nothing.
+"""
 from . import kernel, ops, ref  # noqa: F401

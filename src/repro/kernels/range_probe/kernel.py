@@ -10,16 +10,24 @@ Layout: queries arrive component-major (4, Q); tiles arrive per-tile
 component-major (T, 4, cap) so grid cell (t, i) streams one tile's
 coordinate block and one query block through VMEM.
 
-Two entry points:
+Four entry points:
 - ``count``: grid cell (t, i) reduces its (BQ, cap) hit block over the
   member axis — per-(tile, query) hit counts, O(T×Q) output.  This is
-  the throughput path (count/selectivity queries, kNN deepening).
+  the dense throughput path (count/selectivity queries, kNN deepening).
 - ``mask``: writes the full (BQ, cap) boolean block — used for hit-id
   extraction on moderate tile counts.
+- ``gather_count`` / ``gather_mask``: the **routed** variants.  The
+  caller has already gathered each query's candidate tiles (router
+  output) into a per-query ``(Q, F, 4, cap)`` stack, so grid cell
+  (f, i) streams a (BQ, 1, 4, cap) slab where query row j carries *its
+  own* f-th candidate tile.  Work drops from O(Q·T·cap) to
+  O(Q·F·cap) — the partition-pruning win the paper's fan-out metric
+  predicts, realised as compute instead of a report.
 
-Padding contract (same as mbr_join): callers pad query and member slots
-with *inverted* sentinel boxes (xmin > xmax), which intersect nothing,
-so no validity mask is streamed through VMEM.
+Padding contract (same as mbr_join): callers pad query slots, member
+slots, and absent candidate tiles with *inverted* sentinel boxes
+(xmin > xmax), which intersect nothing, so no validity mask is
+streamed through VMEM.
 """
 from __future__ import annotations
 
@@ -88,3 +96,74 @@ def mask_pallas(q4: jax.Array, tiles: jax.Array, bq: int = DEFAULT_BQ,
         out_shape=jax.ShapeDtypeStruct((t, q, cap), jnp.bool_),
         interpret=interpret,
     )(q4, tiles)
+
+
+def _gather_block_hits(q_ref, g_ref):
+    # query row j of the block is compared against its OWN gathered tile:
+    # g_ref block is (BQ, 1, 4, cap), so every coordinate slab below is
+    # (BQ, cap) with per-row tile data — still rank-1-broadcast VPU work.
+    qx0 = q_ref[0, :][:, None]   # (BQ, 1)
+    qy0 = q_ref[1, :][:, None]
+    qx1 = q_ref[2, :][:, None]
+    qy1 = q_ref[3, :][:, None]
+    sx0 = g_ref[:, 0, 0, :]      # (BQ, cap)
+    sy0 = g_ref[:, 0, 1, :]
+    sx1 = g_ref[:, 0, 2, :]
+    sy1 = g_ref[:, 0, 3, :]
+    return (qx0 <= sx1) & (sx0 <= qx1) & (qy0 <= sy1) & (sy0 <= qy1)
+
+
+def _gather_count_kernel(q_ref, g_ref, out_ref):
+    hits = _gather_block_hits(q_ref, g_ref)
+    out_ref[:, 0] = jnp.sum(hits.astype(jnp.int32), axis=1)
+
+
+def _gather_mask_kernel(q_ref, g_ref, out_ref):
+    out_ref[:, 0, :] = _gather_block_hits(q_ref, g_ref)
+
+
+def gather_count_pallas(q4: jax.Array, gtiles: jax.Array,
+                        bq: int = DEFAULT_BQ,
+                        interpret: bool = False) -> jax.Array:
+    """Routed probe, count form.
+
+    q4: (4, Q) component-major queries; gtiles: (Q, F, 4, cap) each
+    query's gathered candidate tiles (absent candidates = sentinel
+    tiles).  Q % bq == 0, cap % 128 == 0 -> (Q, F) int32 per-(query,
+    candidate) hit counts.
+    """
+    q = q4.shape[1]
+    _, f, _, cap = gtiles.shape
+    grid = (f, q // bq)
+    return pl.pallas_call(
+        _gather_count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, bq), lambda fi, i: (0, i)),
+            pl.BlockSpec((bq, 1, 4, cap), lambda fi, i: (i, fi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, 1), lambda fi, i: (i, fi)),
+        out_shape=jax.ShapeDtypeStruct((q, f), jnp.int32),
+        interpret=interpret,
+    )(q4, gtiles)
+
+
+def gather_mask_pallas(q4: jax.Array, gtiles: jax.Array,
+                       bq: int = DEFAULT_BQ,
+                       interpret: bool = False) -> jax.Array:
+    """Routed probe, mask form: (4, Q) x (Q, F, 4, cap) -> (Q, F, cap)
+    bool hit table (hit-id extraction over candidate tiles only)."""
+    q = q4.shape[1]
+    _, f, _, cap = gtiles.shape
+    grid = (f, q // bq)
+    return pl.pallas_call(
+        _gather_mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, bq), lambda fi, i: (0, i)),
+            pl.BlockSpec((bq, 1, 4, cap), lambda fi, i: (i, fi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, 1, cap), lambda fi, i: (i, fi, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, f, cap), jnp.bool_),
+        interpret=interpret,
+    )(q4, gtiles)

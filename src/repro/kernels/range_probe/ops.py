@@ -1,9 +1,15 @@
-"""Public jit'd wrappers for the range_probe kernel.
+"""Public jit'd wrappers for the range_probe kernels.
 
 Handles padding to block multiples (with never-intersecting sentinel
-boxes), the component-major layouts the kernel wants, and CPU fallback
+boxes), the component-major layouts the kernels want, and CPU fallback
 to interpret mode.  The natural caller is ``repro.serve.engine``, whose
 staged layouts are already sentinel-padded and 128-aligned.
+
+Candidate-list contract (``gathered_*``): ``cand`` is (Q, F) int32 tile
+indices from ``repro.serve.router`` — entries in [0, T) are real tiles,
+``-1`` marks padding slots and is remapped to an all-sentinel tile, so
+padded candidates contribute exactly zero hits and no validity mask is
+needed downstream.
 """
 from __future__ import annotations
 
@@ -60,6 +66,107 @@ def probe_counts(qboxes: jax.Array, tiles: jax.Array,
     t3 = _pad_tiles_cm(tiles.astype(jnp.float32))
     counts = kernel.count_pallas(q4, t3, bq, interpret=interpret)
     return counts.T[:q]
+
+
+def _append_pad_row(table: jax.Array, pad_value) -> tuple[jax.Array, int]:
+    """Append one row of ``pad_value`` to ``table``'s leading axis; the
+    single definition of the '-1 candidate -> pad row' remap target.
+    -> ``(table_p[T+1, ...], t)`` where remapping is
+    ``where(cand >= 0, cand, t)``."""
+    t = table.shape[0]
+    row = jnp.broadcast_to(jnp.asarray(pad_value, table.dtype),
+                           (1,) + table.shape[1:])
+    return jnp.concatenate([table, row], axis=0), t
+
+
+def gathered_rows(tiles: jax.Array, cand: jax.Array) -> jax.Array:
+    """Row-major candidate gather: (T, cap, 4) x (Q, F) -> (Q, F, cap, 4)
+    with -1 candidates remapped to an appended all-sentinel tile (the
+    shared ``SENTINEL_BOX`` contract).  XLA fuses this into a consuming
+    compare, so nothing materialises — the fast non-TPU executor for
+    the gathered probe, also reused by ``query.knn`` for candidate
+    member boxes."""
+    tiles_p, t = _append_pad_row(tiles.astype(jnp.float32), _SENTINEL)
+    return tiles_p[jnp.where(cand >= 0, cand, t)]
+
+
+def gathered_ids(ids: jax.Array, cand: jax.Array) -> jax.Array:
+    """Candidate gather of member ids: (T, cap) int32 x (Q, F) ->
+    (Q, F, cap) with -1 candidates remapped to an appended all ``-1``
+    row — the id-side companion of ``gathered_rows``, so padded
+    candidates read as padding slots downstream."""
+    ids_p, t = _append_pad_row(ids, -1)
+    return ids_p[jnp.where(cand >= 0, cand, t)]
+
+
+def _gather_cm(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
+               bq: int) -> tuple[jax.Array, jax.Array]:
+    """Shared gathered-probe staging: pad queries to a block multiple,
+    remap -1 candidates to an appended all-sentinel tile, and gather the
+    component-major candidate stack.
+
+    -> ``(q4[4, Q_pad], gtiles[Q_pad, F, 4, cap_pad])``.
+    """
+    tiles_p, t = _append_pad_row(tiles.astype(jnp.float32), _SENTINEL)
+    t3 = _pad_tiles_cm(tiles_p)                    # (T+1, 4, cap_pad)
+    q = qboxes.shape[0]
+    pad = (-q) % bq
+    cidx = jnp.where(cand >= 0, cand, t)
+    if pad:
+        cidx = jnp.concatenate(
+            [cidx, jnp.full((pad, cand.shape[1]), t, cidx.dtype)], axis=0)
+    q4 = _pad_queries_cm(qboxes.astype(jnp.float32), bq)
+    return q4, t3[cidx]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def gathered_counts(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
+                    bq: int = kernel.DEFAULT_BQ,
+                    interpret: bool | None = None) -> jax.Array:
+    """Routed probe: per-(query, candidate) hit counts.
+
+    qboxes: (Q, 4); tiles: (T, cap, 4) sentinel-padded member boxes;
+    cand: (Q, F) int32 candidate tile indices (-1 = padding)
+    -> (Q, F) int32.  O(Q·F·cap) work vs the dense O(Q·T·cap).
+
+    ``interpret=None`` picks the backend's best executor: the Pallas
+    kernel on TPU, the fused-jnp gather+compare off-TPU (the gathered
+    layout's blocked interpret-mode kernel is slow on CPU, unlike the
+    dense one).  Pass ``interpret=True`` to force the interpret-mode
+    kernel (validation path); results are identical either way.
+    """
+    if interpret is None and _interpret_default():
+        from . import ref
+        return ref.gathered_counts(qboxes.astype(jnp.float32),
+                                   gathered_rows(tiles, cand))
+    if interpret is None:
+        interpret = False
+    q = qboxes.shape[0]
+    q4, gt = _gather_cm(qboxes, tiles, cand, bq)
+    return kernel.gather_count_pallas(q4, gt, bq, interpret=interpret)[:q]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def gathered_mask(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
+                  bq: int = kernel.DEFAULT_BQ,
+                  interpret: bool | None = None) -> jax.Array:
+    """Routed probe, full hit table over candidate tiles only.
+
+    qboxes: (Q, 4); tiles: (T, cap, 4); cand: (Q, F) int32 (-1 padding)
+    -> (Q, F, cap) bool (un-padded view); slot (j, f, c) is True iff
+    query j intersects member c of its f-th candidate tile.  Executor
+    selection as in ``gathered_counts``.
+    """
+    if interpret is None and _interpret_default():
+        from . import ref
+        return ref.gathered_mask(qboxes.astype(jnp.float32),
+                                 gathered_rows(tiles, cand))
+    if interpret is None:
+        interpret = False
+    q, cap = qboxes.shape[0], tiles.shape[1]
+    q4, gt = _gather_cm(qboxes, tiles, cand, bq)
+    full = kernel.gather_mask_pallas(q4, gt, bq, interpret=interpret)
+    return full[:q, :, :cap]
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))

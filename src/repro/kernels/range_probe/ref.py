@@ -1,4 +1,10 @@
-"""Pure-jnp oracle for the range_probe kernel."""
+"""Pure-jnp oracles for the range_probe kernels.
+
+Shapes mirror the kernels' logical outputs before the ops-layer
+transposes: dense oracles are tile-major, gathered oracles are
+query-major.  Sentinel boxes (xmin > xmax) intersect nothing, so
+padding contributes zero hits by construction.
+"""
 from __future__ import annotations
 
 import jax
@@ -20,3 +26,21 @@ def probe_mask(qboxes: jax.Array, tiles: jax.Array) -> jax.Array:
 def probe_counts(qboxes: jax.Array, tiles: jax.Array) -> jax.Array:
     """(Q, 4) x (T, cap, 4) -> (Q, T) per-(query, tile) hit counts."""
     return jnp.sum(probe_mask(qboxes, tiles).astype(jnp.int32), axis=2).T
+
+
+def gathered_mask(qboxes: jax.Array, gtiles: jax.Array) -> jax.Array:
+    """(Q, 4) x (Q, F, cap, 4) -> (Q, F, cap): query j vs ITS OWN
+    gathered candidate tiles (row-major gather)."""
+    q = qboxes[:, None, None, :]
+    s = gtiles
+    return (
+        (q[..., 0] <= s[..., 2])
+        & (s[..., 0] <= q[..., 2])
+        & (q[..., 1] <= s[..., 3])
+        & (s[..., 1] <= q[..., 3])
+    )
+
+
+def gathered_counts(qboxes: jax.Array, gtiles: jax.Array) -> jax.Array:
+    """(Q, 4) x (Q, F, cap, 4) -> (Q, F) per-candidate hit counts."""
+    return jnp.sum(gathered_mask(qboxes, gtiles).astype(jnp.int32), axis=2)

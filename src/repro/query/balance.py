@@ -13,12 +13,24 @@ import numpy as np
 
 
 def tile_costs(nr: np.ndarray, ns: np.ndarray) -> np.ndarray:
-    """Per-tile join cost  c_i = |R_i|·|S_i|  (§2.3)."""
+    """Per-tile join cost  c_i = |R_i|·|S_i|  (§2.3).
+
+    nr, ns: (T,) per-tile payload counts -> (T,) float64 costs.
+    """
     return nr.astype(np.float64) * ns.astype(np.float64)
 
 
 def lpt_pack(costs: np.ndarray, n_devices: int):
-    """Greedy LPT.  Returns (device[T] int32, makespan, mean_load)."""
+    """Greedy LPT (longest-processing-time-first), a 4/3-approximation
+    to minimum makespan.
+
+    costs: (T,) non-negative weights -> ``(device[T] int32 assignment,
+    makespan float, mean_load float)``.  Equal weights degrade to
+    round-robin placement (ties broken by ascending device id); an
+    all-zero vector leaves everything on device 0 — callers that need
+    spreading regardless (e.g. ``serve.engine.pack_queries``)
+    substitute uniform costs first.
+    """
     t = costs.shape[0]
     order = np.argsort(-costs, kind="stable")
     loads = np.zeros(n_devices, np.float64)
@@ -34,7 +46,11 @@ def lpt_pack(costs: np.ndarray, n_devices: int):
 
 
 def round_robin_pack(costs: np.ndarray, n_devices: int):
-    """Baseline packing (what a naive tile→mapper hash gives you)."""
+    """Baseline packing (what a naive tile→mapper hash gives you).
+
+    Same return contract as ``lpt_pack``; ignores the weights when
+    placing, so the makespan gap to LPT *is* the straggler cost.
+    """
     t = costs.shape[0]
     assignment = (np.arange(t) % n_devices).astype(np.int32)
     loads = np.zeros(n_devices, np.float64)

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 
 def lexsort_pairs(rid: jax.Array, sid: jax.Array) -> jax.Array:
-    """Order permutation sorting (rid, sid) lexicographically (stable)."""
+    """(P,) x (P,) -> (P,) permutation sorting (rid, sid)
+    lexicographically (stable, two-pass int32 argsort)."""
     o1 = jnp.argsort(sid, stable=True)
     o2 = jnp.argsort(rid[o1], stable=True)
     return o1[o2]
@@ -23,7 +24,14 @@ def lexsort_pairs(rid: jax.Array, sid: jax.Array) -> jax.Array:
 
 @jax.jit
 def unique_pairs(rid: jax.Array, sid: jax.Array):
-    """Count + mark unique non-padding pairs.  Padding = (-1, -1)."""
+    """Count + mark unique non-padding pairs.
+
+    rid, sid: (P,) int32 candidate pair ids, (-1, -1) in padding slots
+    -> ``(n_unique scalar int32, uniq[P] bool)`` where ``uniq`` marks
+    the first occurrence of each real pair in the original order.
+    Exact global dedup: with every tile's candidates gathered, the
+    count equals the duplicate-free join cardinality.
+    """
     order = lexsort_pairs(rid, sid)
     r_s, s_s = rid[order], sid[order]
     first = jnp.concatenate([

@@ -45,7 +45,13 @@ class JoinPlan:
 def plan_join(method: str, r: jax.Array, s: jax.Array, payload: int,
               n_devices: int, packer: str = "lpt",
               parts: api.Partitioning | None = None) -> JoinPlan:
-    """Host-side planning: layout, MASJ staging, LPT packing."""
+    """Host-side planning: layout, MASJ staging, LPT packing.
+
+    r, s: (N, 4) / (M, 4) f32 MBRs -> ``JoinPlan`` with device-shaped
+    ``(D, Tpd, cap, 4)`` tile arrays (sentinel-padded, id -1 in padding
+    slots) and packing/λ stats.  Raises nothing on overflow: capacities
+    are sized from the true max tile payload.
+    """
     merged = jnp.concatenate([r, s], axis=0)
     if parts is None:
         parts = api.partition(method, merged, payload)
@@ -142,6 +148,10 @@ def make_count_step(mesh: Mesh, axis: str, uni, dedup: str = "rp"):
 
 def run_join_count(plan: JoinPlan, mesh: Mesh, axis: str = "d",
                    dedup: str = "rp") -> int:
+    """Execute a planned join count SPMD.  With ``dedup='rp'`` the
+    result is the exact duplicate-free pair count for non-overlapping
+    layouts; ``dedup='none'`` returns the raw MASJ count (replicated
+    pairs included)."""
     step = make_count_step(mesh, axis, plan.universe, dedup)
     sharding = NamedSharding(mesh, P(axis))
     args = [jax.device_put(jnp.asarray(x), sharding)

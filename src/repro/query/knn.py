@@ -18,6 +18,13 @@ partitions a best-first search (ordered by MINDIST, à la R*-Grove /
 classic R-tree NN) must visit before the kth distance prunes the rest.
 ``serve.router.route_knn`` produces that ordering; ``knn_fanout`` turns
 an answered batch into the per-query metric.
+
+``pruned_knn`` is the routed executor: deepening and refinement touch
+only each query's ``(Q, F)`` MINDIST-frontier candidate tiles
+(``serve.router.candidate_knn``), with a provable miss check — if the
+final refinement radius reaches the nearest *excluded* tile, the query
+is flagged instead of silently answered, and the server widens the
+frontier and retries.  Exactness is checkable, never assumed.
 """
 from __future__ import annotations
 
@@ -64,6 +71,17 @@ def _qboxes(pts: jax.Array, r: jax.Array) -> jax.Array:
     return jnp.concatenate([pts - rr, pts + rr], axis=-1)
 
 
+def initial_radius(diag, k: int, n_slots: int):
+    """Density-based first deepening radius: the L∞ half-width at which
+    a box is expected to hold ~k of ``n_slots`` uniformly spread
+    objects, floored at diag·1e-6.  Shared by the executors and the
+    server's LPT cost proxy (``serve.engine``) so packing weights match
+    the radius the kernel actually starts from.
+    """
+    r = diag * 0.5 * jnp.sqrt(k / jnp.float32(max(n_slots, 1)))
+    return jnp.maximum(r, diag * 1e-6)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand"))
 def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
                 ids: jax.Array, uni: jax.Array, r0: float | None = None,
@@ -81,11 +99,10 @@ def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     q = pts.shape[0]
     diag = jnp.sqrt(jnp.sum((uni[2:] - uni[:2]) ** 2))
     if r0 is None:
-        n_slots = canon_tiles.shape[0] * canon_tiles.shape[1]
-        r_init = diag * 0.5 * jnp.sqrt(k / jnp.float32(max(n_slots, 1)))
+        r_init = initial_radius(
+            diag, k, canon_tiles.shape[0] * canon_tiles.shape[1])
     else:
-        r_init = jnp.float32(r0)
-    r_init = jnp.maximum(r_init, diag * 1e-6)
+        r_init = jnp.maximum(jnp.float32(r0), diag * 1e-6)
 
     # per-query L∞ radius at which the box provably covers the universe
     # (query points may lie outside it), so deepening always terminates
@@ -134,6 +151,87 @@ def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
 
     nn_ids, nn_d2 = jax.vmap(refine)(pts, flat)
     return nn_ids, nn_d2, r, n_cand > max_cand
+
+
+@functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand"))
+def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
+               ids: jax.Array, uni: jax.Array, cand: jax.Array,
+               excluded: jax.Array, r0: float | None = None,
+               max_rounds: int = 32, max_cand: int = 1024):
+    """Exact batched kNN probing only each query's candidate tiles.
+
+    Same contract as ``batched_knn`` with two extra inputs from
+    ``serve.router.candidate_knn`` over the layout's canonical probe
+    boxes: ``cand`` (Q, F) int32 frontier tile indices (-1 padding) and
+    ``excluded`` (Q,) f32, the L∞ distance of the nearest tile *not* in
+    the frontier (+inf when the frontier holds every tile).
+
+    Returns ``(nn_ids[Q, k] int32, nn_d2[Q, k] f32, radius[Q] f32,
+    overflow[Q] bool)``.  ``overflow`` flags a query when (a) its
+    refinement box held more than ``max_cand`` candidates, or (b) its
+    final L∞ refinement radius reached ``excluded`` — a tile outside
+    the frontier could hold a true neighbour.  Non-flagged answers are
+    exact (ties by id, like the dense path); the server retries flagged
+    queries with a wider frontier.
+
+    Rows with an all ``-1`` candidate list (SPMD padding slots) can
+    never reach k hits; they start at the covering radius so they don't
+    drive the deepening loop, and answer all -1 / +inf.
+    """
+    q = pts.shape[0]
+    dead = jnp.all(cand < 0, axis=1)
+    diag = jnp.sqrt(jnp.sum((uni[2:] - uni[:2]) ** 2))
+    if r0 is None:
+        r_init = initial_radius(
+            diag, k, canon_tiles.shape[0] * canon_tiles.shape[1])
+    else:
+        r_init = jnp.maximum(jnp.float32(r0), diag * 1e-6)
+
+    r_cover = jnp.maximum(
+        jnp.maximum(pts[:, 0] - uni[0], uni[2] - pts[:, 0]),
+        jnp.maximum(pts[:, 1] - uni[1], uni[3] - pts[:, 1]))
+    r_cover = jnp.maximum(r_cover, diag * 1e-6)
+
+    def counts_at(r):
+        return jnp.sum(
+            rops.gathered_counts(_qboxes(pts, r), canon_tiles, cand), axis=1)
+
+    def cond(state):
+        r, counts, i = state
+        return jnp.any((counts < k) & (r < r_cover)) & (i < max_rounds)
+
+    def body(state):
+        r, counts, i = state
+        r = jnp.where(counts < k, jnp.minimum(r * 2.0, r_cover), r)
+        return r, counts_at(r), i + 1
+
+    r = jnp.where(dead, r_cover, jnp.full((q,), r_init, jnp.float32))
+    counts = counts_at(r)
+    r, counts, _ = jax.lax.while_loop(cond, body, (r, counts, jnp.int32(0)))
+
+    # refinement over the frontier only; the √2-inflated box provably
+    # contains all true kNN *unless* it reaches an excluded tile
+    re = r * jnp.sqrt(jnp.float32(2.0))
+    mask = rops.gathered_mask(_qboxes(pts, re), canon_tiles, cand)
+    gids = rops.gathered_ids(ids, cand).reshape(q, -1)          # (Q, F·cap)
+    gboxes = rops.gathered_rows(canon_tiles, cand).reshape(q, -1, 4)
+    flat = mask.reshape(q, -1) & (gids >= 0)
+    n_cand = jnp.sum(flat, axis=1, dtype=jnp.int32)
+
+    def refine(pt, hit, boxes_row, ids_row):
+        slots = jnp.nonzero(hit, size=max_cand, fill_value=-1)[0]
+        live = slots >= 0
+        boxes = boxes_row[jnp.maximum(slots, 0)]
+        cid = jnp.where(live, ids_row[jnp.maximum(slots, 0)], _BIG_ID)
+        d2 = jnp.where(live, mindist2(pt, boxes), _INF)
+        o1 = jnp.argsort(cid)
+        o2 = jnp.argsort(d2[o1], stable=True)
+        order = o1[o2][:k]
+        return jnp.where(d2[order] < _INF, cid[order], -1), d2[order]
+
+    nn_ids, nn_d2 = jax.vmap(refine)(pts, flat, gboxes, gids)
+    overflow = (n_cand > max_cand) | (excluded <= re)
+    return nn_ids, nn_d2, r, overflow
 
 
 def knn_fanout(pts: jax.Array, kth_d2: jax.Array, part_boxes: jax.Array,

@@ -23,9 +23,17 @@ Replication makes dedup the correctness crux (same problem as the join,
   Table-1 split as the join's dedup-mode choice).
 
 The global index (``repro.serve.router``) prunes which tiles a query
-*must* visit; ``routed_range_counts`` exploits it via per-query tile
-gathers, and per-query fan-out is the paper's boundary-object cost
-metric for selection workloads.
+*must* visit, and per-query fan-out is the paper's boundary-object cost
+metric for selection workloads.  Three pruned executors exploit it:
+
+- ``pruned_range_counts`` / ``pruned_range_ids`` (primary): probe only
+  each query's ``(Q, F)`` candidate tiles with the gathered
+  ``range_probe`` kernel, against **canonical** tiles routed on
+  canonical probe boxes — exact unique answers on *all six layouts*
+  (see ``serve.router``), O(Q·F·cap) work instead of O(Q·T·cap).
+- ``routed_range_counts`` (rp variant): candidate gather with
+  reference-point ownership over the *full* tiles — exact for
+  non-overlapping covering layouts without any canonical marking.
 """
 from __future__ import annotations
 
@@ -83,6 +91,60 @@ def range_ids(qboxes: jax.Array, canon_tiles: jax.Array, ids: jax.Array,
     mask = rops.probe_mask(qboxes, canon_tiles)           # (Q, T, cap)
     flat = mask.reshape(q, -1) & (ids.reshape(-1) >= 0)[None, :]
     keyed = jnp.where(flat, ids.reshape(-1)[None, :], _BIG_ID)
+    if keyed.shape[1] < max_hits:          # small layout, wide id budget
+        keyed = jnp.pad(keyed, ((0, 0), (0, max_hits - keyed.shape[1])),
+                        constant_values=_BIG_ID)
+    top = jax.lax.sort(keyed, dimension=1)[:, :max_hits]
+    hit_ids = jnp.where(top < _BIG_ID, top, -1)
+    counts = jnp.sum(flat, axis=1, dtype=jnp.int32)
+    return hit_ids, counts, counts > max_hits
+
+
+# --------------------------------------------------------------------------
+# pruned canonical path (exact for every layout, routed work only)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def pruned_range_counts(qboxes: jax.Array, canon_tiles: jax.Array,
+                        cand: jax.Array) -> jax.Array:
+    """Exact per-query unique hit counts, probing candidate tiles only.
+
+    qboxes: (Q, 4); canon_tiles: (T, cap, 4) canonical-copy member
+    boxes; cand: (Q, F) int32 from ``serve.router.candidate_range``
+    over the layout's canonical probe boxes (-1 = padding slot)
+    -> (Q,) int32.
+
+    Exactness: every canonical copy an un-pruned sweep would hit lives
+    in a tile whose probe box the query overlaps, so a candidate list
+    without overflow loses nothing; padded (-1) candidates gather an
+    all-sentinel tile and contribute zero.
+    """
+    return jnp.sum(rops.gathered_counts(qboxes, canon_tiles, cand), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("max_hits",))
+def pruned_range_ids(qboxes: jax.Array, canon_tiles: jax.Array,
+                     ids: jax.Array, cand: jax.Array, max_hits: int
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Exact per-query unique hit-id sets from candidate tiles only.
+
+    Same contract as ``range_ids`` (ascending ids, -1 padded, overflow
+    flagged past ``max_hits``) at O(Q·F·cap) instead of O(Q·T·cap):
+    ids: (T, cap) int32 (-1 padding); cand: (Q, F) int32 (-1 padding)
+    -> ``(hit_ids[Q, max_hits], counts[Q], overflow[Q])``.
+
+    Uniqueness is free: each object has exactly one canonical slot
+    repo-wide, and a candidate list names distinct tiles, so no id can
+    appear twice in the gathered hit table.
+    """
+    q = qboxes.shape[0]
+    mask = rops.gathered_mask(qboxes, canon_tiles, cand)   # (Q, F, cap)
+    gids = rops.gathered_ids(ids, cand)                    # (Q, F, cap)
+    flat = mask.reshape(q, -1) & (gids.reshape(q, -1) >= 0)
+    keyed = jnp.where(flat, gids.reshape(q, -1), _BIG_ID)
+    if keyed.shape[1] < max_hits:          # narrow gather, wide id budget
+        keyed = jnp.pad(keyed, ((0, 0), (0, max_hits - keyed.shape[1])),
+                        constant_values=_BIG_ID)
     top = jax.lax.sort(keyed, dimension=1)[:, :max_hits]
     hit_ids = jnp.where(top < _BIG_ID, top, -1)
     counts = jnp.sum(flat, axis=1, dtype=jnp.int32)

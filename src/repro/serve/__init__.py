@@ -1,11 +1,16 @@
 """Batched spatial query serving over partitioned layouts.
 
-- ``router``: the global index — jit-compatible query→partition routing
-  (box overlap for range, MINDIST best-first order for kNN) and the
-  per-query partition fan-out metric.
-- ``engine``: stage a dataset once under any ``Partitioning``, then
-  answer streams of range/kNN batches with an SPMD ``shard_map`` step
-  and LPT query packing.
+- ``router``: the global index — jit-compatible query→partition
+  routing and fixed-width ``(Q, F)`` candidate-tile emission (box
+  overlap for range, L∞-MINDIST frontier for kNN) plus the per-query
+  partition fan-out metric.
+- ``engine``: stage a dataset once under any ``Partitioning`` (MASJ
+  tiles + canonical marks + canonical probe boxes), then answer
+  streams of range/kNN batches with an SPMD ``shard_map`` step:
+  fan-out-weighted LPT query packing and pruned candidate-tile probing
+  (dense all-tile sweep kept as the oracle, ``pruned=False``).
+
+See ``docs/ARCHITECTURE.md`` for the full pipeline.
 """
 from . import engine, router  # noqa: F401
 from .engine import SpatialServer, stage  # noqa: F401

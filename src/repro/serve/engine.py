@@ -7,17 +7,25 @@ canonical-copy mark so selection queries dedup for free (see
 ``query.range``) — then streams of query batches are answered by a
 jitted ``shard_map`` step:
 
-  route   — the global index maps the batch to partitions and yields
-            per-query fan-out (the layout-quality metric reported with
-            every answer),
-  pack    — queries are LPT-packed onto devices with fan-out as the
-            cost (the join engine's straggler story, applied to the
+  route   — the global index maps the batch to partitions, yielding the
+            per-query fan-out metric *and* a fixed-width ``(Q, F)``
+            candidate-tile index over the layout's canonical probe
+            boxes (``router.candidate_range`` / ``candidate_knn``),
+  pack    — queries are LPT-packed onto devices with routed fan-out as
+            the cost (the join engine's straggler story, applied to the
             query side: a batch of hotspot queries must not serialise
             on one device),
-  probe   — each device sweeps its query shard over the replicated
-            tile set with the ``range_probe`` Pallas kernel (dense
-            local probe; per-partition local indexes are a later PR),
+  probe   — each device probes its query shard's candidate tiles only,
+            via the gathered ``range_probe`` Pallas kernel — O(Q·F·cap)
+            work; the dense all-tile sweep is kept as the oracle path
+            (``pruned=False``),
   gather  — results come back query-sharded and are unpermuted.
+
+Exactness of the pruned path is never assumed: range candidate lists
+are sized from the batch's true max fan-out, and kNN flags any query
+whose refinement radius reaches a tile outside its frontier, which the
+server retries with a doubled frontier until exact (worst case the
+frontier is every tile — the dense sweep).
 
 Single-process use passes ``mesh=None`` and gets the same jitted maths
 without the collective plumbing.
@@ -43,7 +51,8 @@ _SENTINEL = np.array(geometry.SENTINEL_BOX, np.float32)
 
 
 @partial(jax.tree_util.register_dataclass,
-         data_fields=("tiles", "ids", "canon_tiles", "tile_boxes", "uni"),
+         data_fields=("tiles", "ids", "canon_tiles", "tile_boxes",
+                      "probe_boxes", "uni"),
          meta_fields=())
 @dataclasses.dataclass(frozen=True)
 class StagedLayout:
@@ -53,6 +62,10 @@ class StagedLayout:
     ids         : (T, cap) int32 member ids, -1 in padding slots
     canon_tiles : (T, cap, 4) canonical copies only (others sentineled)
     tile_boxes  : (T, 4) partition regions (sentinel for invalid rows)
+    probe_boxes : (T, 4) tight MBR over each tile's *canonical* member
+                  MBRs (sentinel where a tile holds none) — the box set
+                  the pruned executor routes on; covers every canonical
+                  hit on all six layouts
     uni         : (4,) dataset universe
     """
 
@@ -60,12 +73,18 @@ class StagedLayout:
     ids: jax.Array
     canon_tiles: jax.Array
     tile_boxes: jax.Array
+    probe_boxes: jax.Array
     uni: jax.Array
 
 
 def stage(parts: api.Partitioning, mbrs: jax.Array,
           capacity: int | None = None) -> tuple[StagedLayout, dict]:
-    """MASJ-stage ``mbrs`` under ``parts``; 128-aligned, overflow-checked."""
+    """MASJ-stage ``mbrs`` under ``parts``; 128-aligned, overflow-checked.
+
+    mbrs: (N, 4) f32 -> ``(StagedLayout, stats)``; raises on capacity
+    overflow (never silently drops members).  ``stats['replication']``
+    is the paper's λ.
+    """
     n = mbrs.shape[0]
     counts, copies = assign.partition_counts(mbrs, parts)
     if capacity is None:
@@ -88,12 +107,22 @@ def stage(parts: api.Partitioning, mbrs: jax.Array,
     canon = canon.reshape(ids.shape)
     canon_tiles = jnp.where(canon[..., None], tiles, sentinel)
 
+    # canonical probe boxes: sentinel slots are min/max-neutral, and an
+    # all-sentinel tile collapses back to the sentinel box
+    probe_boxes = jnp.concatenate(
+        [jnp.min(canon_tiles[..., :2], axis=1),
+         jnp.max(canon_tiles[..., 2:], axis=1)], axis=-1)
+
     tile_boxes = jnp.where(parts.valid[:, None], parts.boxes, sentinel)
     layout = StagedLayout(tiles=tiles, ids=ids, canon_tiles=canon_tiles,
-                          tile_boxes=tile_boxes,
+                          tile_boxes=tile_boxes, probe_boxes=probe_boxes,
                           uni=geometry.universe(mbrs))
     stats = dict(
         n=n, t=int(parts.k()), cap=capacity,
+        # tiles holding >= 1 canonical member: the widest candidate list
+        # the pruned executor can ever need (<= t, since padding rows and
+        # canonically-empty tiles probe as sentinel)
+        t_live=int(jnp.sum(probe_boxes[:, 0] <= probe_boxes[:, 2])),
         replication=float(jnp.sum(counts)) / n - 1.0,
     )
     return layout, stats
@@ -107,13 +136,21 @@ def pack_queries(costs: np.ndarray, n_devices: int
                  ) -> tuple[np.ndarray, dict]:
     """LPT-pack queries onto devices by per-query cost.
 
-    Returns ``(slots[D, Qpd] int32 query indices, stats)``; -1 slots are
+    costs: (Q,) — routed fan-out on the pruned path, so hotspot queries
+    spread across devices instead of serialising one of them.  Returns
+    ``(slots[D, Qpd] int32 query indices, stats)``; -1 slots are
     padding.  Qpd is the max per-device group size, so one straggler
     hotspot group bounds the step — exactly what LPT minimises.
+
+    A degenerate all-zero cost vector falls back to uniform costs (LPT
+    with equal weights round-robins), so queries still spread across
+    devices instead of piling onto device 0.
     """
     d = max(1, n_devices)
-    dev, makespan, mean_load = balance.lpt_pack(
-        costs.astype(np.float64), d)
+    costs = costs.astype(np.float64)
+    if costs.size and not np.any(costs > 0):
+        costs = np.ones_like(costs)
+    dev, makespan, mean_load = balance.lpt_pack(costs, d)
     groups = [np.flatnonzero(dev == i) for i in range(d)]
     qpd = max(1, max(len(g) for g in groups))
     slots = np.full((d, qpd), -1, np.int32)
@@ -124,23 +161,36 @@ def pack_queries(costs: np.ndarray, n_devices: int
     return slots, stats
 
 
+def _f_width(fanout_max: int, t: int) -> int:
+    """Candidate-list width: max batch fan-out rounded up to 8 (bounds
+    jit recompiles to one per width bucket), capped at the tile count."""
+    return min(max(t, 1), round_up(max(fanout_max, 1), 8))
+
+
 class SpatialServer:
     """Stage once, then serve batched range / kNN queries.
 
-    ``mesh=None`` serves in-process; with a mesh, every batch runs as a
-    query-sharded SPMD step over ``mesh[axis]`` with the staged layout
-    replicated (it was built once; queries are the streaming side).
+    ``pruned=True`` (default) routes every batch through the global
+    index and probes only candidate tiles — exact on all six layouts,
+    answers identical to ``pruned=False`` (the dense all-tile oracle
+    sweep).  ``mesh=None`` serves in-process; with a mesh, every batch
+    runs as a query-sharded SPMD step over ``mesh[axis]`` with the
+    staged layout replicated (it was built once; queries are the
+    streaming side).  Per-call ``pruned=`` overrides the default.
     """
 
     def __init__(self, parts: api.Partitioning, mbrs: jax.Array,
                  mesh: Mesh | None = None, axis: str = "d",
-                 capacity: int | None = None, method: str | None = None):
+                 capacity: int | None = None, method: str | None = None,
+                 pruned: bool = True):
         self.parts = parts
         self.layout, self.stats = stage(parts, mbrs, capacity)
         self.stats["method"] = method
         self.mesh, self.axis = mesh, axis
+        self.pruned = pruned
         self.n_devices = int(mesh.shape[axis]) if mesh is not None else 1
         self._steps: dict = {}
+        self._knn_f: dict = {}     # (k, max_cand) -> converged frontier
 
     @classmethod
     def from_method(cls, method: str, mbrs: jax.Array, payload: int,
@@ -151,87 +201,191 @@ class SpatialServer:
 
     # -- SPMD plumbing ----------------------------------------------------
 
-    def _sharded_call(self, name: str, fn, queries: jax.Array,
-                      costs: np.ndarray, pad_query: np.ndarray):
-        """Run ``fn(local_queries) -> pytree`` query-sharded over the mesh."""
+    def _sharded_call(self, name: str, fn, qarrays: tuple,
+                      costs: np.ndarray, pads: tuple):
+        """Run ``fn(*per_query_arrays) -> pytree`` query-sharded.
+
+        Every array in ``qarrays`` is leading-axis (Q, ...); ``pads``
+        gives the matching padding element for the slots LPT leaves
+        empty.  The jitted step is cached under ``name`` (callers embed
+        shape-determining params such as the candidate width).
+        """
         if self.mesh is None:
-            return fn(queries), dict(skew=1.0)
+            return fn(*qarrays), dict(skew=1.0)
         slots, pstats = pack_queries(costs, self.n_devices)
-        q_np = np.asarray(queries)
-        packed = np.broadcast_to(
-            pad_query, (slots.shape[0], slots.shape[1]) + pad_query.shape
-        ).copy()
         live = slots >= 0
-        packed[live] = q_np[slots[live]]
+        packed = []
+        for arr, pad in zip(qarrays, pads):
+            a = np.asarray(arr)
+            pad = np.asarray(pad, a.dtype)
+            p = np.broadcast_to(
+                pad, (slots.shape[0], slots.shape[1]) + pad.shape).copy()
+            p[live] = a[slots[live]]
+            packed.append(p)
 
         step = self._steps.get(name)
         if step is None:
             spec = P(self.axis)
 
-            def spmd(qs):
-                return fn(qs[0])
+            def spmd(*qs):
+                return fn(*(x[0] for x in qs))
 
             step = jax.jit(shard_map(
-                spmd, mesh=self.mesh, in_specs=(spec,), out_specs=spec,
-                check_vma=False))
+                spmd, mesh=self.mesh, in_specs=(spec,) * len(qarrays),
+                out_specs=spec, check_vma=False))
             self._steps[name] = step
 
         sharding = NamedSharding(self.mesh, P(self.axis))
-        out = step(jax.device_put(jnp.asarray(packed), sharding))
+        out = step(*(jax.device_put(jnp.asarray(p), sharding)
+                     for p in packed))
 
         def unpack(x):
             x = np.asarray(x).reshape((slots.size,) + x.shape[1:])
-            res = np.zeros((len(q_np),) + x.shape[1:], x.dtype)
+            res = np.zeros((qarrays[0].shape[0],) + x.shape[1:], x.dtype)
             res[slots[live]] = x[live.ravel()]
             return res
 
         return jax.tree.map(unpack, out), pstats
 
+    # -- routing helpers (host side, per batch) ---------------------------
+
+    def _route_batch(self, qboxes: jax.Array):
+        """Candidate-tile index for one range batch: f_max is sized from
+        the batch's true max probe fan-out, so the pruned answer never
+        truncates.  Returns ``(cand[Q, F], costs[Q], F)``."""
+        hit = router.probe_overlap(self.layout.probe_boxes, qboxes)
+        pf = np.asarray(jnp.sum(hit, axis=1, dtype=jnp.int32))
+        f = _f_width(int(pf.max(initial=0)), self.stats["t_live"])
+        cand, _, _ = router.candidates_from_overlap(hit, f)
+        return cand, pf.astype(np.float64), f
+
+    def _fanout_stats(self, qboxes: jax.Array) -> dict:
+        """The paper's reported metric: region fan-out from the global
+        index (independent of the executor's probe-box routing)."""
+        _, fanout = router.route_range(self.parts, qboxes)
+        fanout_np = np.asarray(fanout)
+        return dict(fanout_mean=float(fanout_np.mean()),
+                    fanout_max=int(fanout_np.max()))
+
     # -- queries ----------------------------------------------------------
 
-    def range_counts(self, qboxes: jax.Array):
-        """Exact unique hit counts; stats carry the fan-out metric."""
-        _, fanout = router.route_range(self.parts, qboxes)
-        fanout_np = np.asarray(fanout)
+    def range_counts(self, qboxes: jax.Array, pruned: bool | None = None):
+        """Exact unique hit counts -> ``((Q,) int32, stats)``.
+
+        stats carry the region fan-out metric, the packing skew, and
+        ``mode``/``f_max`` describing the executor that ran.
+        """
         layout = self.layout
-        # dense probe: per-query cost is uniform, so LPT packs by count;
-        # fan-out becomes the cost weight once the local probe is pruned
-        counts, pstats = self._sharded_call(
-            "range_counts",
-            lambda qs: range_mod.range_counts(qs, layout.canon_tiles),
-            qboxes, np.ones(qboxes.shape[0], np.float64), _SENTINEL)
-        stats = dict(fanout_mean=float(fanout_np.mean()),
-                     fanout_max=int(fanout_np.max()), **pstats)
+        stats = self._fanout_stats(qboxes)
+        use_pruned = self.pruned if pruned is None else pruned
+        if use_pruned:
+            cand, costs, f = self._route_batch(qboxes)
+            counts, pstats = self._sharded_call(
+                f"range_counts_pruned_{f}",
+                lambda qs, cd: range_mod.pruned_range_counts(
+                    qs, layout.canon_tiles, cd),
+                (qboxes, cand), costs,
+                (_SENTINEL, np.full((f,), -1, np.int32)))
+            stats.update(mode="pruned", f_max=f, **pstats)
+        else:
+            counts, pstats = self._sharded_call(
+                "range_counts",
+                lambda qs: range_mod.range_counts(qs, layout.canon_tiles),
+                (qboxes,), np.ones(qboxes.shape[0], np.float64),
+                (_SENTINEL,))
+            stats.update(mode="dense", **pstats)
         return counts, stats
 
-    def range_ids(self, qboxes: jax.Array, max_hits: int = 1024):
-        """Exact unique hit-id sets (ascending, -1 padded) + overflow."""
-        _, fanout = router.route_range(self.parts, qboxes)
-        fanout_np = np.asarray(fanout)
+    def range_ids(self, qboxes: jax.Array, max_hits: int = 1024,
+                  pruned: bool | None = None):
+        """Exact unique hit-id sets (ascending, -1 padded) + overflow
+        -> ``(hit_ids[Q, max_hits], counts[Q], overflow[Q], stats)``."""
         layout = self.layout
-        (hit_ids, counts, overflow), pstats = self._sharded_call(
-            f"range_ids_{max_hits}",
-            lambda qs: range_mod.range_ids(qs, layout.canon_tiles,
-                                           layout.ids, max_hits),
-            qboxes, np.ones(qboxes.shape[0], np.float64), _SENTINEL)
-        stats = dict(fanout_mean=float(fanout_np.mean()),
-                     fanout_max=int(fanout_np.max()), **pstats)
+        stats = self._fanout_stats(qboxes)
+        use_pruned = self.pruned if pruned is None else pruned
+        if use_pruned:
+            cand, costs, f = self._route_batch(qboxes)
+            (hit_ids, counts, overflow), pstats = self._sharded_call(
+                f"range_ids_pruned_{f}_{max_hits}",
+                lambda qs, cd: range_mod.pruned_range_ids(
+                    qs, layout.canon_tiles, layout.ids, cd, max_hits),
+                (qboxes, cand), costs,
+                (_SENTINEL, np.full((f,), -1, np.int32)))
+            stats.update(mode="pruned", f_max=f, **pstats)
+        else:
+            (hit_ids, counts, overflow), pstats = self._sharded_call(
+                f"range_ids_{max_hits}",
+                lambda qs: range_mod.range_ids(qs, layout.canon_tiles,
+                                               layout.ids, max_hits),
+                (qboxes,), np.ones(qboxes.shape[0], np.float64),
+                (_SENTINEL,))
+            stats.update(mode="dense", **pstats)
         return hit_ids, counts, overflow, stats
 
-    def knn(self, pts: jax.Array, k: int, max_cand: int = 1024):
-        """Exact batched kNN; fan-out = MINDIST partitions a best-first
-        search would visit given the answered kth distance."""
+    def knn(self, pts: jax.Array, k: int, max_cand: int = 1024,
+            pruned: bool | None = None):
+        """Exact batched kNN -> ``(nn_ids[Q, k], nn_d2[Q, k],
+        overflow[Q], stats)``; reported fan-out = MINDIST partitions a
+        best-first search would visit given the answered kth distance.
+
+        The pruned executor starts from a density-sized MINDIST
+        frontier and doubles it for any batch whose refinement radius
+        reached an excluded tile, so returned answers match the dense
+        oracle exactly; ``stats['retries']`` counts the widenings.
+        """
         layout = self.layout
+        t, cap = layout.ids.shape
+        t_live = self.stats["t_live"]
         pad_pt = np.asarray((layout.uni[:2] + layout.uni[2:]) * 0.5)
-        (nn_ids, nn_d2, radius, overflow), pstats = self._sharded_call(
-            f"knn_{k}_{max_cand}",
-            lambda qs: knn_mod.batched_knn(qs, k, layout.canon_tiles,
-                                           layout.ids, layout.uni,
-                                           max_cand=max_cand),
-            pts, np.ones(pts.shape[0], np.float64), pad_pt)
+        use_pruned = self.pruned if pruned is None else pruned
+        if use_pruned:
+            n = self.stats["n"]
+            # frontier wide enough that ~4k canonical objects fit under
+            # it; converged widths are remembered per (k, max_cand) so a
+            # steady query stream pays the widening ladder only once
+            f = self._knn_f.get(
+                (k, max_cand),
+                _f_width(4 * k * t_live // max(n, 1) + 3, t_live))
+            retries = 0
+            while True:
+                cand, dist, excl = router.candidate_knn(
+                    layout.probe_boxes, pts, f)
+                # cost proxy: tiles the first deepening box would touch
+                diag = float(np.linalg.norm(
+                    np.asarray(layout.uni[2:] - layout.uni[:2])))
+                r0 = float(knn_mod.initial_radius(
+                    jnp.float32(diag), k, t * cap))
+                costs = 1.0 + np.sum(np.asarray(dist) <= r0, axis=1)
+                (nn_ids, nn_d2, radius, overflow), pstats = \
+                    self._sharded_call(
+                        f"knn_pruned_{k}_{max_cand}_{f}",
+                        lambda qs, cd, ex: knn_mod.pruned_knn(
+                            qs, k, layout.canon_tiles, layout.ids,
+                            layout.uni, cd, ex, max_cand=max_cand),
+                        (pts, cand, excl),
+                        costs.astype(np.float64),
+                        (pad_pt, np.full((f,), -1, np.int32),
+                         np.float32(np.inf)))
+                miss = (np.asarray(excl)
+                        <= np.asarray(radius) * np.sqrt(2.0))
+                if not miss.any() or f >= t_live:
+                    break
+                f = _f_width(2 * f, t_live)
+                retries += 1
+            self._knn_f[(k, max_cand)] = f
+            mode_stats = dict(mode="pruned", f_max=f, retries=retries,
+                              **pstats)
+        else:
+            (nn_ids, nn_d2, radius, overflow), pstats = self._sharded_call(
+                f"knn_{k}_{max_cand}",
+                lambda qs: knn_mod.batched_knn(qs, k, layout.canon_tiles,
+                                               layout.ids, layout.uni,
+                                               max_cand=max_cand),
+                (pts,), np.ones(pts.shape[0], np.float64), (pad_pt,))
+            mode_stats = dict(mode="dense", **pstats)
         fanout = knn_mod.knn_fanout(jnp.asarray(pts),
                                     jnp.asarray(nn_d2[:, -1]),
                                     self.parts.boxes, self.parts.valid)
         stats = dict(fanout_mean=float(jnp.mean(fanout)),
-                     fanout_max=int(jnp.max(fanout)), **pstats)
+                     fanout_max=int(jnp.max(fanout)), **mode_stats)
         return nn_ids, nn_d2, overflow, stats

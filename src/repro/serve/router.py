@@ -11,8 +11,28 @@ Per-query fan-out (how many partitions one query touches) is the
 paper's boundary-object cost made workload-facing: replicated boundary
 objects are exactly what forces a range query into multiple partitions,
 so layouts with lower λ route narrower and serve faster.
+
+Two box sets can be routed against:
+
+- **partition regions** (``Partitioning.boxes``) — the paper's fan-out
+  metric, reported with every answer (``route_range`` / ``route_knn``);
+- **canonical probe boxes** (``StagedLayout.probe_boxes``: per-tile
+  tight MBR over *canonical* member MBRs) — what the pruned executor
+  routes on (``candidate_range`` / ``candidate_knn``).  If a query box
+  intersects an object's MBR, it intersects the probe box of the tile
+  holding that object's canonical copy, so routing on probe boxes
+  covers every canonical hit on **all six layouts** — overlapping
+  tight-MBR and disjoint covering alike — and pruned probing of only
+  the candidate tiles stays exact with zero dedup work.
+
+Candidate lists are fixed-width ``(Q, f_max)`` int32 with ``-1``
+padding — the shape the gathered ``range_probe`` kernel consumes — and
+come with per-query fan-out, the cost vector that LPT query packing
+uses (``serve.engine.pack_queries``).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +40,8 @@ import jax.numpy as jnp
 from ..core import geometry
 from ..core.partition.api import Partitioning
 from ..query.knn import mindist2
+
+_INF = jnp.float32(jnp.inf)
 
 
 @jax.jit
@@ -44,3 +66,94 @@ def route_knn(parts: Partitioning, pts: jax.Array
     d2 = jnp.where(parts.valid[None, :], d2, jnp.inf)
     order = jnp.argsort(d2, axis=1).astype(jnp.int32)
     return order, d2
+
+
+# --------------------------------------------------------------------------
+# candidate-tile emission (the pruned executor's input)
+# --------------------------------------------------------------------------
+
+@jax.jit
+def probe_overlap(boxes: jax.Array, qboxes: jax.Array) -> jax.Array:
+    """(T, 4) probe boxes x (Q, 4) queries -> (Q, T) bool overlap
+    matrix.  Sentinel (inverted) boxes intersect nothing, so empty /
+    padded tiles never hit.  Computed once per batch: its row sums are
+    the pruned path's per-query cost (the LPT packing weight) and size
+    ``f_max``, and ``candidates_from_overlap`` turns it into the
+    candidate index without re-testing geometry.
+    """
+    return geometry.intersects(qboxes[:, None, :], boxes[None, :, :])
+
+
+@jax.jit
+def probe_fanout(boxes: jax.Array, qboxes: jax.Array) -> jax.Array:
+    """(T, 4) probe boxes x (Q, 4) queries -> (Q,) int32 overlap
+    fan-out (row sums of ``probe_overlap``)."""
+    return jnp.sum(probe_overlap(boxes, qboxes), axis=1, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("f_max",))
+def candidates_from_overlap(hit: jax.Array, f_max: int
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fixed-width candidate-tile index from an overlap matrix.
+
+    hit: (Q, T) bool from ``probe_overlap``; static ``f_max``
+    -> ``(cand[Q, f_max] int32, fanout[Q] int32, overflow[Q] bool)``.
+
+    ``cand`` holds each query's overlapping tile indices in ascending
+    tile order, ``-1`` beyond its fan-out.  Queries overlapping more
+    than ``f_max`` tiles are truncated and flagged in ``overflow`` —
+    never silently; the server sizes ``f_max`` from the fan-out so
+    overflow does not occur on the exact path.
+    """
+    fanout = jnp.sum(hit, axis=1, dtype=jnp.int32)
+    order = jnp.argsort(~hit, axis=1, stable=True)     # hits first
+    cand = order[:, :f_max].astype(jnp.int32)
+    live = jnp.take_along_axis(hit, cand, axis=1)
+    return jnp.where(live, cand, -1), fanout, fanout > f_max
+
+
+def candidate_range(boxes: jax.Array, qboxes: jax.Array, f_max: int
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-shot ``probe_overlap`` + ``candidates_from_overlap`` (same
+    return contract); callers that already hold the overlap matrix use
+    the two-step form to avoid re-testing O(Q·T) geometry."""
+    return candidates_from_overlap(probe_overlap(boxes, qboxes), f_max)
+
+
+def linf_dist(pts: jax.Array, boxes: jax.Array) -> jax.Array:
+    """L∞ distance, point to closed box: (..., 2) x (T, 4) -> (..., T).
+
+    0 inside the box; +inf for sentinel (inverted) boxes.  This is the
+    kNN frontier metric: the deepening box ``[pt ± r]`` intersects a
+    tile's probe box iff its L∞ distance is ≤ r.
+    """
+    x, y = pts[..., None, 0], pts[..., None, 1]
+    dx = jnp.maximum(jnp.maximum(boxes[..., 0] - x, x - boxes[..., 2]), 0.0)
+    dy = jnp.maximum(jnp.maximum(boxes[..., 1] - y, y - boxes[..., 3]), 0.0)
+    d = jnp.maximum(dx, dy)
+    return jnp.where(boxes[..., 0] <= boxes[..., 2], d, _INF)
+
+
+@functools.partial(jax.jit, static_argnames=("f_max",))
+def candidate_knn(boxes: jax.Array, pts: jax.Array, f_max: int
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """MINDIST frontier: each point's ``f_max`` nearest tiles.
+
+    boxes: (T, 4) probe boxes; pts: (Q, 2); static ``f_max``
+    -> ``(cand[Q, f_max] int32, dist[Q, f_max] f32, excluded[Q] f32)``.
+
+    ``cand`` lists tiles by ascending L∞ distance (``-1`` where fewer
+    than ``f_max`` non-empty tiles exist), ``dist`` the matching
+    distances, and ``excluded`` the L∞ distance of the *nearest tile
+    left out* of the frontier (+inf when nothing is excluded).  A
+    pruned kNN whose final refinement radius reaches ``excluded`` may
+    have missed candidates and must flag overflow — exactness is
+    checkable, never assumed.
+    """
+    d = linf_dist(pts, boxes)                          # (Q, T)
+    order = jnp.argsort(d, axis=1).astype(jnp.int32)
+    ds = jnp.take_along_axis(d, order, axis=1)
+    cand = jnp.where(jnp.isfinite(ds[:, :f_max]), order[:, :f_max], -1)
+    t = boxes.shape[0]
+    excluded = ds[:, f_max] if f_max < t else jnp.full((pts.shape[0],), _INF)
+    return cand, ds[:, :f_max], excluded

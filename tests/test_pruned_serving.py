@@ -1,0 +1,151 @@
+"""Pruned (routed candidate-tile) serving vs the dense oracle and the
+numpy brute force: exact equality across ALL SIX layouts on skewed
+(osm) and uniform (pi) data — the acceptance bar for the routed
+executor — plus router candidate-list contracts and the gathered
+kernel paths feeding it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partition import api
+from repro.data import spatial_gen
+from repro.query import knn as knn_mod, range as range_mod
+from repro.serve import SpatialServer, engine as serve_engine, router
+
+LAYOUTS = ["hc", "str", "fg", "bsp", "slc", "bos"]
+DATASETS = ["osm", "pi"]
+N, NQ, K = 1500, 24, 4
+
+
+def _qboxes(key, q, scale=0.06):
+    k1, k2 = jax.random.split(key)
+    c = jax.random.uniform(k1, (q, 2))
+    s = jax.random.uniform(k2, (q, 2)) * scale
+    return jnp.concatenate([c - s, c + s], axis=-1)
+
+
+@pytest.fixture(scope="module", params=DATASETS)
+def data(request):
+    mbrs = spatial_gen.dataset(request.param, jax.random.PRNGKey(0), N)
+    return mbrs, np.asarray(mbrs)
+
+
+@pytest.fixture(scope="module")
+def servers(data):
+    mbrs, _ = data
+    return {m: SpatialServer.from_method(m, mbrs, 120) for m in LAYOUTS}
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+def test_pruned_range_equals_dense_and_bruteforce(data, servers, method):
+    _, mbrs_np = data
+    srv = servers[method]
+    qb = _qboxes(jax.random.PRNGKey(1), NQ)
+    ref = range_mod.range_query_ref(mbrs_np, np.asarray(qb))
+
+    counts, stats = srv.range_counts(qb)                 # pruned default
+    assert stats["mode"] == "pruned"
+    assert stats["f_max"] <= srv.stats["t"]
+    dcounts, dstats = srv.range_counts(qb, pruned=False)  # dense oracle
+    assert dstats["mode"] == "dense"
+    assert [int(c) for c in counts] == [len(r) for r in ref]
+    assert [int(c) for c in dcounts] == [len(r) for r in ref]
+
+    hit_ids, cnts, ovf, _ = srv.range_ids(qb, max_hits=2048)
+    d_ids, _, d_ovf, _ = srv.range_ids(qb, max_hits=2048, pruned=False)
+    assert not np.asarray(ovf).any() and not np.asarray(d_ovf).any()
+    np.testing.assert_array_equal(np.asarray(hit_ids), np.asarray(d_ids))
+    for i, want in enumerate(ref):
+        got = np.asarray(hit_ids[i])
+        np.testing.assert_array_equal(got[got >= 0], want)
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+def test_pruned_knn_equals_dense_and_bruteforce(data, servers, method):
+    _, mbrs_np = data
+    srv = servers[method]
+    pts = jax.random.uniform(jax.random.PRNGKey(2), (NQ, 2))
+    want_ids, want_d2 = knn_mod.knn_ref(mbrs_np, np.asarray(pts), K)
+
+    nn_ids, nn_d2, ovf, stats = srv.knn(pts, K)
+    assert stats["mode"] == "pruned"
+    assert not np.asarray(ovf).any()
+    np.testing.assert_array_equal(np.asarray(nn_ids), want_ids)
+    np.testing.assert_allclose(np.asarray(nn_d2), want_d2, rtol=1e-5,
+                               atol=1e-7)
+    d_ids, d_d2, _, dstats = srv.knn(pts, K, pruned=False)
+    assert dstats["mode"] == "dense"
+    np.testing.assert_array_equal(np.asarray(nn_ids), np.asarray(d_ids))
+
+
+def test_pruned_range_ids_small_candidate_wide_budget(data, servers):
+    """max_hits larger than the gathered F·cap table must still pad to
+    the contracted width instead of silently narrowing."""
+    mbrs, _ = data
+    srv = servers["fg"]
+    layout = srv.layout
+    qb = _qboxes(jax.random.PRNGKey(3), 4, scale=0.01)
+    cand, _, _ = router.candidate_range(layout.probe_boxes, qb, 1)
+    wide = layout.ids.shape[1] + 128
+    hit_ids, counts, overflow = range_mod.pruned_range_ids(
+        qb, layout.canon_tiles, layout.ids, cand, max_hits=wide)
+    assert hit_ids.shape == (4, wide)
+
+
+def test_candidate_range_truncation_is_flagged(data):
+    """Undersized f_max must flag overflow per query, never silently."""
+    mbrs, _ = data
+    parts = api.partition("fg", mbrs, 120)
+    layout, _ = serve_engine.stage(parts, mbrs)
+    qb = _qboxes(jax.random.PRNGKey(4), 16, scale=0.2)
+    full_fan = np.asarray(router.probe_fanout(layout.probe_boxes, qb))
+    if full_fan.max() <= 1:
+        pytest.skip("fixture produced no multi-tile queries")
+    cand, fanout, overflow = router.candidate_range(
+        layout.probe_boxes, qb, 1)
+    np.testing.assert_array_equal(np.asarray(fanout), full_fan)
+    np.testing.assert_array_equal(np.asarray(overflow), full_fan > 1)
+    assert cand.shape == (16, 1)
+
+
+def test_candidate_knn_frontier_contract(data):
+    """Frontier distances ascend, -1 pads empty tiles, and the excluded
+    distance lower-bounds every tile left out."""
+    mbrs, _ = data
+    parts = api.partition("bsp", mbrs, 120)
+    layout, _ = serve_engine.stage(parts, mbrs)
+    pts = jax.random.uniform(jax.random.PRNGKey(5), (10, 2))
+    t = layout.probe_boxes.shape[0]
+    f = min(4, t)
+    cand, dist, excl = router.candidate_knn(layout.probe_boxes, pts, f)
+    assert cand.shape == (10, f)
+    d = np.asarray(dist)
+    assert np.all(d[:, 1:] >= d[:, :-1] - 1e-7)          # ascending
+    assert np.all(np.asarray(excl) >= d[:, -1] - 1e-7)   # true frontier
+    if f < t:
+        # excluded really is the (f+1)-th smallest distance
+        all_d = np.sort(np.asarray(
+            router.linf_dist(pts, layout.probe_boxes)), axis=1)
+        np.testing.assert_allclose(np.asarray(excl), all_d[:, f], rtol=1e-6)
+
+
+def test_probe_boxes_cover_canonical_members(data):
+    """The staged probe box of every tile contains all its canonical
+    member MBRs — the invariant the pruned path's exactness rests on."""
+    mbrs, _ = data
+    for m in LAYOUTS:
+        parts = api.partition(m, mbrs, 120)
+        layout, _ = serve_engine.stage(parts, mbrs)
+        ct = np.asarray(layout.canon_tiles)
+        pb = np.asarray(layout.probe_boxes)
+        live = ct[..., 0] <= ct[..., 2]                  # non-sentinel
+        for t in range(ct.shape[0]):
+            if not live[t].any():
+                assert pb[t, 0] > pb[t, 2]               # sentinel box
+                continue
+            boxes = ct[t][live[t]]
+            assert np.all(pb[t, 0] <= boxes[:, 0] + 1e-7)
+            assert np.all(pb[t, 1] <= boxes[:, 1] + 1e-7)
+            assert np.all(pb[t, 2] >= boxes[:, 2] - 1e-7)
+            assert np.all(pb[t, 3] >= boxes[:, 3] - 1e-7)

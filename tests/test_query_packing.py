@@ -1,0 +1,50 @@
+"""LPT query packing (`serve.engine.pack_queries`): permutation
+completeness, -1 padding, the greedy makespan bound, and the all-zero
+cost degenerate case (must round-robin, not pile onto device 0)."""
+import numpy as np
+import pytest
+
+from repro.serve import engine as serve_engine
+
+
+@pytest.mark.parametrize("q,d,seed", [(1, 1, 0), (7, 3, 1), (64, 8, 2),
+                                      (100, 7, 3), (5, 8, 4)])
+def test_slots_are_a_permutation_with_minus_one_padding(q, d, seed):
+    """Every query appears exactly once across the slot table; every
+    other slot is exactly -1."""
+    costs = np.random.default_rng(seed).uniform(0.1, 10.0, q)
+    slots, stats = serve_engine.pack_queries(costs, d)
+    assert slots.shape[0] == max(1, d)
+    assert slots.dtype == np.int32
+    live = slots[slots >= 0]
+    assert sorted(live.tolist()) == list(range(q))
+    assert np.all(slots[~(slots >= 0)] == -1)
+    assert stats["qpd"] == slots.shape[1]
+
+
+@pytest.mark.parametrize("q,d,seed", [(40, 4, 0), (33, 5, 1), (16, 2, 2)])
+def test_makespan_within_greedy_bound(q, d, seed):
+    """Greedy list scheduling guarantees makespan ≤ mean + max cost;
+    LPT (sorted greedy) must meet at least that bound."""
+    costs = np.random.default_rng(seed).pareto(1.5, q) + 0.01
+    slots, stats = serve_engine.pack_queries(costs, d)
+    loads = np.array([costs[row[row >= 0]].sum() for row in slots])
+    assert np.isclose(loads.max(), stats["makespan"])
+    assert stats["makespan"] <= costs.sum() / d + costs.max() + 1e-9
+
+
+def test_all_zero_costs_round_robin():
+    """An all-zero cost vector (e.g. every query routed nowhere) must
+    still spread queries evenly instead of piling them on device 0."""
+    slots, stats = serve_engine.pack_queries(np.zeros(10), 4)
+    per_dev = (slots >= 0).sum(axis=1)
+    assert per_dev.max() - per_dev.min() <= 1
+    assert sorted(slots[slots >= 0].tolist()) == list(range(10))
+    assert stats["skew"] <= 1.35   # loads 3,3,2,2 -> makespan/mean = 1.2
+
+
+def test_single_device_takes_everything():
+    slots, stats = serve_engine.pack_queries(np.array([3.0, 1.0, 2.0]), 1)
+    assert slots.shape == (1, 3)
+    assert sorted(slots[0].tolist()) == [0, 1, 2]
+    assert stats["skew"] == pytest.approx(1.0)

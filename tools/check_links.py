@@ -1,0 +1,70 @@
+#!/usr/bin/env python
+"""Markdown link check (CI docs job, stdlib only).
+
+Walks the repo's markdown (README.md, ROADMAP.md, CHANGES.md, PAPER.md,
+PAPERS.md, docs/**) and verifies every *relative* link target exists on
+disk, resolved against the file containing the link.  External
+(http/https/mailto) links and intra-page #anchors are skipped — CI must
+not depend on the network.  Exits non-zero listing every broken link.
+
+    python tools/check_links.py [repo_root]
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+# [text](target) — target captured up to the first unescaped ')'
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(root: pathlib.Path) -> list[pathlib.Path]:
+    tops = ["README.md", "ROADMAP.md", "CHANGES.md", "PAPER.md",
+            "PAPERS.md", "ISSUE.md", "SNIPPETS.md"]
+    files = [root / t for t in tops if (root / t).is_file()]
+    files += sorted((root / "docs").rglob("*.md"))
+    return files
+
+
+def check(root: pathlib.Path) -> list[str]:
+    broken = []
+    for md in md_files(root):
+        text = md.read_text(encoding="utf-8")
+        in_code = False
+        for lineno, line in enumerate(text.splitlines(), 1):
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+            if in_code:
+                continue
+            for m in _LINK.finditer(line):
+                target = m.group(1)
+                if target.startswith(_SKIP_PREFIXES):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                resolved = (md.parent / path).resolve()
+                if not resolved.exists():
+                    broken.append(
+                        f"{md.relative_to(root)}:{lineno}: broken link "
+                        f"-> {target}")
+    return broken
+
+
+def main() -> int:
+    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+    broken = check(root)
+    n_files = len(md_files(root))
+    if broken:
+        print("\n".join(broken))
+        print(f"FAILED: {len(broken)} broken link(s) across "
+              f"{n_files} markdown file(s)", file=sys.stderr)
+        return 1
+    print(f"OK: all relative links valid across {n_files} markdown file(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
