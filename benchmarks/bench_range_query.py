@@ -1,15 +1,27 @@
 """Range/kNN serving throughput across all six layouts × both datasets,
-pruned (routed candidate-tile probe) vs dense (all-tile oracle sweep) —
-the paper's layout-quality thesis measured as queries/sec, not just
-mean fan-out: the better the layout routes, the smaller each query's
-candidate list and the larger the pruned speedup.
+pruned (routed candidate-tile probe) vs dense (all-tile oracle sweep)
+vs sharded (owner-routed all_to_all exchange) — the paper's
+layout-quality thesis measured as queries/sec, not just mean fan-out:
+the better the layout routes, the smaller each query's candidate list
+and the larger the pruned speedup.  Sharded rows also report the
+per-device resident tile bytes the exchange divides by D.
 
-``--smoke`` runs a small configuration (CI: exercises the pruned path
-and the exactness assertions on every push without the full timing).
+``--smoke`` runs a small configuration (CI: exercises the pruned and
+sharded paths and the exactness assertions on every push without the
+full timing).  ``--devices N`` forces N virtual host devices
+(``--xla_force_host_platform_device_count``) so the sharded rows run
+the real mesh exchange; without it the exchange runs in simulation
+over 4 virtual owners.
 """
 from __future__ import annotations
 
+import os
 import sys
+
+if __name__ == "__main__" and "--devices" in sys.argv:
+    _n = int(sys.argv[sys.argv.index("--devices") + 1])
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count={_n}")
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +46,12 @@ def _qboxes(key, q, scale=0.05):
 
 def main(smoke: bool = False) -> None:
     n, q, k, payload = (1200, 128, 4, 100) if smoke else (6000, 512, 8, 120)
+    if jax.device_count() > 1:
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()), ("d",))
+        shards = jax.device_count()
+    else:
+        mesh, shards = None, 4          # exchange in vmap simulation
     for ds in DATASETS:
         mbrs = spatial_gen.dataset(ds, jax.random.PRNGKey(0), n)
         qb = _qboxes(jax.random.PRNGKey(1), q)
@@ -41,31 +59,45 @@ def main(smoke: bool = False) -> None:
         ref = range_mod.range_query_ref(np.asarray(mbrs), np.asarray(qb))
         want = [len(r) for r in ref]
         for m in METHODS:
-            srv = SpatialServer.from_method(m, mbrs, payload)
+            srv = SpatialServer.from_method(m, mbrs, payload, mesh=mesh)
+            ssrv = SpatialServer.from_method(m, mbrs, payload, mesh=mesh,
+                                             sharded=True, shards=shards)
             counts, rstats = srv.range_counts(qb)
             assert [int(c) for c in counts] == want, (ds, m, "pruned")
             dcounts, _ = srv.range_counts(qb, pruned=False)
             assert [int(c) for c in dcounts] == want, (ds, m, "dense")
+            scounts, sstats = ssrv.range_counts(qb)
+            assert [int(c) for c in scounts] == want, (ds, m, "sharded")
 
             us_p = timeit(lambda: srv.range_counts(qb)[0],
                           warmup=1, iters=3)
             us_d = timeit(lambda: srv.range_counts(qb, pruned=False)[0],
+                          warmup=1, iters=3)
+            us_s = timeit(lambda: ssrv.range_counts(qb)[0],
                           warmup=1, iters=3)
             emit(f"range_serve/{ds}/{m}/q{q}", us_p,
                  f"qps={q / (us_p * 1e-6):.0f}"
                  f";fanout={rstats['fanout_mean']:.2f}"
                  f";f_max={rstats['f_max']};tiles={srv.stats['t']}"
                  f";dense_us={us_d:.1f};speedup={us_d / us_p:.2f}")
+            emit(f"range_serve_sharded/{ds}/{m}/q{q}/d{shards}", us_s,
+                 f"qps={q / (us_s * 1e-6):.0f}"
+                 f";msgs={sstats['messages']};f_local={sstats['f_local']}"
+                 f";dev_bytes={ssrv.resident_tile_bytes()}"
+                 f";repl_bytes={srv.resident_tile_bytes()}"
+                 f";mem_ratio={srv.resident_tile_bytes() / max(ssrv.resident_tile_bytes(), 1):.2f}")
 
             _, _, _, kstats = srv.knn(pts, k)
             us_p = timeit(lambda: srv.knn(pts, k)[0], warmup=1, iters=3)
             us_d = timeit(lambda: srv.knn(pts, k, pruned=False)[0],
                           warmup=1, iters=3)
+            us_sk = timeit(lambda: ssrv.knn(pts, k)[0], warmup=1, iters=3)
             emit(f"knn_serve/{ds}/{m}/k{k}", us_p,
                  f"qps={q / (us_p * 1e-6):.0f}"
                  f";fanout={kstats['fanout_mean']:.2f}"
                  f";f_max={kstats['f_max']}"
-                 f";dense_us={us_d:.1f};speedup={us_d / us_p:.2f}")
+                 f";dense_us={us_d:.1f};speedup={us_d / us_p:.2f}"
+                 f";sharded_us={us_sk:.1f}")
 
 
 if __name__ == "__main__":

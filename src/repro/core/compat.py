@@ -23,3 +23,17 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     kw = {_CHECK_KW: check_vma}
     return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **kw)
+
+
+def all_to_all(x, axis_name: str):
+    """Device transpose: ``x[(D, ...)] -> (D, ...)`` where output row
+    ``j`` is what device ``j`` held in *its* row for this device.
+
+    The one exchange shape the serving stack uses (leading axis =
+    mesh-axis size, ``split_axis=concat_axis=0``), wrapped here next to
+    ``shard_map`` so collective call sites survive jax API drift in one
+    place.  ``tiled=True`` keeps the leading axis in place (row ``j``
+    of the result came from device ``j``).
+    """
+    return jax.lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0,
+                              tiled=True)

@@ -1,0 +1,127 @@
+"""Item → device placement (the shared LPT scheduler family).
+
+Two consumers, one cost story: partitions are the paper's unit of
+parallelism, so both the join engine (tiles → devices, §2.3 cost) and
+the serving stack (queries → devices by routed fan-out, and now *tile
+shards* → owner devices by member count) place work with greedy LPT
+(longest-processing-time-first, a 4/3-approximation to makespan) at
+plan time on the host.  Lock-step SPMD cannot absorb stragglers the
+way MapReduce's dynamic task queue does, so the slowest device gates
+every step — balance is a scheduler here, not just a metric.
+
+Tile *sharding* adds a second constraint LPT alone does not give:
+per-device memory.  ``lpt_pack_capped`` bounds the number of items per
+device (R*-Grove's balanced-partition goal applied to placement), and
+``shard_tiles`` uses it with a ``ceil(T/D)`` cap so every device holds
+at most one tile more than an even split — per-device staged memory is
+O(total/D), the property the distributed server's tests assert.
+
+``repro.query.balance`` re-exports the join-facing names for
+compatibility; new code should import from here.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def tile_costs(nr: np.ndarray, ns: np.ndarray) -> np.ndarray:
+    """Per-tile join cost  c_i = |R_i|·|S_i|  (§2.3).
+
+    nr, ns: (T,) per-tile payload counts -> (T,) float64 costs.
+    """
+    return nr.astype(np.float64) * ns.astype(np.float64)
+
+
+def lpt_pack(costs: np.ndarray, n_devices: int):
+    """Greedy LPT (longest-processing-time-first), a 4/3-approximation
+    to minimum makespan.
+
+    costs: (T,) non-negative weights -> ``(device[T] int32 assignment,
+    makespan float, mean_load float)``.  Equal weights degrade to
+    round-robin placement (ties broken by ascending device id); an
+    all-zero vector leaves everything on device 0 — callers that need
+    spreading regardless (e.g. ``serve.engine.pack_queries``)
+    substitute uniform costs first.
+    """
+    t = costs.shape[0]
+    order = np.argsort(-costs, kind="stable")
+    loads = np.zeros(n_devices, np.float64)
+    assignment = np.zeros(t, np.int32)
+    for i in order:
+        d = int(np.argmin(loads))
+        assignment[i] = d
+        loads[d] += costs[i]
+    mean = float(loads.mean()) if n_devices else 0.0
+    return assignment, float(loads.max()), mean
+
+
+def lpt_pack_capped(costs: np.ndarray, n_devices: int, max_per_device: int):
+    """LPT under a per-device item-count cap (capacitated scheduling).
+
+    Same contract as ``lpt_pack`` but no device receives more than
+    ``max_per_device`` items: each item goes to the least-loaded device
+    that still has a free slot.  Raises if ``n_devices·max_per_device``
+    cannot hold every item.  The cap is what turns cost balancing into
+    a *memory* guarantee — with ``max_per_device = ceil(T/D)`` no
+    device stores more than one item over an even split.
+    """
+    t = costs.shape[0]
+    if n_devices * max_per_device < t:
+        raise ValueError(
+            f"cannot place {t} items on {n_devices} devices with "
+            f"cap {max_per_device}")
+    order = np.argsort(-costs, kind="stable")
+    loads = np.zeros(n_devices, np.float64)
+    counts = np.zeros(n_devices, np.int64)
+    assignment = np.zeros(t, np.int32)
+    for i in order:
+        open_ = np.flatnonzero(counts < max_per_device)
+        d = int(open_[np.argmin(loads[open_])])
+        assignment[i] = d
+        loads[d] += costs[i]
+        counts[d] += 1
+    mean = float(loads.mean()) if n_devices else 0.0
+    return assignment, float(loads.max()), mean
+
+
+def round_robin_pack(costs: np.ndarray, n_devices: int):
+    """Baseline packing (what a naive tile→mapper hash gives you).
+
+    Same return contract as ``lpt_pack``; ignores the weights when
+    placing, so the makespan gap to LPT *is* the straggler cost.
+    """
+    t = costs.shape[0]
+    assignment = (np.arange(t) % n_devices).astype(np.int32)
+    loads = np.zeros(n_devices, np.float64)
+    np.add.at(loads, assignment, costs)
+    mean = float(loads.mean()) if n_devices else 0.0
+    return assignment, float(loads.max()), mean
+
+
+def shard_tiles(costs: np.ndarray, n_devices: int
+                ) -> tuple[np.ndarray, np.ndarray, int, dict]:
+    """Assign tiles to owner devices and local shard slots.
+
+    costs: (T,) per-tile weights (member counts for serving shards)
+    -> ``(owner[T] int32, local[T] int32, t_local, stats)``.
+
+    ``owner[t]`` is the device holding tile ``t``; ``local[t]`` its
+    row in that device's ``(t_local, ...)`` shard.  Placement is
+    cost-balanced LPT capped at ``t_local = ceil(T/D)`` items per
+    device, so per-device shard memory is at most one tile over an
+    even split regardless of the cost distribution (an uncapped LPT
+    piles all zero-cost tiles onto one device).  Local slots are
+    assigned in ascending global-tile order per device, so the
+    global → (owner, local) map is deterministic.
+    """
+    t = costs.shape[0]
+    d = max(1, n_devices)
+    t_local = -(-t // d)                       # ceil(T/D)
+    owner, makespan, mean = lpt_pack_capped(costs, d, t_local)
+    local = np.zeros(t, np.int32)
+    for dev in range(d):
+        mine = np.flatnonzero(owner == dev)
+        local[mine] = np.arange(mine.size, dtype=np.int32)
+    stats = dict(t_local=t_local, makespan=makespan, mean_load=mean,
+                 skew=makespan / max(mean, 1e-9))
+    return owner.astype(np.int32), local, t_local, stats

@@ -1,59 +1,17 @@
-"""Tile → device packing (SPMD straggler mitigation).
+"""Tile → device packing (SPMD straggler mitigation) — compat shim.
 
-MapReduce absorbs stragglers with its dynamic task queue; lock-step SPMD
-cannot, so the slowest device gates every step.  We therefore pack tiles
-onto devices with the paper's cost model as the weight — greedy LPT
-(longest-processing-time-first), a 4/3-approximation to makespan — at
-plan time on the host.  This is where the paper's "partition balance
-drives query performance" thesis becomes a scheduler, not just a metric.
+The LPT scheduler family moved to ``repro.core.placement`` when tile
+*sharding* made it a three-way shared concern (join tiles → devices,
+query batches → devices, tile shards → owner devices).  This module
+keeps the historical import path for the join engine and downstream
+users; new code should import ``repro.core.placement`` directly.
 """
 from __future__ import annotations
 
-import numpy as np
-
-
-def tile_costs(nr: np.ndarray, ns: np.ndarray) -> np.ndarray:
-    """Per-tile join cost  c_i = |R_i|·|S_i|  (§2.3).
-
-    nr, ns: (T,) per-tile payload counts -> (T,) float64 costs.
-    """
-    return nr.astype(np.float64) * ns.astype(np.float64)
-
-
-def lpt_pack(costs: np.ndarray, n_devices: int):
-    """Greedy LPT (longest-processing-time-first), a 4/3-approximation
-    to minimum makespan.
-
-    costs: (T,) non-negative weights -> ``(device[T] int32 assignment,
-    makespan float, mean_load float)``.  Equal weights degrade to
-    round-robin placement (ties broken by ascending device id); an
-    all-zero vector leaves everything on device 0 — callers that need
-    spreading regardless (e.g. ``serve.engine.pack_queries``)
-    substitute uniform costs first.
-    """
-    t = costs.shape[0]
-    order = np.argsort(-costs, kind="stable")
-    loads = np.zeros(n_devices, np.float64)
-    assignment = np.zeros(t, np.int32)
-    counts = np.zeros(n_devices, np.int64)
-    for i in order:
-        d = int(np.argmin(loads))
-        assignment[i] = d
-        loads[d] += costs[i]
-        counts[d] += 1
-    mean = float(loads.mean()) if n_devices else 0.0
-    return assignment, float(loads.max()), mean
-
-
-def round_robin_pack(costs: np.ndarray, n_devices: int):
-    """Baseline packing (what a naive tile→mapper hash gives you).
-
-    Same return contract as ``lpt_pack``; ignores the weights when
-    placing, so the makespan gap to LPT *is* the straggler cost.
-    """
-    t = costs.shape[0]
-    assignment = (np.arange(t) % n_devices).astype(np.int32)
-    loads = np.zeros(n_devices, np.float64)
-    np.add.at(loads, assignment, costs)
-    mean = float(loads.mean()) if n_devices else 0.0
-    return assignment, float(loads.max()), mean
+from ..core.placement import (  # noqa: F401
+    lpt_pack,
+    lpt_pack_capped,
+    round_robin_pack,
+    shard_tiles,
+    tile_costs,
+)

@@ -25,6 +25,14 @@ only each query's ``(Q, F)`` MINDIST-frontier candidate tiles
 final refinement radius reaches the nearest *excluded* tile, the query
 is flagged instead of silently answered, and the server widens the
 frontier and retries.  Exactness is checkable, never assumed.
+
+Under tile sharding (``repro.serve.exchange``) each owner device runs
+``knn_partial`` — deepening counts and a local top-k over its shard —
+and the home device reduces with ``merge_knn_partials``: a k-way merge
+keyed by the same ``(distance, id)`` tie-break (``_refine_topk`` is the
+single definition), so sharded answers are bit-identical to the dense
+oracle.  The frontier-miss check is unchanged: the excluded distance
+is global, computed at routing time.
 """
 from __future__ import annotations
 
@@ -82,6 +90,29 @@ def initial_radius(diag, k: int, n_slots: int):
     return jnp.maximum(r, diag * 1e-6)
 
 
+def _refine_topk(k: int, pt: jax.Array, hit: jax.Array,
+                 boxes_row: jax.Array, ids_row: jax.Array, max_cand: int
+                 ) -> tuple[jax.Array, jax.Array]:
+    """One query's exact top-k by ``(distance, id)`` from a hit mask.
+
+    hit: (S,) candidate mask over ``boxes_row``/``ids_row`` (S slots);
+    at most ``max_cand`` set slots are extracted (callers flag the
+    excess) -> ``(ids[k], d2[k])``, missing entries -1 / +inf.  The
+    single definition of the deterministic tie-break shared by the
+    dense, pruned, and sharded-partial executors — bit-identical
+    answers across them hinge on this ordering being one function.
+    """
+    slots = jnp.nonzero(hit, size=max_cand, fill_value=-1)[0]
+    live = slots >= 0
+    boxes = boxes_row[jnp.maximum(slots, 0)]
+    cid = jnp.where(live, ids_row[jnp.maximum(slots, 0)], _BIG_ID)
+    d2 = jnp.where(live, mindist2(pt, boxes), _INF)
+    o1 = jnp.argsort(cid)
+    o2 = jnp.argsort(d2[o1], stable=True)
+    order = o1[o2][:k]
+    return jnp.where(d2[order] < _INF, cid[order], -1), d2[order]
+
+
 @functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand"))
 def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
                 ids: jax.Array, uni: jax.Array, r0: float | None = None,
@@ -137,19 +168,9 @@ def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     n_cand = jnp.sum(flat, axis=1, dtype=jnp.int32)
 
     tiles_flat = canon_tiles.reshape(-1, 4)
-
-    def refine(pt, hit):
-        slots = jnp.nonzero(hit, size=max_cand, fill_value=-1)[0]
-        live = slots >= 0
-        boxes = tiles_flat[jnp.maximum(slots, 0)]
-        cid = jnp.where(live, ids_flat[jnp.maximum(slots, 0)], _BIG_ID)
-        d2 = jnp.where(live, mindist2(pt, boxes), _INF)
-        o1 = jnp.argsort(cid)
-        o2 = jnp.argsort(d2[o1], stable=True)
-        order = o1[o2][:k]
-        return jnp.where(d2[order] < _INF, cid[order], -1), d2[order]
-
-    nn_ids, nn_d2 = jax.vmap(refine)(pts, flat)
+    nn_ids, nn_d2 = jax.vmap(
+        lambda pt, hit: _refine_topk(k, pt, hit, tiles_flat, ids_flat,
+                                     max_cand))(pts, flat)
     return nn_ids, nn_d2, r, n_cand > max_cand
 
 
@@ -210,28 +231,85 @@ def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     r, counts, _ = jax.lax.while_loop(cond, body, (r, counts, jnp.int32(0)))
 
     # refinement over the frontier only; the √2-inflated box provably
-    # contains all true kNN *unless* it reaches an excluded tile
+    # contains all true kNN *unless* it reaches an excluded tile —
+    # the same local extraction the sharded owners run
     re = r * jnp.sqrt(jnp.float32(2.0))
+    nn_ids, nn_d2, n_cand = knn_partial(pts, canon_tiles, ids, cand, re,
+                                        k=k, max_cand=max_cand)
+    overflow = (n_cand > max_cand) | (excluded <= re)
+    return nn_ids, nn_d2, r, overflow
+
+
+# --------------------------------------------------------------------------
+# sharded executor pieces: owner-side partial top-k + home-side k-way merge
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "max_cand"))
+def knn_partial(pts: jax.Array, canon_tiles: jax.Array, ids: jax.Array,
+                cand: jax.Array, re: jax.Array, k: int,
+                max_cand: int = 1024
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Owner-side refinement: local top-k within ``[pt ± re]``.
+
+    pts: (Q, 2) received query points; canon_tiles/ids: this owner's
+    *local* shard; cand: (Q, F) local candidate tile indices (-1
+    padding); re: (Q,) final L∞ refinement radii (already √2-inflated
+    by the caller) -> ``(nn_ids[Q, k], nn_d2[Q, k], n_cand[Q])``.
+
+    Because the true global top-k is contained in the union of
+    per-owner top-k's, exchanging only ``k`` rows per (query, owner)
+    pair loses nothing — ``merge_knn_partials`` re-sorts the union with
+    the same ``(distance, id)`` key, so the merged answer is
+    bit-identical to the dense single-device refinement.  ``n_cand``
+    is this owner's candidate count: local extraction truncates past
+    ``max_cand``, so the caller must flag those queries.
+    """
+    q = pts.shape[0]
     mask = rops.gathered_mask(_qboxes(pts, re), canon_tiles, cand)
-    gids = rops.gathered_ids(ids, cand).reshape(q, -1)          # (Q, F·cap)
+    gids = rops.gathered_ids(ids, cand).reshape(q, -1)
     gboxes = rops.gathered_rows(canon_tiles, cand).reshape(q, -1, 4)
     flat = mask.reshape(q, -1) & (gids >= 0)
     n_cand = jnp.sum(flat, axis=1, dtype=jnp.int32)
+    nn_ids, nn_d2 = jax.vmap(
+        lambda pt, hit, br, ir: _refine_topk(k, pt, hit, br, ir, max_cand)
+    )(pts, flat, gboxes, gids)
+    return nn_ids, nn_d2, n_cand
 
-    def refine(pt, hit, boxes_row, ids_row):
-        slots = jnp.nonzero(hit, size=max_cand, fill_value=-1)[0]
-        live = slots >= 0
-        boxes = boxes_row[jnp.maximum(slots, 0)]
-        cid = jnp.where(live, ids_row[jnp.maximum(slots, 0)], _BIG_ID)
-        d2 = jnp.where(live, mindist2(pt, boxes), _INF)
-        o1 = jnp.argsort(cid)
-        o2 = jnp.argsort(d2[o1], stable=True)
-        order = o1[o2][:k]
-        return jnp.where(d2[order] < _INF, cid[order], -1), d2[order]
 
-    nn_ids, nn_d2 = jax.vmap(refine)(pts, flat, gboxes, gids)
-    overflow = (n_cand > max_cand) | (excluded <= re)
-    return nn_ids, nn_d2, r, overflow
+def merge_knn_partials(pids: jax.Array, pd2: jax.Array, slots: jax.Array,
+                       qpd: int, k: int) -> tuple[jax.Array, jax.Array]:
+    """K-way merge of per-owner top-k frontiers by ``(distance, id)``.
+
+    pids/pd2: (D, M, k) per-owner partial answers (entry (o, m) is
+    owner ``o``'s local top-k for this home's ``m``-th message to it);
+    slots: (D, M) home query slot per message (-1 padding)
+    -> ``(nn_ids[qpd, k], nn_d2[qpd, k])``.
+
+    Each query meets each owner at most once and each canonical id
+    lives on exactly one owner, so scattering the ≤ D partial lists
+    into a per-query ``(D, k)`` table and re-sorting by the shared
+    ``(distance, id)`` key (same two-pass sort as ``_refine_topk``)
+    reproduces the dense tie-break exactly — ids are distinct, the
+    total order is unique, and distances are computed from identical
+    f32 inputs on owners, so the merge is bit-identical to the oracle.
+    """
+    d = pids.shape[0]
+    live = slots >= 0
+    idx = jnp.where(live, slots, qpd)
+    col = jnp.arange(d)[:, None]
+    keyed = jnp.where(live[..., None] & (pids >= 0), pids, _BIG_ID)
+    dk = jnp.where(live[..., None], pd2, _INF)
+    tid = jnp.full((qpd + 1, d, k), _BIG_ID, jnp.int32).at[idx, col].set(keyed)
+    td2 = jnp.full((qpd + 1, d, k), _INF, jnp.float32).at[idx, col].set(dk)
+    fid = tid[:qpd].reshape(qpd, d * k)
+    fd2 = td2[:qpd].reshape(qpd, d * k)
+    o1 = jnp.argsort(fid, axis=1)
+    o2 = jnp.argsort(jnp.take_along_axis(fd2, o1, axis=1), axis=1,
+                     stable=True)
+    order = jnp.take_along_axis(o1, o2, axis=1)[:, :k]
+    d2 = jnp.take_along_axis(fd2, order, axis=1)
+    cid = jnp.take_along_axis(fid, order, axis=1)
+    return jnp.where(d2 < _INF, cid, -1), d2
 
 
 def knn_fanout(pts: jax.Array, kth_d2: jax.Array, part_boxes: jax.Array,

@@ -34,6 +34,13 @@ metric for selection workloads.  Three pruned executors exploit it:
 - ``routed_range_counts`` (rp variant): candidate gather with
   reference-point ownership over the *full* tiles — exact for
   non-overlapping covering layouts without any canonical marking.
+
+When tiles are *sharded* across devices (``repro.serve.exchange``),
+each owner runs the pruned executors above on its local shard only and
+the home device reduces the partials: ``merge_owner_counts`` (plain
+integer sum — canonical copies make hits owner-disjoint) and
+``merge_owner_ids`` (duplicate-free union by one ascending sort).
+Merged answers are bit-identical to the single-device dense sweep.
 """
 from __future__ import annotations
 
@@ -148,6 +155,63 @@ def pruned_range_ids(qboxes: jax.Array, canon_tiles: jax.Array,
     top = jax.lax.sort(keyed, dimension=1)[:, :max_hits]
     hit_ids = jnp.where(top < _BIG_ID, top, -1)
     counts = jnp.sum(flat, axis=1, dtype=jnp.int32)
+    return hit_ids, counts, counts > max_hits
+
+
+# --------------------------------------------------------------------------
+# owner-partial merges (the sharded executor's home-side reduce)
+# --------------------------------------------------------------------------
+
+def merge_owner_counts(partials: jax.Array, slots: jax.Array,
+                       qpd: int) -> jax.Array:
+    """Sum per-owner partial counts back onto home query slots.
+
+    partials: (D, M) int32 — entry (o, m) is owner ``o``'s count for
+    this home's ``m``-th message to it; slots: (D, M) int32 home query
+    slot each message carries (-1 = padding) -> (qpd,) int32.
+
+    Exact because canonical copies partition the id space across tiles
+    and the placement partitions tiles across owners: every hit is
+    counted by exactly one owner, so the merge is a plain integer sum
+    (associative — deterministic under any scatter order).  Dead
+    messages land in a trash row that is sliced off.
+    """
+    live = slots >= 0
+    idx = jnp.where(live, slots, qpd)
+    return jnp.zeros((qpd + 1,), jnp.int32).at[idx].add(
+        jnp.where(live, partials, 0))[:qpd]
+
+
+def merge_owner_ids(pids: jax.Array, pcounts: jax.Array, slots: jax.Array,
+                    qpd: int, max_hits: int
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Union per-owner sorted id partials into the ``range_ids`` contract.
+
+    pids: (D, M, mh) ascending local hit ids (-1 padded) from each
+    owner; pcounts: (D, M) true (untruncated) local counts; slots:
+    (D, M) home query slots (-1 padding) -> ``(hit_ids[qpd, max_hits],
+    counts[qpd], overflow[qpd])``.
+
+    Each query reaches each owner at most once and each canonical id
+    lives on exactly one owner, so the union is duplicate-free: scatter
+    the ≤ D partial lists into a per-query table and one ascending sort
+    yields exactly the dense path's id set.  Local truncation (an owner
+    holding more than ``mh`` hits) implies ``counts > max_hits`` when
+    ``mh == max_hits``, so it is always flagged, never silent.
+    """
+    d, _, mh = pids.shape
+    live = slots >= 0
+    idx = jnp.where(live, slots, qpd)
+    col = jnp.arange(d)[:, None]
+    keyed = jnp.where(live[..., None] & (pids >= 0), pids, _BIG_ID)
+    tbl = jnp.full((qpd + 1, d, mh), _BIG_ID, jnp.int32).at[idx, col].set(keyed)
+    flat = tbl[:qpd].reshape(qpd, d * mh)
+    if flat.shape[1] < max_hits:
+        flat = jnp.pad(flat, ((0, 0), (0, max_hits - flat.shape[1])),
+                       constant_values=_BIG_ID)
+    top = jax.lax.sort(flat, dimension=1)[:, :max_hits]
+    hit_ids = jnp.where(top < _BIG_ID, top, -1)
+    counts = merge_owner_counts(pcounts, slots, qpd)
     return hit_ids, counts, counts > max_hits
 
 

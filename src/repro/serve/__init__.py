@@ -3,14 +3,29 @@
 - ``router``: the global index — jit-compatible query→partition
   routing and fixed-width ``(Q, F)`` candidate-tile emission (box
   overlap for range, L∞-MINDIST frontier for kNN) plus the per-query
-  partition fan-out metric.
+  partition fan-out metric, and the host-side owner translation
+  (``owner_split``) that re-expresses candidate lists in sharded
+  ``(owner device, local tile)`` coordinates.
 - ``engine``: stage a dataset once under any ``Partitioning`` (MASJ
   tiles + canonical marks + canonical probe boxes), then answer
   streams of range/kNN batches with an SPMD ``shard_map`` step:
   fan-out-weighted LPT query packing and pruned candidate-tile probing
   (dense all-tile sweep kept as the oracle, ``pruned=False``).
+  ``sharded=True`` shards the tiles themselves across devices
+  (``stage_sharded`` — capped-LPT placement, O(total/D) per-device
+  memory) and serves through the exchange layer.
+- ``exchange``: the owner-routed ``all_to_all`` serving step — scatter
+  queries to candidate-tile owners, probe local shards, merge partials
+  deterministically; runs under a mesh or in vmap simulation.
 
 See ``docs/ARCHITECTURE.md`` for the full pipeline.
 """
-from . import engine, router  # noqa: F401
-from .engine import SpatialServer, stage  # noqa: F401
+from . import engine, exchange, router  # noqa: F401
+from .engine import (  # noqa: F401
+    ShardedLayout,
+    SpatialServer,
+    StagedLayout,
+    WidthPolicy,
+    stage,
+    stage_sharded,
+)

@@ -21,18 +21,36 @@ jitted ``shard_map`` step:
             (``pruned=False``),
   gather  — results come back query-sharded and are unpermuted.
 
+Two placements of the *data* are supported:
+
+- **replicated** (``sharded=False``): every device holds the full
+  staged layout; only queries are sharded.  Simple, but caps the
+  dataset at one device's memory.
+- **sharded** (``sharded=True``): tiles are placed on owner devices
+  (``stage_sharded`` → capped-LPT ``core.placement.shard_tiles``, per
+  device at most ``ceil(T/D)`` tiles — O(total/D) memory) and each
+  batch runs the owner-routed ``all_to_all`` exchange step
+  (``serve.exchange``): queries travel to the owners of their
+  candidate tiles, owners probe locally, partials merge back at home.
+  Answers are bit-identical to the dense single-device oracle, which
+  stays available per call (``pruned=False``, host-staged on demand).
+
 Exactness of the pruned path is never assumed: range candidate lists
 are sized from the batch's true max fan-out, and kNN flags any query
 whose refinement radius reaches a tile outside its frontier, which the
 server retries with a doubled frontier until exact (worst case the
-frontier is every tile — the dense sweep).
+frontier is every tile — the dense sweep).  Converged candidate widths
+are remembered per query kind (``WidthPolicy``), so steady query
+streams pay recompiles and kNN widening ladders once.
 
 Single-process use passes ``mesh=None`` and gets the same jitted maths
-without the collective plumbing.
+without the collective plumbing (sharded mode then runs the exchange
+in vmap simulation — same answers, one device).
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 from functools import partial
 
 import jax
@@ -40,14 +58,16 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core import geometry
+from ..core import geometry, placement
 from ..core.compat import shard_map
 from ..core.partition import api, assign
 from ..core.partition.assign import round_up
-from ..query import balance, knn as knn_mod, range as range_mod
-from . import router
+from ..query import knn as knn_mod, range as range_mod
+from . import exchange, router
 
 _SENTINEL = np.array(geometry.SENTINEL_BOX, np.float32)
+
+log = logging.getLogger(__name__)
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -128,6 +148,78 @@ def stage(parts: api.Partitioning, mbrs: jax.Array,
     return layout, stats
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardedLayout:
+    """Owner-sharded staging: per-device tile shards + the routing maps.
+
+    canon_shards : (D, T_local, cap, 4) canonical member MBRs, one tile
+                   shard per device (sentinel-padded rows past a
+                   device's tile count) — device-sharded when a mesh is
+                   given, so per-device memory is O(total/D)
+    id_shards    : (D, T_local, cap) int32 member ids (-1 padding)
+    probe_boxes  : (T, 4) *global* canonical probe boxes — routing is a
+                   host-side O(Q·T) scan, so the (small) index stays
+                   replicated while the (large) member data shards
+    uni          : (4,) dataset universe
+    owner        : (T,) int32 host map, global tile -> owner device
+    local        : (T,) int32 host map, global tile -> row in the
+                   owner's shard
+    """
+
+    canon_shards: jax.Array
+    id_shards: jax.Array
+    probe_boxes: jax.Array
+    uni: jax.Array
+    owner: np.ndarray
+    local: np.ndarray
+
+
+def stage_sharded(parts: api.Partitioning, mbrs: jax.Array, n_shards: int,
+                  capacity: int | None = None, mesh: Mesh | None = None,
+                  axis: str = "d"
+                  ) -> tuple[ShardedLayout, tuple, dict]:
+    """Stage ``mbrs`` and shard the tiles across ``n_shards`` owners.
+
+    Placement is cost-balanced capped LPT on per-tile member counts
+    (``core.placement.shard_tiles``): probe cost spreads like the
+    member mass while no device holds more than ``ceil(T/D)`` tiles, so
+    per-device shard memory is at most one tile over an even split.
+    With a mesh the shards are ``device_put`` sharded over ``axis``.
+
+    Returns ``(ShardedLayout, (canon_np, ids_np), stats)`` — the numpy
+    pair is the host-side copy of the *unsharded* canonical staging,
+    kept off-device for the ``pruned=False`` oracle path.
+    """
+    layout, stats = stage(parts, mbrs, capacity)
+    canon_np = np.asarray(layout.canon_tiles)
+    ids_np = np.asarray(layout.ids)
+    t, cap = ids_np.shape
+    d = max(1, int(n_shards))
+    member_counts = (ids_np >= 0).sum(axis=1).astype(np.float64)
+    owner, local, t_local, pstats = placement.shard_tiles(member_counts, d)
+
+    canon_sh = np.broadcast_to(_SENTINEL, (d, t_local, cap, 4)).copy()
+    ids_sh = np.full((d, t_local, cap), -1, np.int32)
+    canon_sh[owner, local] = canon_np
+    ids_sh[owner, local] = ids_np
+    if mesh is not None:
+        # device_put straight from host numpy: no transient full-size
+        # single-device copy — peak per-device memory stays O(total/D)
+        sharding = NamedSharding(mesh, P(axis))
+        canon_shards = jax.device_put(canon_sh, sharding)
+        id_shards = jax.device_put(ids_sh, sharding)
+    else:
+        canon_shards, id_shards = jnp.asarray(canon_sh), jnp.asarray(ids_sh)
+
+    slayout = ShardedLayout(canon_shards=canon_shards, id_shards=id_shards,
+                            probe_boxes=layout.probe_boxes, uni=layout.uni,
+                            owner=owner, local=local)
+    stats = dict(stats, shards=d, t_local=t_local,
+                 shard_bytes=(canon_shards.nbytes + id_shards.nbytes) // d,
+                 placement_skew=pstats["skew"])
+    return slayout, (canon_np, ids_np), stats
+
+
 # --------------------------------------------------------------------------
 # query packing (host): fan-out-weighted LPT onto devices
 # --------------------------------------------------------------------------
@@ -150,7 +242,7 @@ def pack_queries(costs: np.ndarray, n_devices: int
     costs = costs.astype(np.float64)
     if costs.size and not np.any(costs > 0):
         costs = np.ones_like(costs)
-    dev, makespan, mean_load = balance.lpt_pack(costs, d)
+    dev, makespan, mean_load = placement.lpt_pack(costs, d)
     groups = [np.flatnonzero(dev == i) for i in range(d)]
     qpd = max(1, max(len(g) for g in groups))
     slots = np.full((d, qpd), -1, np.int32)
@@ -161,10 +253,83 @@ def pack_queries(costs: np.ndarray, n_devices: int
     return slots, stats
 
 
+def _pack_rows(arr: np.ndarray, slots: np.ndarray, pad) -> np.ndarray:
+    """Scatter per-query rows into the packed (D, Qpd, ...) slot grid,
+    filling -1 slots with ``pad`` (the single definition shared by the
+    replicated and sharded executors)."""
+    a = np.asarray(arr)
+    pad = np.asarray(pad, a.dtype)
+    out = np.broadcast_to(pad, slots.shape + pad.shape).copy()
+    live = slots >= 0
+    out[live] = a[slots[live]]
+    return out
+
+
+def _unpack_rows(x, slots: np.ndarray, n_queries: int) -> np.ndarray:
+    """Invert ``_pack_rows``: (D, Qpd, ...) step output -> per-query
+    rows in original batch order.  (Steps that emit a flat
+    (D·Qpd, ...) leading axis reshape before calling.)"""
+    x = np.asarray(x)
+    x = x.reshape((slots.size,) + x.shape[2:])
+    live = slots >= 0
+    res = np.zeros((n_queries,) + x.shape[1:], x.dtype)
+    res[slots[live]] = x[live.ravel()]
+    return res
+
+
 def _f_width(fanout_max: int, t: int) -> int:
     """Candidate-list width: max batch fan-out rounded up to 8 (bounds
     jit recompiles to one per width bucket), capped at the tile count."""
     return min(max(t, 1), round_up(max(fanout_max, 1), 8))
+
+
+class WidthPolicy:
+    """Adaptive candidate-width cache (ROADMAP: adaptive ``f_max``).
+
+    One policy per server, hence per (layout, dataset); keys are query
+    kinds (``"range"`` or ``("knn", k, max_cand)``).  Widths only move
+    up (``observe`` keeps the max — wider is always exact), and two
+    lookup flavours serve the two consumers:
+
+    - ``at_least(key, floor)`` — range batches: the answer must cover
+      this batch's true fan-out, so return ``max(cached, floor)``; a
+      narrow batch after a wide one reuses the already-compiled wider
+      step instead of recompiling.
+    - ``start(key, default)`` — kNN batches: any width is *correct*
+      (the frontier-miss check widens until exact), so start straight
+      from the converged width of earlier batches and skip their
+      widening ladder; fall back to the density ``default`` cold.
+
+    ``hits``/``misses`` count cache effectiveness; ``seed`` force-sets
+    a width (tests use it to exercise the widen-and-retry path).
+    """
+
+    def __init__(self):
+        self._w: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def at_least(self, key, floor: int) -> int:
+        w = self._w.get(key)
+        if w is not None and w >= floor:
+            self.hits += 1
+            return w
+        self.misses += 1
+        return floor
+
+    def start(self, key, default: int) -> int:
+        w = self._w.get(key)
+        if w is not None:
+            self.hits += 1
+            return w
+        self.misses += 1
+        return default
+
+    def observe(self, key, width: int) -> None:
+        self._w[key] = max(self._w.get(key, 0), width)
+
+    def seed(self, key, width: int) -> None:
+        self._w[key] = width
 
 
 class SpatialServer:
@@ -174,23 +339,46 @@ class SpatialServer:
     index and probes only candidate tiles — exact on all six layouts,
     answers identical to ``pruned=False`` (the dense all-tile oracle
     sweep).  ``mesh=None`` serves in-process; with a mesh, every batch
-    runs as a query-sharded SPMD step over ``mesh[axis]`` with the
-    staged layout replicated (it was built once; queries are the
-    streaming side).  Per-call ``pruned=`` overrides the default.
+    runs as a query-sharded SPMD step over ``mesh[axis]``.  Per-call
+    ``pruned=`` overrides the default.
+
+    ``sharded=False`` replicates the staged layout on every device
+    (queries are the only sharded axis); ``sharded=True`` shards the
+    *tiles* across devices too and serves through the owner-routed
+    ``all_to_all`` exchange (``serve.exchange``) — per-device staged
+    memory drops to O(total/D) and answers stay bit-identical to the
+    oracle.  In-process (``mesh=None``) sharded serving simulates the
+    exchange over ``shards`` virtual owners (default 1) — same maths,
+    one device; useful for validation and for sizing shard counts.
     """
 
     def __init__(self, parts: api.Partitioning, mbrs: jax.Array,
                  mesh: Mesh | None = None, axis: str = "d",
                  capacity: int | None = None, method: str | None = None,
-                 pruned: bool = True):
+                 pruned: bool = True, sharded: bool = False,
+                 shards: int | None = None):
         self.parts = parts
-        self.layout, self.stats = stage(parts, mbrs, capacity)
-        self.stats["method"] = method
         self.mesh, self.axis = mesh, axis
         self.pruned = pruned
+        self.sharded = sharded
         self.n_devices = int(mesh.shape[axis]) if mesh is not None else 1
+        if sharded:
+            self.shards = int(shards) if shards else self.n_devices
+            if mesh is not None and self.shards != self.n_devices:
+                raise ValueError(
+                    "sharded serving places exactly one tile shard per "
+                    f"mesh device ({self.n_devices}), got shards="
+                    f"{self.shards}")
+            self.slayout, self._oracle_np, self.stats = stage_sharded(
+                parts, mbrs, self.shards, capacity, mesh=mesh, axis=axis)
+            self.layout = None
+            self._oracle_jax = None
+        else:
+            self.shards = 1
+            self.layout, self.stats = stage(parts, mbrs, capacity)
+        self.stats["method"] = method
         self._steps: dict = {}
-        self._knn_f: dict = {}     # (k, max_cand) -> converged frontier
+        self.widths = WidthPolicy()
 
     @classmethod
     def from_method(cls, method: str, mbrs: jax.Array, payload: int,
@@ -199,11 +387,50 @@ class SpatialServer:
         parts = api.partition(method, mbrs, payload)
         return cls(parts, mbrs, mesh=mesh, axis=axis, method=method, **kw)
 
+    # -- shared accessors -------------------------------------------------
+
+    @property
+    def probe_boxes(self) -> jax.Array:
+        lay = self.slayout if self.sharded else self.layout
+        return lay.probe_boxes
+
+    @property
+    def uni(self) -> jax.Array:
+        lay = self.slayout if self.sharded else self.layout
+        return lay.uni
+
+    def resident_tile_bytes(self) -> int:
+        """Per-device bytes of device-resident staged member data.
+
+        Replicated serving holds the full staging (member tiles +
+        canonical tiles + ids) on every device; sharded serving holds
+        1/D of the canonical tiles + ids (the (T, 4) probe boxes stay
+        replicated but are negligible).  This is the O(N) vs O(N/D)
+        axis the benchmarks report.
+        """
+        if self.sharded:
+            s = self.slayout
+            return int(s.canon_shards.nbytes + s.id_shards.nbytes) \
+                // self.shards
+        lay = self.layout
+        return int(lay.tiles.nbytes + lay.canon_tiles.nbytes
+                   + lay.ids.nbytes)
+
+    def _oracle(self) -> tuple[jax.Array, jax.Array]:
+        """Dense single-device staging for the ``pruned=False`` oracle
+        in sharded mode — staged to the default device on first use
+        (debug/validation path; the sharded server never needs it)."""
+        if self._oracle_jax is None:
+            canon_np, ids_np = self._oracle_np
+            self._oracle_jax = (jnp.asarray(canon_np), jnp.asarray(ids_np))
+        return self._oracle_jax
+
     # -- SPMD plumbing ----------------------------------------------------
 
     def _sharded_call(self, name: str, fn, qarrays: tuple,
                       costs: np.ndarray, pads: tuple):
-        """Run ``fn(*per_query_arrays) -> pytree`` query-sharded.
+        """Run ``fn(*per_query_arrays) -> pytree`` query-sharded
+        (replicated layout).
 
         Every array in ``qarrays`` is leading-axis (Q, ...); ``pads``
         gives the matching padding element for the slots LPT leaves
@@ -213,15 +440,7 @@ class SpatialServer:
         if self.mesh is None:
             return fn(*qarrays), dict(skew=1.0)
         slots, pstats = pack_queries(costs, self.n_devices)
-        live = slots >= 0
-        packed = []
-        for arr, pad in zip(qarrays, pads):
-            a = np.asarray(arr)
-            pad = np.asarray(pad, a.dtype)
-            p = np.broadcast_to(
-                pad, (slots.shape[0], slots.shape[1]) + pad.shape).copy()
-            p[live] = a[slots[live]]
-            packed.append(p)
+        packed = [_pack_rows(a, slots, p) for a, p in zip(qarrays, pads)]
 
         step = self._steps.get(name)
         if step is None:
@@ -238,25 +457,52 @@ class SpatialServer:
         sharding = NamedSharding(self.mesh, P(self.axis))
         out = step(*(jax.device_put(jnp.asarray(p), sharding)
                      for p in packed))
+        n_q = qarrays[0].shape[0]
+        # step outputs concatenate per-device (Qpd, ...) blocks into a
+        # flat (D·Qpd, ...) leading axis; restore the (D, Qpd) grid
+        return jax.tree.map(
+            lambda x: _unpack_rows(
+                np.asarray(x).reshape(slots.shape + np.asarray(x).shape[1:]),
+                slots, n_q),
+            out), pstats
 
-        def unpack(x):
-            x = np.asarray(x).reshape((slots.size,) + x.shape[1:])
-            res = np.zeros((qarrays[0].shape[0],) + x.shape[1:], x.dtype)
-            res[slots[live]] = x[live.ravel()]
-            return res
+    def _exchange_plan(self, cand, costs: np.ndarray):
+        """Host-side plan for one sharded batch: LPT query packing +
+        owner-local candidate translation (``router.owner_split``)."""
+        slots, pstats = pack_queries(costs, self.shards)
+        send_slot, send_cand, xstats = router.owner_split(
+            np.asarray(cand), slots, self.slayout.owner, self.slayout.local)
+        return slots, send_slot, send_cand, {**pstats, **xstats}
 
-        return jax.tree.map(unpack, out), pstats
+    def _put(self, arr):
+        a = jnp.asarray(arr)
+        if self.mesh is not None:
+            a = jax.device_put(a, NamedSharding(self.mesh, P(self.axis)))
+        return a
+
+    def _exchange_step(self, key: tuple, orch, n_sharded: int,
+                       n_replicated: int = 0, **static):
+        step = self._steps.get(key)
+        if step is None:
+            step = exchange.build_step(orch, self.mesh, self.axis,
+                                       n_sharded, n_replicated, **static)
+            self._steps[key] = step
+        return step
 
     # -- routing helpers (host side, per batch) ---------------------------
 
     def _route_batch(self, qboxes: jax.Array):
-        """Candidate-tile index for one range batch: f_max is sized from
-        the batch's true max probe fan-out, so the pruned answer never
-        truncates.  Returns ``(cand[Q, F], costs[Q], F)``."""
-        hit = router.probe_overlap(self.layout.probe_boxes, qboxes)
+        """Candidate-tile index for one range batch.  ``f_max`` covers
+        the batch's true max probe fan-out — never truncating — and is
+        ratcheted through the width cache so narrower follow-up batches
+        reuse the compiled step.  Returns ``(cand[Q, F], costs[Q], F)``.
+        """
+        hit = router.probe_overlap(self.probe_boxes, qboxes)
         pf = np.asarray(jnp.sum(hit, axis=1, dtype=jnp.int32))
-        f = _f_width(int(pf.max(initial=0)), self.stats["t_live"])
+        floor = _f_width(int(pf.max(initial=0)), self.stats["t_live"])
+        f = self.widths.at_least("range", floor)
         cand, _, _ = router.candidates_from_overlap(hit, f)
+        self.widths.observe("range", f)
         return cand, pf.astype(np.float64), f
 
     def _fanout_stats(self, qboxes: jax.Array) -> dict:
@@ -267,6 +513,113 @@ class SpatialServer:
         return dict(fanout_mean=float(fanout_np.mean()),
                     fanout_max=int(fanout_np.max()))
 
+    # -- sharded executors (owner-routed all_to_all exchange) -------------
+
+    def _sharded_range_counts(self, qboxes: jax.Array):
+        cand, costs, f = self._route_batch(qboxes)
+        slots, ss, sc, xstats = self._exchange_plan(cand, costs)
+        qp = _pack_rows(np.asarray(qboxes, np.float32), slots, _SENTINEL)
+        step = self._exchange_step(
+            ("s_range_counts", qp.shape[1], ss.shape[2], sc.shape[3]),
+            exchange.serve_range_counts, n_sharded=4)
+        out = step(self._put(qp), self._put(ss), self._put(sc),
+                   self.slayout.canon_shards)
+        counts = _unpack_rows(out, slots, qboxes.shape[0])
+        return jnp.asarray(counts), dict(f_max=f, **xstats)
+
+    def _sharded_range_ids(self, qboxes: jax.Array, max_hits: int):
+        cand, costs, f = self._route_batch(qboxes)
+        slots, ss, sc, xstats = self._exchange_plan(cand, costs)
+        qp = _pack_rows(np.asarray(qboxes, np.float32), slots, _SENTINEL)
+        cap = int(self.slayout.id_shards.shape[-1])
+        mh_local = min(max_hits, sc.shape[3] * cap)
+        step = self._exchange_step(
+            ("s_range_ids", qp.shape[1], ss.shape[2], sc.shape[3],
+             max_hits),
+            exchange.serve_range_ids, n_sharded=5,
+            max_hits=max_hits, mh_local=mh_local)
+        out = step(self._put(qp), self._put(ss), self._put(sc),
+                   self.slayout.canon_shards, self.slayout.id_shards)
+        n_q = qboxes.shape[0]
+        hit_ids, counts, overflow = (
+            _unpack_rows(x, slots, n_q) for x in out)
+        return (jnp.asarray(hit_ids), jnp.asarray(counts),
+                jnp.asarray(overflow), dict(f_max=f, **xstats))
+
+    def _knn_cost_proxy(self, dist, k: int) -> np.ndarray:
+        """LPT packing weight: tiles the first deepening box would
+        touch (matches the radius the kernel actually starts from)."""
+        uni = self.uni
+        diag = float(np.linalg.norm(np.asarray(uni[2:] - uni[:2])))
+        r0 = float(knn_mod.initial_radius(
+            jnp.float32(diag), k, self.stats["t"] * self.stats["cap"]))
+        return (1.0 + np.sum(np.asarray(dist) <= r0, axis=1)
+                ).astype(np.float64)
+
+    def _knn_retry_loop(self, pts: jax.Array, k: int, max_cand: int,
+                        run_batch):
+        """The exactness-critical widen-and-retry ladder, shared by the
+        replicated and sharded executors.
+
+        ``run_batch(f)`` answers the batch with frontier width ``f``
+        and returns ``(nn_ids, nn_d2, radius, overflow, excluded,
+        xstats)``.  Any query whose √2-inflated refinement radius
+        reaches its nearest excluded tile may have missed a true
+        neighbour, so the frontier doubles (logged) until no query can
+        miss or the frontier holds every live tile.  Converged widths
+        feed the width cache so a steady stream pays the ladder once.
+        """
+        t_live, n = self.stats["t_live"], self.stats["n"]
+        wkey = ("knn", k, max_cand)
+        f = self.widths.start(
+            wkey, _f_width(4 * k * t_live // max(n, 1) + 3, t_live))
+        retries = 0
+        while True:
+            nn_ids, nn_d2, radius, overflow, excl, xstats = run_batch(f)
+            miss = np.asarray(excl) <= np.asarray(radius) * np.sqrt(2.0)
+            if not miss.any() or f >= t_live:
+                break
+            new_f = _f_width(2 * f, t_live)
+            log.info("kNN frontier miss on %d/%d queries: widening "
+                     "f_max %d -> %d (retry %d)",
+                     int(miss.sum()), pts.shape[0], f, new_f, retries + 1)
+            f = new_f
+            retries += 1
+        self.widths.observe(wkey, f)
+        overflow = np.asarray(overflow) | miss
+        return nn_ids, nn_d2, overflow, dict(f_max=f, retries=retries,
+                                             **xstats)
+
+    def _sharded_knn(self, pts: jax.Array, k: int, max_cand: int):
+        n_slots = self.stats["t"] * self.stats["cap"]
+        uni = self.uni
+        pad_pt = np.asarray((uni[:2] + uni[2:]) * 0.5)
+        n_q = pts.shape[0]
+
+        def run_batch(f):
+            cand, dist, excl = router.candidate_knn(
+                self.slayout.probe_boxes, pts, f)
+            slots, ss, sc, xstats = self._exchange_plan(
+                cand, self._knn_cost_proxy(dist, k))
+            pp = _pack_rows(np.asarray(pts, np.float32), slots, pad_pt)
+            dead = slots < 0
+            step = self._exchange_step(
+                ("s_knn", k, max_cand, pp.shape[1], ss.shape[2],
+                 sc.shape[3]),
+                exchange.serve_knn, n_sharded=6, n_replicated=1,
+                k=k, max_cand=max_cand, n_slots=n_slots)
+            out = step(self._put(pp), self._put(ss), self._put(sc),
+                       self._put(dead), self.slayout.canon_shards,
+                       self.slayout.id_shards, uni)
+            nn_ids, nn_d2, radius, overflow = (
+                _unpack_rows(x, slots, n_q) for x in out)
+            return nn_ids, nn_d2, radius, overflow, excl, xstats
+
+        nn_ids, nn_d2, overflow, stats = self._knn_retry_loop(
+            pts, k, max_cand, run_batch)
+        return (jnp.asarray(nn_ids), jnp.asarray(nn_d2),
+                jnp.asarray(overflow), stats)
+
     # -- queries ----------------------------------------------------------
 
     def range_counts(self, qboxes: jax.Array, pruned: bool | None = None):
@@ -275,9 +628,18 @@ class SpatialServer:
         stats carry the region fan-out metric, the packing skew, and
         ``mode``/``f_max`` describing the executor that ran.
         """
-        layout = self.layout
         stats = self._fanout_stats(qboxes)
         use_pruned = self.pruned if pruned is None else pruned
+        if self.sharded:
+            if not use_pruned:
+                canon, _ = self._oracle()
+                counts = range_mod.range_counts(qboxes, canon)
+                stats.update(mode="dense")
+                return counts, stats
+            counts, xstats = self._sharded_range_counts(qboxes)
+            stats.update(mode="sharded", shards=self.shards, **xstats)
+            return counts, stats
+        layout = self.layout
         if use_pruned:
             cand, costs, f = self._route_batch(qboxes)
             counts, pstats = self._sharded_call(
@@ -300,9 +662,20 @@ class SpatialServer:
                   pruned: bool | None = None):
         """Exact unique hit-id sets (ascending, -1 padded) + overflow
         -> ``(hit_ids[Q, max_hits], counts[Q], overflow[Q], stats)``."""
-        layout = self.layout
         stats = self._fanout_stats(qboxes)
         use_pruned = self.pruned if pruned is None else pruned
+        if self.sharded:
+            if not use_pruned:
+                canon, ids = self._oracle()
+                hit_ids, counts, overflow = range_mod.range_ids(
+                    qboxes, canon, ids, max_hits)
+                stats.update(mode="dense")
+                return hit_ids, counts, overflow, stats
+            hit_ids, counts, overflow, xstats = self._sharded_range_ids(
+                qboxes, max_hits)
+            stats.update(mode="sharded", shards=self.shards, **xstats)
+            return hit_ids, counts, overflow, stats
+        layout = self.layout
         if use_pruned:
             cand, costs, f = self._route_batch(qboxes)
             (hit_ids, counts, overflow), pstats = self._sharded_call(
@@ -329,63 +702,61 @@ class SpatialServer:
         best-first search would visit given the answered kth distance.
 
         The pruned executor starts from a density-sized MINDIST
-        frontier and doubles it for any batch whose refinement radius
-        reached an excluded tile, so returned answers match the dense
-        oracle exactly; ``stats['retries']`` counts the widenings.
+        frontier (or the width cache's converged start) and doubles it
+        for any batch whose refinement radius reached an excluded tile
+        — logged and counted in ``stats['retries']`` — so returned
+        answers match the dense oracle exactly.
         """
-        layout = self.layout
-        t, cap = layout.ids.shape
-        t_live = self.stats["t_live"]
-        pad_pt = np.asarray((layout.uni[:2] + layout.uni[2:]) * 0.5)
         use_pruned = self.pruned if pruned is None else pruned
-        if use_pruned:
-            n = self.stats["n"]
-            # frontier wide enough that ~4k canonical objects fit under
-            # it; converged widths are remembered per (k, max_cand) so a
-            # steady query stream pays the widening ladder only once
-            f = self._knn_f.get(
-                (k, max_cand),
-                _f_width(4 * k * t_live // max(n, 1) + 3, t_live))
-            retries = 0
-            while True:
-                cand, dist, excl = router.candidate_knn(
-                    layout.probe_boxes, pts, f)
-                # cost proxy: tiles the first deepening box would touch
-                diag = float(np.linalg.norm(
-                    np.asarray(layout.uni[2:] - layout.uni[:2])))
-                r0 = float(knn_mod.initial_radius(
-                    jnp.float32(diag), k, t * cap))
-                costs = 1.0 + np.sum(np.asarray(dist) <= r0, axis=1)
-                (nn_ids, nn_d2, radius, overflow), pstats = \
-                    self._sharded_call(
-                        f"knn_pruned_{k}_{max_cand}_{f}",
-                        lambda qs, cd, ex: knn_mod.pruned_knn(
-                            qs, k, layout.canon_tiles, layout.ids,
-                            layout.uni, cd, ex, max_cand=max_cand),
-                        (pts, cand, excl),
-                        costs.astype(np.float64),
-                        (pad_pt, np.full((f,), -1, np.int32),
-                         np.float32(np.inf)))
-                miss = (np.asarray(excl)
-                        <= np.asarray(radius) * np.sqrt(2.0))
-                if not miss.any() or f >= t_live:
-                    break
-                f = _f_width(2 * f, t_live)
-                retries += 1
-            self._knn_f[(k, max_cand)] = f
-            mode_stats = dict(mode="pruned", f_max=f, retries=retries,
-                              **pstats)
+        if self.sharded:
+            if not use_pruned:
+                canon, ids = self._oracle()
+                nn_ids, nn_d2, _, overflow = knn_mod.batched_knn(
+                    pts, k, canon, ids, self.uni, max_cand=max_cand)
+                mode_stats = dict(mode="dense")
+            else:
+                nn_ids, nn_d2, overflow, xstats = self._sharded_knn(
+                    pts, k, max_cand)
+                mode_stats = dict(mode="sharded", shards=self.shards,
+                                  **xstats)
         else:
-            (nn_ids, nn_d2, radius, overflow), pstats = self._sharded_call(
-                f"knn_{k}_{max_cand}",
-                lambda qs: knn_mod.batched_knn(qs, k, layout.canon_tiles,
-                                               layout.ids, layout.uni,
-                                               max_cand=max_cand),
-                (pts,), np.ones(pts.shape[0], np.float64), (pad_pt,))
-            mode_stats = dict(mode="dense", **pstats)
+            nn_ids, nn_d2, overflow, mode_stats = self._replicated_knn(
+                pts, k, max_cand, use_pruned)
         fanout = knn_mod.knn_fanout(jnp.asarray(pts),
                                     jnp.asarray(nn_d2[:, -1]),
                                     self.parts.boxes, self.parts.valid)
         stats = dict(fanout_mean=float(jnp.mean(fanout)),
                      fanout_max=int(jnp.max(fanout)), **mode_stats)
         return nn_ids, nn_d2, overflow, stats
+
+    def _replicated_knn(self, pts: jax.Array, k: int, max_cand: int,
+                        use_pruned: bool):
+        layout = self.layout
+        pad_pt = np.asarray((layout.uni[:2] + layout.uni[2:]) * 0.5)
+        if not use_pruned:
+            (nn_ids, nn_d2, radius, overflow), pstats = self._sharded_call(
+                f"knn_{k}_{max_cand}",
+                lambda qs: knn_mod.batched_knn(qs, k, layout.canon_tiles,
+                                               layout.ids, layout.uni,
+                                               max_cand=max_cand),
+                (pts,), np.ones(pts.shape[0], np.float64), (pad_pt,))
+            return nn_ids, nn_d2, overflow, dict(mode="dense", **pstats)
+
+        def run_batch(f):
+            cand, dist, excl = router.candidate_knn(
+                layout.probe_boxes, pts, f)
+            (nn_ids, nn_d2, radius, overflow), pstats = \
+                self._sharded_call(
+                    f"knn_pruned_{k}_{max_cand}_{f}",
+                    lambda qs, cd, ex: knn_mod.pruned_knn(
+                        qs, k, layout.canon_tiles, layout.ids,
+                        layout.uni, cd, ex, max_cand=max_cand),
+                    (pts, cand, excl),
+                    self._knn_cost_proxy(dist, k),
+                    (pad_pt, np.full((f,), -1, np.int32),
+                     np.float32(np.inf)))
+            return nn_ids, nn_d2, radius, overflow, excl, pstats
+
+        nn_ids, nn_d2, overflow, stats = self._knn_retry_loop(
+            pts, k, max_cand, run_batch)
+        return nn_ids, nn_d2, overflow, dict(mode="pruned", **stats)

@@ -1,0 +1,268 @@
+"""Owner-routed query exchange over sharded tile layouts.
+
+The distributed serving step.  Tiles are placed on owner devices
+(``core.placement.shard_tiles``); queries are LPT-packed onto *home*
+devices exactly as in the replicated path; and every batch runs as one
+SPMD step built from three moves:
+
+  scatter — each home gathers, per owner, the queries whose candidate
+            lists touch that owner's tiles (``router.owner_split``
+            translated them to local coordinates on the host) and
+            ``all_to_all``s query payloads + local candidate lists to
+            the owners,
+  probe   — each owner runs the existing gathered ``range_probe``
+            executors (``query.range`` / ``query.knn``) against its
+            local shard only — O(local candidates · cap) work, with
+            per-device memory O(total/D),
+  reduce  — partial counts / id lists / top-k frontiers ``all_to_all``
+            back to the homes, which merge deterministically
+            (``merge_owner_counts`` / ``merge_owner_ids`` /
+            ``merge_knn_partials``): canonical copies make hits
+            owner-disjoint, so merged answers are bit-identical to the
+            dense single-device oracle.
+
+kNN deepening is lock-step: the radius state lives at home, each round
+exchanges deepening boxes out and partial unique-counts back, and the
+loop's continue flag is a ``psum``-reduced global — every device runs
+the same number of rounds, so collectives inside the loop can never
+deadlock.  The frontier-miss check is unchanged from the replicated
+path (the excluded distance is global, computed at routing time), so
+the server's widen-and-retry ladder still guarantees exactness.
+
+Every orchestration is written once against a tiny ``_Comm`` seam and
+runs in two modes:
+
+- **SPMD** (``mesh`` given): ``shard_map`` over the mesh axis with
+  ``all_to_all`` exchanges (``core.compat`` shims) — the production
+  path; per-device arrays, collective transposes.
+- **in-process simulation** (``mesh=None``): the same math over full
+  ``(D, ...)`` arrays, with ``jax.vmap`` standing in for "each device"
+  and axis transposes standing in for ``all_to_all`` — the oracle for
+  the exchange itself, testable on one device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core import geometry
+from ..core.compat import all_to_all, shard_map
+from ..query import knn as knn_mod, range as range_mod
+
+_SENTINEL = jnp.array(geometry.SENTINEL_BOX, jnp.float32)
+
+
+class _Comm:
+    """The sharded/simulated seam: apply-per-device, exchange, reduce.
+
+    ``axis=None`` selects in-process simulation: per-device functions
+    are ``vmap``-ped over a leading device axis and the device
+    transpose is a plain ``swapaxes`` — bit-identical math, no mesh.
+    """
+
+    def __init__(self, axis: str | None):
+        self.axis = axis
+
+    def apply(self, f, *xs):
+        """Run a per-device function (sim: vmap over the device axis)."""
+        return f(*xs) if self.axis else jax.vmap(f)(*xs)
+
+    def exchange(self, x):
+        """Device transpose: row o of the result came from device o."""
+        if self.axis is None:
+            return jnp.swapaxes(x, 0, 1)
+        return all_to_all(x, self.axis)
+
+    def any(self, x) -> jax.Array:
+        """Global any() — uniform across devices (psum under SPMD), so
+        it can steer a lock-step loop containing collectives."""
+        if self.axis is None:
+            return jnp.any(x)
+        return jax.lax.psum(jnp.any(x).astype(jnp.int32), self.axis) > 0
+
+
+def _gather_send(x: jax.Array, slots: jax.Array, pad) -> jax.Array:
+    """Home-side send buffer: (Qpd, ...) x (D, M) slots -> (D, M, ...),
+    padding element where a message slot is -1."""
+    out = x[jnp.maximum(slots, 0)]
+    live = (slots >= 0).reshape(slots.shape + (1,) * (out.ndim - 2))
+    return jnp.where(live, out, jnp.asarray(pad, out.dtype))
+
+
+# --------------------------------------------------------------------------
+# orchestrations (one definition, both modes)
+# --------------------------------------------------------------------------
+
+def serve_range_counts(comm: _Comm, q: jax.Array, sl: jax.Array,
+                       sc: jax.Array, tiles: jax.Array) -> jax.Array:
+    """Sharded exact range counts: scatter -> local probe -> sum merge.
+
+    Per-device view: q (Qpd, 4) home query shard, sl (D, M) message
+    slots, sc (D, M, Fl) local candidate lists, tiles (Tl, cap, 4)
+    owner shard -> (Qpd,) int32.
+    """
+    d, m = sl.shape[-2], sl.shape[-1]
+    fl = sc.shape[-1]
+    qpd = q.shape[-2]
+    qs = comm.apply(lambda qq, ss: _gather_send(qq, ss, _SENTINEL), q, sl)
+    qr, cr = comm.exchange(qs), comm.exchange(sc)
+
+    def owner_probe(t, qrr, crr):
+        return range_mod.pruned_range_counts(
+            qrr.reshape(d * m, 4), t, crr.reshape(d * m, fl)).reshape(d, m)
+
+    pb = comm.exchange(comm.apply(owner_probe, tiles, qr, cr))
+    return comm.apply(
+        lambda p, s: range_mod.merge_owner_counts(p, s, qpd), pb, sl)
+
+
+def serve_range_ids(comm: _Comm, q: jax.Array, sl: jax.Array, sc: jax.Array,
+                    tiles: jax.Array, ids: jax.Array, *, max_hits: int,
+                    mh_local: int
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sharded exact unique id sets: scatter -> local ids -> union merge.
+
+    Same per-device view as ``serve_range_counts`` plus ids (Tl, cap);
+    ``mh_local`` bounds each owner's partial list (callers pass
+    ``min(max_hits, Fl·cap)`` — an owner can never hold more) ->
+    ``(hit_ids[Qpd, max_hits], counts[Qpd], overflow[Qpd])``.
+    """
+    d, m = sl.shape[-2], sl.shape[-1]
+    fl = sc.shape[-1]
+    qpd = q.shape[-2]
+    qs = comm.apply(lambda qq, ss: _gather_send(qq, ss, _SENTINEL), q, sl)
+    qr, cr = comm.exchange(qs), comm.exchange(sc)
+
+    def owner_ids(t, i, qrr, crr):
+        hids, counts, _ = range_mod.pruned_range_ids(
+            qrr.reshape(d * m, 4), t, i, crr.reshape(d * m, fl),
+            max_hits=mh_local)
+        return hids.reshape(d, m, mh_local), counts.reshape(d, m)
+
+    pids, pcounts = comm.apply(owner_ids, tiles, ids, qr, cr)
+    bids, bcounts = comm.exchange(pids), comm.exchange(pcounts)
+    return comm.apply(
+        lambda pi, pc, s: range_mod.merge_owner_ids(pi, pc, s, qpd, max_hits),
+        bids, bcounts, sl)
+
+
+def serve_knn(comm: _Comm, pts: jax.Array, sl: jax.Array, sc: jax.Array,
+              dead: jax.Array, tiles: jax.Array, ids: jax.Array,
+              uni: jax.Array, *, k: int, max_cand: int, n_slots: int,
+              max_rounds: int = 32
+              ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sharded exact kNN: lock-step deepening + top-k frontier merge.
+
+    Per-device view: pts (Qpd, 2) home shard, sl/sc as in the range
+    steps (kNN frontier candidates in owner-local coordinates), dead
+    (Qpd,) marks padding slots, tiles/ids the owner shard, uni the
+    (replicated) dataset universe; ``n_slots`` is the *global* T·cap so
+    the density-based initial radius matches the single-device paths ->
+    ``(nn_ids[Qpd, k], nn_d2[Qpd, k], radius[Qpd], overflow[Qpd])``.
+
+    The radius state lives at home.  Each deepening round exchanges
+    radii to owners, sums per-owner unique-candidate counts back, and
+    doubles the radius of unconverged queries — identical count totals
+    and identical radius trajectories to ``pruned_knn``.  ``overflow``
+    flags owner-side candidate extraction past ``max_cand``; the
+    frontier-miss flag is the caller's (it holds the global excluded
+    distance).
+    """
+    d, m = sl.shape[-2], sl.shape[-1]
+    fl = sc.shape[-1]
+    qpd = pts.shape[-2]
+    pad_pt = (uni[:2] + uni[2:]) * 0.5
+    ps = comm.apply(lambda p, s: _gather_send(p, s, pad_pt), pts, sl)
+    pr, cr = comm.exchange(ps), comm.exchange(sc)
+
+    diag = jnp.sqrt(jnp.sum((uni[2:] - uni[:2]) ** 2))
+    r_init = knn_mod.initial_radius(diag, k, n_slots)
+    r_cover = jnp.maximum(
+        jnp.maximum(pts[..., 0] - uni[0], uni[2] - pts[..., 0]),
+        jnp.maximum(pts[..., 1] - uni[1], uni[3] - pts[..., 1]))
+    r_cover = jnp.maximum(r_cover, diag * 1e-6)
+
+    def owner_counts(t, p, c, rad):
+        qb = jnp.concatenate([p - rad[..., None], p + rad[..., None]], -1)
+        return range_mod.pruned_range_counts(
+            qb.reshape(d * m, 4), t, c.reshape(d * m, fl)).reshape(d, m)
+
+    def counts_at(r):
+        rr = comm.exchange(comm.apply(
+            lambda r_, s: _gather_send(r_, s, jnp.float32(0.0)), r, sl))
+        pb = comm.exchange(comm.apply(owner_counts, tiles, pr, cr, rr))
+        return comm.apply(
+            lambda p, s: range_mod.merge_owner_counts(p, s, qpd), pb, sl)
+
+    r0 = jnp.where(dead, r_cover, jnp.full(pts.shape[:-1], r_init,
+                                           jnp.float32))
+    c0 = counts_at(r0)
+
+    def cont(r, c):
+        return comm.any((c < k) & (r < r_cover))
+
+    def body(state):
+        r, c, i, _ = state
+        r = jnp.where(c < k, jnp.minimum(r * 2.0, r_cover), r)
+        c = counts_at(r)
+        return r, c, i + 1, cont(r, c)
+
+    r, counts, _, _ = jax.lax.while_loop(
+        lambda s: s[3] & (s[2] < max_rounds), body,
+        (r0, c0, jnp.int32(0), cont(r0, c0)))
+
+    # refinement: owners extract local top-k within the √2-inflated box
+    re = r * jnp.sqrt(jnp.float32(2.0))
+    rr = comm.exchange(comm.apply(
+        lambda r_, s: _gather_send(r_, s, jnp.float32(0.0)), re, sl))
+
+    def owner_refine(t, i, p, c, rad):
+        nn_i, nn_d, nc = knn_mod.knn_partial(
+            p.reshape(d * m, 2), t, i, c.reshape(d * m, fl),
+            rad.reshape(d * m), k=k, max_cand=max_cand)
+        return (nn_i.reshape(d, m, k), nn_d.reshape(d, m, k),
+                nc.reshape(d, m))
+
+    pid, pd2, pnc = comm.apply(owner_refine, tiles, ids, pr, cr, rr)
+    bid, bd2, bnc = (comm.exchange(pid), comm.exchange(pd2),
+                     comm.exchange(pnc))
+    nn_ids, nn_d2 = comm.apply(
+        lambda a, b, s: knn_mod.merge_knn_partials(a, b, s, qpd, k),
+        bid, bd2, sl)
+    over = comm.apply(
+        lambda nc, s: range_mod.merge_owner_counts(
+            (nc > max_cand).astype(jnp.int32), s, qpd) > 0, bnc, sl)
+    return nn_ids, nn_d2, r, over
+
+
+# --------------------------------------------------------------------------
+# step builders (jitted executors for the server)
+# --------------------------------------------------------------------------
+
+def build_step(orch, mesh, axis: str, n_sharded: int, n_replicated: int = 0,
+               **static):
+    """Jit an orchestration for a mesh (SPMD) or for in-process sim.
+
+    With a mesh: ``shard_map`` over ``axis``; the first ``n_sharded``
+    arguments are device-sharded on their leading axis (the per-device
+    block's unit leading dim is stripped before the orchestration runs
+    and restored on the way out), the trailing ``n_replicated`` are
+    replicated (``P()``).  Without a mesh the same orchestration runs
+    in simulation over the full arrays.  ``static`` kwargs (k,
+    max_hits, ...) are baked into the jitted callable — the server
+    caches one step per shape/static bucket.
+    """
+    if mesh is None:
+        return jax.jit(functools.partial(orch, _Comm(None), **static))
+    specs = (P(axis),) * n_sharded + (P(),) * n_replicated
+
+    def spmd(*args):
+        local = tuple(a[0] for a in args[:n_sharded]) + args[n_sharded:]
+        out = orch(_Comm(axis), *local, **static)
+        return jax.tree.map(lambda x: x[None], out)
+
+    return jax.jit(shard_map(spmd, mesh=mesh, in_specs=specs,
+                             out_specs=P(axis), check_vma=False))

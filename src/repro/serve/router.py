@@ -29,6 +29,10 @@ Candidate lists are fixed-width ``(Q, f_max)`` int32 with ``-1``
 padding — the shape the gathered ``range_probe`` kernel consumes — and
 come with per-query fan-out, the cost vector that LPT query packing
 uses (``serve.engine.pack_queries``).
+
+Under tile sharding the same global candidate lists are re-expressed
+in ``(owner device, local tile)`` coordinates by ``owner_split`` — the
+host-side translation feeding the ``serve.exchange`` all_to_all step.
 """
 from __future__ import annotations
 
@@ -36,9 +40,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import geometry
 from ..core.partition.api import Partitioning
+from ..core.partition.assign import round_up
 from ..query.knn import mindist2
 
 _INF = jnp.float32(jnp.inf)
@@ -118,6 +124,68 @@ def candidate_range(boxes: jax.Array, qboxes: jax.Array, f_max: int
     return contract); callers that already hold the overlap matrix use
     the two-step form to avoid re-testing O(Q·T) geometry."""
     return candidates_from_overlap(probe_overlap(boxes, qboxes), f_max)
+
+
+# --------------------------------------------------------------------------
+# owner translation (sharded layouts: global tiles -> (owner, local))
+# --------------------------------------------------------------------------
+
+def owner_split(cand: np.ndarray, slots: np.ndarray, owner: np.ndarray,
+                local: np.ndarray, bucket: int = 8
+                ) -> tuple[np.ndarray, np.ndarray, dict]:
+    """Translate global candidate lists into per-owner exchange tables.
+
+    cand: (Q, F) int32 global candidate tiles (-1 padding) from
+    ``candidate_range`` / ``candidate_knn``; slots: (D, Qpd) query
+    packing from ``serve.engine.pack_queries`` (home placement);
+    owner/local: (T,) global-tile → (owner device, local shard row)
+    maps from ``core.placement.shard_tiles``.
+
+    Returns ``(send_slot[D, D, M], send_cand[D, D, M, F_local], stats)``
+    — for home device ``h`` and owner ``o``, message ``m`` carries home
+    query slot ``send_slot[h, o, m]`` (-1 padding) together with that
+    query's candidate tiles *owned by o, in o's local coordinates*
+    (``send_cand``, -1 padded, ascending local order).  A query emits
+    one message per owner holding ≥ 1 of its candidates and none to the
+    rest, so exchange volume scales with routed fan-out, not D.  ``M``
+    and ``F_local`` are maxima over all pairs, rounded up to ``bucket``
+    so jitted exchange steps recompile per size bucket, not per batch.
+
+    Host-side numpy (runs once per batch, O(Q·F)); ``stats`` reports
+    the message/width geometry for the serving stats dict.
+    """
+    d, qpd = slots.shape
+    send: list[list[list[tuple[int, np.ndarray]]]] = \
+        [[[] for _ in range(d)] for _ in range(d)]
+    f_local = 1
+    n_msgs = 0
+    for h in range(d):
+        for s in range(qpd):
+            qi = slots[h, s]
+            if qi < 0:
+                continue
+            c = cand[qi]
+            c = c[c >= 0]
+            if c.size == 0:
+                continue
+            ow = owner[c]
+            for o in np.unique(ow):
+                lt = np.sort(local[c[ow == o]])
+                send[h][int(o)].append((s, lt))
+                f_local = max(f_local, int(lt.size))
+                n_msgs += 1
+    m = max(1, max(len(send[h][o]) for h in range(d) for o in range(d)))
+    m = min(qpd, round_up(m, bucket))
+    f_local = round_up(f_local, bucket)
+    send_slot = np.full((d, d, m), -1, np.int32)
+    send_cand = np.full((d, d, m, f_local), -1, np.int32)
+    for h in range(d):
+        for o in range(d):
+            for j, (s, lt) in enumerate(send[h][o]):
+                send_slot[h, o, j] = s
+                send_cand[h, o, j, :lt.size] = lt
+    stats = dict(m_per_pair=m, f_local=f_local, messages=n_msgs)
+    return send_slot, send_cand, stats
 
 
 def linf_dist(pts: jax.Array, boxes: jax.Array) -> jax.Array:

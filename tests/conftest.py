@@ -1,8 +1,12 @@
 import os
 import sys
 
-# tests must see exactly ONE device (the dry-run sets its own flags in a
-# separate process); make sure nothing leaked into the environment
-os.environ.pop("XLA_FLAGS", None)
+# tests must see exactly ONE device by default (multi-device behaviour
+# is covered by subprocesses that set their own flags); make sure
+# nothing leaked into the environment.  CI's virtual-device job opts in
+# to keeping XLA_FLAGS (REPRO_KEEP_XLA_FLAGS=1) so the in-process
+# 8-device mesh tests actually see the forced host device count.
+if not os.environ.get("REPRO_KEEP_XLA_FLAGS"):
+    os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -104,6 +104,56 @@ print(json.dumps(res))
 
 
 @pytest.mark.slow
+def test_spmd_sharded_serving_matches_oracle():
+    """Owner-routed tile sharding on 8 devices: the all_to_all exchange
+    answers range + kNN bit-identically to the dense oracle and the
+    brute force, tiles live one shard per device, and per-device staged
+    memory respects the ceil(T/D) bound."""
+    out = _run("""
+import jax, jax.numpy as jnp, numpy as np, json
+from jax.sharding import Mesh
+from repro.data import spatial_gen
+from repro.query import knn as kq, range as rq
+from repro.serve import SpatialServer
+mbrs = spatial_gen.dataset('osm', jax.random.PRNGKey(0), 3000)
+mesh = Mesh(np.array(jax.devices()).reshape(8), ('d',))
+k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+c = jax.random.uniform(k1, (64, 2)); s = jax.random.uniform(k2, (64, 2)) * 0.05
+qb = jnp.concatenate([c - s, c + s], axis=-1)
+pts = jax.random.uniform(jax.random.PRNGKey(2), (64, 2))
+ref = rq.range_query_ref(np.asarray(mbrs), np.asarray(qb))
+want_ids, _ = kq.knn_ref(np.asarray(mbrs), np.asarray(pts), 5)
+res = {}
+for m in ['bsp', 'hc']:
+    srv = SpatialServer.from_method(m, mbrs, 200, mesh=mesh, sharded=True)
+    counts, stats = srv.range_counts(qb)
+    hit_ids, _, ovf, _ = srv.range_ids(qb, max_hits=2048)
+    d_ids, _, _, _ = srv.range_ids(qb, max_hits=2048, pruned=False)
+    nn_ids, nn_d2, ovk, _ = srv.knn(pts, 5)
+    d_nn, d_d2, _, _ = srv.knn(pts, 5, pruned=False)
+    t, cap, tl = srv.stats['t'], srv.stats['cap'], srv.stats['t_local']
+    tile_bytes = cap * 20
+    res[m] = dict(
+        range_ok=bool(all(int(counts[i]) == len(ref[i]) for i in range(64))),
+        ids_ok=bool(np.array_equal(np.asarray(hit_ids), np.asarray(d_ids))),
+        knn_ok=bool(np.array_equal(np.asarray(nn_ids), want_ids)),
+        knn_bitident=bool(np.array_equal(np.asarray(nn_d2), np.asarray(d_d2))),
+        no_overflow=bool(not np.asarray(ovf).any() and not np.asarray(ovk).any()),
+        shards=len(srv.slayout.canon_shards.addressable_shards),
+        mem_ok=bool(srv.resident_tile_bytes() <= t * tile_bytes / 8 + tile_bytes),
+        t_local_ok=bool(tl == -(-t // 8)),
+        mode=stats['mode'])
+print(json.dumps(res))
+""")
+    res = json.loads(out.strip().splitlines()[-1])
+    for m, r in res.items():
+        assert r["range_ok"] and r["ids_ok"], (m, r)
+        assert r["knn_ok"] and r["knn_bitident"], (m, r)
+        assert r["no_overflow"] and r["mode"] == "sharded", (m, r)
+        assert r["shards"] == 8 and r["mem_ok"] and r["t_local_ok"], (m, r)
+
+
+@pytest.mark.slow
 def test_compressed_psum_error_feedback_converges():
     out = _run("""
 import jax, jax.numpy as jnp, numpy as np, json

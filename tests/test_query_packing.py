@@ -48,3 +48,33 @@ def test_single_device_takes_everything():
     assert slots.shape == (1, 3)
     assert sorted(slots[0].tolist()) == [0, 1, 2]
     assert stats["skew"] == pytest.approx(1.0)
+
+
+@pytest.mark.parametrize("t,d,seed", [(16, 4, 0), (17, 4, 1), (9, 8, 2)])
+def test_lpt_pack_capped_respects_cap(t, d, seed):
+    """Capacitated LPT: every item placed, no device over the cap, and
+    cost balance no worse than the uncapped greedy bound allows."""
+    from repro.core import placement
+    costs = np.random.default_rng(seed).pareto(1.5, t) + 0.01
+    cap = -(-t // d)
+    owner, makespan, mean = placement.lpt_pack_capped(costs, d, cap)
+    counts = np.bincount(owner, minlength=d)
+    assert counts.sum() == t and counts.max() <= cap
+    loads = np.zeros(d)
+    np.add.at(loads, owner, costs)
+    assert np.isclose(loads.max(), makespan)
+
+
+def test_lpt_pack_capped_infeasible_raises():
+    from repro.core import placement
+    with pytest.raises(ValueError, match="cannot place"):
+        placement.lpt_pack_capped(np.ones(9), 2, 4)
+
+
+def test_balance_shim_reexports_placement():
+    """The historical ``repro.query.balance`` path must keep working
+    for the join engine and downstream users."""
+    from repro.core import placement
+    from repro.query import balance
+    assert balance.lpt_pack is placement.lpt_pack
+    assert balance.tile_costs is placement.tile_costs

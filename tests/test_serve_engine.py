@@ -84,3 +84,30 @@ def test_server_rejects_overflowing_capacity(mbrs):
     parts = api.partition("fg", mbrs, 200)
     with pytest.raises(ValueError, match="overflow"):
         serve_engine.stage(parts, mbrs, capacity=1)
+
+
+def test_range_width_cache_hit_reuses_wide_f_max(mbrs, qboxes):
+    """Adaptive f_max: a narrow batch after a wide one reuses the
+    cached (already-compiled) width instead of recomputing a smaller
+    one — and the answers stay exact."""
+    srv = SpatialServer.from_method("bsp", mbrs, 150)
+    _, wide_stats = srv.range_counts(qboxes)           # fat fixture boxes
+    hits_before = srv.widths.hits
+    narrow = jnp.concatenate([qboxes[:, :2], qboxes[:, :2] + 1e-4], axis=-1)
+    counts, narrow_stats = srv.range_counts(narrow)
+    assert srv.widths.hits == hits_before + 1          # cache hit path
+    assert narrow_stats["f_max"] == wide_stats["f_max"]
+    ref = range_mod.range_query_ref(np.asarray(mbrs), np.asarray(narrow))
+    assert [int(c) for c in counts] == [len(r) for r in ref]
+
+
+def test_knn_width_cache_starts_from_converged_width(mbrs):
+    """Adaptive f_max for kNN: the first batch's converged frontier is
+    the second batch's starting width — no repeated widening ladder."""
+    srv = SpatialServer.from_method("bsp", mbrs, 150)
+    pts = jax.random.uniform(jax.random.PRNGKey(7), (8, 2))
+    _, _, _, s1 = srv.knn(pts, 3)
+    misses_before = srv.widths.misses
+    _, _, _, s2 = srv.knn(pts, 3)
+    assert srv.widths.misses == misses_before          # pure cache hit
+    assert s2["f_max"] == s1["f_max"] and s2["retries"] == 0

@@ -2,10 +2,17 @@
 """Markdown link check (CI docs job, stdlib only).
 
 Walks the repo's markdown (README.md, ROADMAP.md, CHANGES.md, PAPER.md,
-PAPERS.md, docs/**) and verifies every *relative* link target exists on
-disk, resolved against the file containing the link.  External
-(http/https/mailto) links and intra-page #anchors are skipped — CI must
-not depend on the network.  Exits non-zero listing every broken link.
+PAPERS.md, docs/** including subdirectories) and verifies:
+
+- every *relative* link target exists on disk, resolved against the
+  file containing the link;
+- every anchor fragment — both intra-page ``#section`` links and
+  ``file.md#section`` cross-file links — names a real heading in the
+  target markdown file (GitHub-style slugs, duplicate headings get
+  ``-1``/``-2`` suffixes).
+
+External (http/https/mailto) links are skipped — CI must not depend on
+the network.  Exits non-zero listing every broken link.
 
     python tools/check_links.py [repo_root]
 """
@@ -17,7 +24,39 @@ import sys
 
 # [text](target) — target captured up to the first unescaped ')'
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-_SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+_SKIP_PREFIXES = ("http://", "https://", "mailto:")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def _slugify(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, markdown/punctuation stripped,
+    spaces to hyphens."""
+    text = re.sub(r"[*_`]", "", heading.strip()).lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors(md: pathlib.Path, cache: dict) -> set[str]:
+    """All heading anchors of one markdown file (code fences skipped),
+    with GitHub's -1/-2 suffixes for duplicate headings."""
+    if md not in cache:
+        seen: dict[str, int] = {}
+        out: set[str] = set()
+        in_code = False
+        for line in md.read_text(encoding="utf-8").splitlines():
+            if line.lstrip().startswith("```"):
+                in_code = not in_code
+            if in_code:
+                continue
+            m = _HEADING.match(line)
+            if not m:
+                continue
+            slug = _slugify(m.group(1))
+            n = seen.get(slug, 0)
+            seen[slug] = n + 1
+            out.add(slug if n == 0 else f"{slug}-{n}")
+        cache[md] = out
+    return cache[md]
 
 
 def md_files(root: pathlib.Path) -> list[pathlib.Path]:
@@ -30,6 +69,7 @@ def md_files(root: pathlib.Path) -> list[pathlib.Path]:
 
 def check(root: pathlib.Path) -> list[str]:
     broken = []
+    anchor_cache: dict = {}
     for md in md_files(root):
         text = md.read_text(encoding="utf-8")
         in_code = False
@@ -42,14 +82,18 @@ def check(root: pathlib.Path) -> list[str]:
                 target = m.group(1)
                 if target.startswith(_SKIP_PREFIXES):
                     continue
-                path = target.split("#", 1)[0]
-                if not path:
-                    continue
-                resolved = (md.parent / path).resolve()
-                if not resolved.exists():
+                path, _, frag = target.partition("#")
+                resolved = (md.parent / path).resolve() if path else md
+                if path and not resolved.exists():
                     broken.append(
                         f"{md.relative_to(root)}:{lineno}: broken link "
                         f"-> {target}")
+                    continue
+                if frag and resolved.suffix == ".md":
+                    if frag.lower() not in anchors(resolved, anchor_cache):
+                        broken.append(
+                            f"{md.relative_to(root)}:{lineno}: broken "
+                            f"anchor -> {target}")
     return broken
 
 
@@ -62,7 +106,8 @@ def main() -> int:
         print(f"FAILED: {len(broken)} broken link(s) across "
               f"{n_files} markdown file(s)", file=sys.stderr)
         return 1
-    print(f"OK: all relative links valid across {n_files} markdown file(s)")
+    print(f"OK: all relative links and anchors valid across "
+          f"{n_files} markdown file(s)")
     return 0
 
 
