@@ -1,21 +1,28 @@
 """Range/kNN serving throughput across all six layouts × both datasets,
-pruned (routed candidate-tile probe) vs dense (all-tile oracle sweep)
-vs sharded (owner-routed all_to_all exchange) — the paper's
-layout-quality thesis measured as queries/sec, not just mean fan-out:
-the better the layout routes, the smaller each query's candidate list
-and the larger the pruned speedup.  Sharded rows also report the
-per-device resident tile bytes the exchange divides by D.
+pruned (routed candidate-tile probe, with the intra-tile local index)
+vs unindexed (``local_index=False``, same routing, linear tile sweep)
+vs dense (all-tile oracle sweep) vs sharded (owner-routed all_to_all
+exchange) — the paper's layout-quality thesis measured as queries/sec,
+not just mean fan-out: the better the layout routes, the smaller each
+query's candidate list and the larger the pruned speedup; the local
+index then skips dead 128-member chunks *inside* each candidate tile
+(chunk-skip rate reported per layout).
 
-``--smoke`` runs a small configuration (CI: exercises the pruned and
-sharded paths and the exactness assertions on every push without the
-full timing).  ``--devices N`` forces N virtual host devices
-(``--xla_force_host_platform_device_count``) so the sharded rows run
-the real mesh exchange; without it the exchange runs in simulation
-over 4 virtual owners.
+``--smoke`` runs a small configuration (CI: exercises the pruned,
+local-index, and sharded paths and the exactness assertions on every
+push without the full timing).  ``--devices N`` forces N virtual host
+devices (``--xla_force_host_platform_device_count``) so the sharded
+rows run the real mesh exchange; without it the exchange runs in
+simulation over 4 virtual owners.  ``--json`` additionally writes
+``BENCH_serving.json`` at the repo root (queries/sec, fan-out,
+chunk-skip rate per layout × dataset) so the perf trajectory is
+recorded run over run; CI uploads it as an artifact.
 """
 from __future__ import annotations
 
+import json
 import os
+import pathlib
 import sys
 
 if __name__ == "__main__" and "--devices" in sys.argv:
@@ -31,10 +38,11 @@ from repro.data import spatial_gen
 from repro.query import range as range_mod
 from repro.serve import SpatialServer
 
-from .common import emit, timeit
+from .common import emit, timeit, timeit_many
 
 METHODS = ["fg", "bsp", "slc", "bos", "str", "hc"]
 DATASETS = ["osm", "pi"]
+JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
 
 
 def _qboxes(key, q, scale=0.05):
@@ -44,14 +52,16 @@ def _qboxes(key, q, scale=0.05):
     return jnp.concatenate([c - s, c + s], axis=-1)
 
 
-def main(smoke: bool = False) -> None:
+def main(smoke: bool = False, json_out: bool = False) -> None:
     n, q, k, payload = (1200, 128, 4, 100) if smoke else (6000, 512, 8, 120)
+    iters = 5 if smoke else 15      # range counts are cheap; drown drift
     if jax.device_count() > 1:
         from jax.sharding import Mesh
         mesh = Mesh(np.array(jax.devices()), ("d",))
         shards = jax.device_count()
     else:
         mesh, shards = None, 4          # exchange in vmap simulation
+    rows = []
     for ds in DATASETS:
         mbrs = spatial_gen.dataset(ds, jax.random.PRNGKey(0), n)
         qb = _qboxes(jax.random.PRNGKey(1), q)
@@ -60,25 +70,36 @@ def main(smoke: bool = False) -> None:
         want = [len(r) for r in ref]
         for m in METHODS:
             srv = SpatialServer.from_method(m, mbrs, payload, mesh=mesh)
+            usrv = SpatialServer.from_method(m, mbrs, payload, mesh=mesh,
+                                             local_index=False)
             ssrv = SpatialServer.from_method(m, mbrs, payload, mesh=mesh,
                                              sharded=True, shards=shards)
             counts, rstats = srv.range_counts(qb)
-            assert [int(c) for c in counts] == want, (ds, m, "pruned")
+            assert [int(c) for c in counts] == want, (ds, m, "local")
+            ucounts, _ = usrv.range_counts(qb)
+            assert [int(c) for c in ucounts] == want, (ds, m, "unindexed")
             dcounts, _ = srv.range_counts(qb, pruned=False)
             assert [int(c) for c in dcounts] == want, (ds, m, "dense")
             scounts, sstats = ssrv.range_counts(qb)
             assert [int(c) for c in scounts] == want, (ds, m, "sharded")
+            skip_rate = srv.chunk_skip_rate(qb)
 
-            us_p = timeit(lambda: srv.range_counts(qb)[0],
-                          warmup=1, iters=3)
-            us_d = timeit(lambda: srv.range_counts(qb, pruned=False)[0],
-                          warmup=1, iters=3)
+            # interleaved: the local-vs-unindexed delta is the point of
+            # the comparison, so machine drift must hit both equally
+            us_p, us_u, us_d = timeit_many(
+                [lambda: srv.range_counts(qb)[0],
+                 lambda: usrv.range_counts(qb)[0],
+                 lambda: srv.range_counts(qb, pruned=False)[0]],
+                warmup=1, iters=iters)
             us_s = timeit(lambda: ssrv.range_counts(qb)[0],
                           warmup=1, iters=3)
             emit(f"range_serve/{ds}/{m}/q{q}", us_p,
                  f"qps={q / (us_p * 1e-6):.0f}"
                  f";fanout={rstats['fanout_mean']:.2f}"
                  f";f_max={rstats['f_max']};tiles={srv.stats['t']}"
+                 f";chunks={srv.stats['chunks']}"
+                 f";chunk_skip={skip_rate:.3f}"
+                 f";unindexed_us={us_u:.1f}"
                  f";dense_us={us_d:.1f};speedup={us_d / us_p:.2f}")
             emit(f"range_serve_sharded/{ds}/{m}/q{q}/d{shards}", us_s,
                  f"qps={q / (us_s * 1e-6):.0f}"
@@ -88,17 +109,56 @@ def main(smoke: bool = False) -> None:
                  f";mem_ratio={srv.resident_tile_bytes() / max(ssrv.resident_tile_bytes(), 1):.2f}")
 
             _, _, _, kstats = srv.knn(pts, k)
-            us_p = timeit(lambda: srv.knn(pts, k)[0], warmup=1, iters=3)
-            us_d = timeit(lambda: srv.knn(pts, k, pruned=False)[0],
-                          warmup=1, iters=3)
+            us_pk = timeit(lambda: srv.knn(pts, k)[0], warmup=1, iters=3)
+            us_dk = timeit(lambda: srv.knn(pts, k, pruned=False)[0],
+                           warmup=1, iters=3)
             us_sk = timeit(lambda: ssrv.knn(pts, k)[0], warmup=1, iters=3)
-            emit(f"knn_serve/{ds}/{m}/k{k}", us_p,
-                 f"qps={q / (us_p * 1e-6):.0f}"
+            emit(f"knn_serve/{ds}/{m}/k{k}", us_pk,
+                 f"qps={q / (us_pk * 1e-6):.0f}"
                  f";fanout={kstats['fanout_mean']:.2f}"
-                 f";f_max={kstats['f_max']}"
-                 f";dense_us={us_d:.1f};speedup={us_d / us_p:.2f}"
+                 f";f_max={kstats['f_max']};rounds={kstats['rounds']}"
+                 f";dense_us={us_dk:.1f};speedup={us_dk / us_pk:.2f}"
                  f";sharded_us={us_sk:.1f}")
+            rows.append(dict(
+                dataset=ds, layout=m, queries=q,
+                range_qps=round(q / (us_p * 1e-6), 1),
+                range_qps_unindexed=round(q / (us_u * 1e-6), 1),
+                range_qps_dense=round(q / (us_d * 1e-6), 1),
+                range_qps_sharded=round(q / (us_s * 1e-6), 1),
+                knn_qps=round(q / (us_pk * 1e-6), 1),
+                knn_qps_dense=round(q / (us_dk * 1e-6), 1),
+                fanout_mean=round(rstats["fanout_mean"], 3),
+                f_max=int(rstats["f_max"]),
+                knn_rounds=int(kstats["rounds"]),
+                tiles=int(srv.stats["t"]), chunks=int(srv.stats["chunks"]),
+                chunk_skip_rate=round(skip_rate, 4),
+                exchange_messages=int(sstats["messages"]),
+                shard_bytes_per_device=int(ssrv.resident_tile_bytes()),
+            ))
+    if json_out:
+        # aggregate the local-vs-unindexed comparison per dataset: the
+        # per-layout ratios carry ±5% machine noise even interleaved,
+        # the geomean is the stable "no worse than unindexed" signal
+        summary = {}
+        for ds in DATASETS:
+            ratios = [r["range_qps"] / r["range_qps_unindexed"]
+                      for r in rows if r["dataset"] == ds]
+            prod = 1.0
+            for x in ratios:
+                prod *= x
+            summary[f"{ds}_range_local_over_unindexed_geomean"] = round(
+                prod ** (1.0 / len(ratios)), 4)
+            summary[f"{ds}_chunk_skip_rate_mean"] = round(
+                sum(r["chunk_skip_rate"] for r in rows
+                    if r["dataset"] == ds) / len(ratios), 4)
+        payload_doc = dict(
+            bench="serving", smoke=smoke, n_objects=n, batch_queries=q,
+            knn_k=k, payload=payload, backend=jax.default_backend(),
+            devices=jax.device_count(), shards=shards, summary=summary,
+            rows=rows)
+        JSON_PATH.write_text(json.dumps(payload_doc, indent=2) + "\n")
+        print(f"# wrote {JSON_PATH}", file=sys.stderr)
 
 
 if __name__ == "__main__":
-    main(smoke="--smoke" in sys.argv)
+    main(smoke="--smoke" in sys.argv, json_out="--json" in sys.argv)

@@ -19,5 +19,23 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
     return times[len(times) // 2] * 1e6
 
 
+def timeit_many(fns, warmup: int = 1, iters: int = 3) -> list[float]:
+    """Median wall times (µs) of several callables, **interleaved**: each
+    iteration times every fn once, in order, so slow machine-load drift
+    hits all of them equally — the fair way to compare two executors of
+    the same query (sequential ``timeit`` calls confound drift with the
+    executor difference)."""
+    for _ in range(warmup):
+        for fn in fns:
+            jax.block_until_ready(fn())
+    times: list[list[float]] = [[] for _ in fns]
+    for _ in range(iters):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times[i].append(time.perf_counter() - t0)
+    return [sorted(t)[len(t) // 2] * 1e6 for t in times]
+
+
 def emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.1f},{derived}")

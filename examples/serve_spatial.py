@@ -67,6 +67,7 @@ if __name__ == "__main__":
               f"(dense {Q / dt_dense:>9.0f}, sharded {Q / dt_sh:>9.0f}, "
               f"f_max {stats['f_max']:>3d})  "
               f"fanout {stats['fanout_mean']:.2f}  "
+              f"chunk-skip {srv.chunk_skip_rate(qboxes):.2f}  "
               f"knn fanout {kstats['fanout_mean']:.2f}  "
               f"replication {srv.stats['replication']:.3f}  "
               f"resident/dev {srv.resident_tile_bytes() / 2**20:6.2f} MiB "

@@ -2,9 +2,11 @@
 
 Dense (``probe_counts`` / ``probe_mask``: every query vs every tile)
 and routed (``gathered_counts`` / ``gathered_mask``: every query vs
-only its ``(Q, F)`` candidate tiles) variants; ``ops`` is the public
-jit'd surface, ``ref`` the pure-jnp oracle, ``kernel`` the raw
-``pallas_call`` layer.  Padding everywhere is the inverted sentinel
-box (xmin > xmax), which intersects nothing.
+only its ``(Q, F)`` candidate tiles) variants, each with a
+chunk-skipping ``*_skip`` twin that consumes the staging's per-tile
+local index (one MBR per 128-member chunk) and predicates dead chunks
+away; ``ops`` is the public jit'd surface, ``ref`` the pure-jnp
+oracle, ``kernel`` the raw ``pallas_call`` layer.  Padding everywhere
+is the inverted sentinel box (xmin > xmax), which intersects nothing.
 """
 from . import kernel, ops, ref  # noqa: F401

@@ -23,11 +23,23 @@ Four entry points:
   own* f-th candidate tile.  Work drops from O(Q·T·cap) to
   O(Q·F·cap) — the partition-pruning win the paper's fan-out metric
   predicts, realised as compute instead of a report.
+- ``*_skip``: the **local-index** variants (LocationSpark's second,
+  intra-partition index layer).  Staging sorts each tile's members
+  along x and summarises every ``CHUNK``-lane (128-member) slot group
+  with one MBR ("chunk box"); the kernels test the query block against
+  a tile's C chunk boxes first and only run the full (BQ, CHUNK)
+  member compare for chunks some query in the block can hit
+  (``pl.when``) — dead chunks cost C scalar compares instead of
+  CHUNK·4 member compares.  Per-query predication (``hits & live``)
+  keeps the output bit-identical to the unindexed kernels whenever the
+  chunk boxes bound their members, and identical to the ``ref``
+  chunk-masked oracles unconditionally.
 
 Padding contract (same as mbr_join): callers pad query slots, member
 slots, and absent candidate tiles with *inverted* sentinel boxes
 (xmin > xmax), which intersect nothing, so no validity mask is
-streamed through VMEM.
+streamed through VMEM.  All-sentinel chunks get inverted chunk boxes
+and are always skipped.
 """
 from __future__ import annotations
 
@@ -36,6 +48,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BQ = 128
+CHUNK = 128  # members summarised per chunk box (the VPU lane width)
 
 
 def _block_hits(q_ref, t_ref):
@@ -167,3 +180,205 @@ def gather_mask_pallas(q4: jax.Array, gtiles: jax.Array,
         out_shape=jax.ShapeDtypeStruct((q, f, cap), jnp.bool_),
         interpret=interpret,
     )(q4, gtiles)
+
+
+# --------------------------------------------------------------------------
+# chunk-skipping (local-index) variants
+# --------------------------------------------------------------------------
+
+def _chunk_live_dense(q_ref, cb_ref, c: int):
+    """(BQ,) bool: which queries of the block hit chunk ``c``'s box.
+    cb_ref: (1, C, 4) this tile's chunk boxes."""
+    x0, y0 = cb_ref[0, c, 0], cb_ref[0, c, 1]
+    x1, y1 = cb_ref[0, c, 2], cb_ref[0, c, 3]
+    return ((q_ref[0, :] <= x1) & (x0 <= q_ref[2, :])
+            & (q_ref[1, :] <= y1) & (y0 <= q_ref[3, :]))
+
+
+def _block_hits_chunk(q_ref, t_ref, c: int):
+    """(BQ, CHUNK) member compare restricted to chunk ``c``."""
+    sl = slice(c * CHUNK, (c + 1) * CHUNK)
+    qx0 = q_ref[0, :][:, None]
+    qy0 = q_ref[1, :][:, None]
+    qx1 = q_ref[2, :][:, None]
+    qy1 = q_ref[3, :][:, None]
+    sx0 = t_ref[0, 0, sl][None, :]
+    sy0 = t_ref[0, 1, sl][None, :]
+    sx1 = t_ref[0, 2, sl][None, :]
+    sy1 = t_ref[0, 3, sl][None, :]
+    return (qx0 <= sx1) & (sx0 <= qx1) & (qy0 <= sy1) & (sy0 <= qy1)
+
+
+def _count_skip_kernel(q_ref, t_ref, cb_ref, out_ref):
+    bq = q_ref.shape[1]
+    n_chunks = t_ref.shape[2] // CHUNK
+    out_ref[0, :] = jnp.zeros((bq,), jnp.int32)
+    for c in range(n_chunks):
+        live = _chunk_live_dense(q_ref, cb_ref, c)
+
+        @pl.when(jnp.any(live))
+        def _(c=c, live=live):
+            hits = _block_hits_chunk(q_ref, t_ref, c) & live[:, None]
+            out_ref[0, :] += jnp.sum(hits.astype(jnp.int32), axis=1)
+
+
+def _mask_skip_kernel(q_ref, t_ref, cb_ref, out_ref):
+    bq = q_ref.shape[1]
+    n_chunks = t_ref.shape[2] // CHUNK
+    out_ref[0, ...] = jnp.zeros((bq, t_ref.shape[2]), jnp.bool_)
+    for c in range(n_chunks):
+        live = _chunk_live_dense(q_ref, cb_ref, c)
+
+        @pl.when(jnp.any(live))
+        def _(c=c, live=live):
+            out_ref[0, :, c * CHUNK:(c + 1) * CHUNK] = (
+                _block_hits_chunk(q_ref, t_ref, c) & live[:, None])
+
+
+def count_skip_pallas(q4: jax.Array, tiles: jax.Array, cboxes: jax.Array,
+                      bq: int = DEFAULT_BQ,
+                      interpret: bool = False) -> jax.Array:
+    """Dense probe with chunk skipping.
+
+    q4: (4, Q), tiles: (T, 4, cap), cboxes: (T, C, 4) per-chunk MBRs
+    (C == cap // CHUNK); Q % bq == 0, cap % CHUNK == 0 -> (T, Q) int32.
+    """
+    q = q4.shape[1]
+    t, _, cap = tiles.shape
+    grid = (t, q // bq)
+    c = cboxes.shape[1]
+    return pl.pallas_call(
+        _count_skip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, bq), lambda ti, i: (0, i)),
+            pl.BlockSpec((1, 4, cap), lambda ti, i: (ti, 0, 0)),
+            pl.BlockSpec((1, c, 4), lambda ti, i: (ti, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq), lambda ti, i: (ti, i)),
+        out_shape=jax.ShapeDtypeStruct((t, q), jnp.int32),
+        interpret=interpret,
+    )(q4, tiles, cboxes)
+
+
+def mask_skip_pallas(q4: jax.Array, tiles: jax.Array, cboxes: jax.Array,
+                     bq: int = DEFAULT_BQ,
+                     interpret: bool = False) -> jax.Array:
+    """Dense mask with chunk skipping: -> (T, Q, cap) bool (skipped
+    chunks read False)."""
+    q = q4.shape[1]
+    t, _, cap = tiles.shape
+    grid = (t, q // bq)
+    c = cboxes.shape[1]
+    return pl.pallas_call(
+        _mask_skip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, bq), lambda ti, i: (0, i)),
+            pl.BlockSpec((1, 4, cap), lambda ti, i: (ti, 0, 0)),
+            pl.BlockSpec((1, c, 4), lambda ti, i: (ti, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, cap), lambda ti, i: (ti, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, q, cap), jnp.bool_),
+        interpret=interpret,
+    )(q4, tiles, cboxes)
+
+
+def _chunk_live_gather(q_ref, gcb_ref, c: int):
+    """(BQ,) bool: row j's query vs row j's OWN candidate's chunk-c box.
+    gcb_ref: (BQ, 1, C, 4) gathered chunk boxes."""
+    x0, y0 = gcb_ref[:, 0, c, 0], gcb_ref[:, 0, c, 1]
+    x1, y1 = gcb_ref[:, 0, c, 2], gcb_ref[:, 0, c, 3]
+    return ((q_ref[0, :] <= x1) & (x0 <= q_ref[2, :])
+            & (q_ref[1, :] <= y1) & (y0 <= q_ref[3, :]))
+
+
+def _gather_block_hits_chunk(q_ref, g_ref, c: int):
+    """(BQ, CHUNK) per-row member compare restricted to chunk ``c``."""
+    sl = slice(c * CHUNK, (c + 1) * CHUNK)
+    qx0 = q_ref[0, :][:, None]
+    qy0 = q_ref[1, :][:, None]
+    qx1 = q_ref[2, :][:, None]
+    qy1 = q_ref[3, :][:, None]
+    sx0 = g_ref[:, 0, 0, sl]
+    sy0 = g_ref[:, 0, 1, sl]
+    sx1 = g_ref[:, 0, 2, sl]
+    sy1 = g_ref[:, 0, 3, sl]
+    return (qx0 <= sx1) & (sx0 <= qx1) & (qy0 <= sy1) & (sy0 <= qy1)
+
+
+def _gather_count_skip_kernel(q_ref, g_ref, gcb_ref, out_ref):
+    bq = q_ref.shape[1]
+    n_chunks = g_ref.shape[3] // CHUNK
+    out_ref[:, 0] = jnp.zeros((bq,), jnp.int32)
+    for c in range(n_chunks):
+        live = _chunk_live_gather(q_ref, gcb_ref, c)
+
+        @pl.when(jnp.any(live))
+        def _(c=c, live=live):
+            hits = _gather_block_hits_chunk(q_ref, g_ref, c) & live[:, None]
+            out_ref[:, 0] += jnp.sum(hits.astype(jnp.int32), axis=1)
+
+
+def _gather_mask_skip_kernel(q_ref, g_ref, gcb_ref, out_ref):
+    bq = q_ref.shape[1]
+    cap = g_ref.shape[3]
+    n_chunks = cap // CHUNK
+    out_ref[:, 0, :] = jnp.zeros((bq, cap), jnp.bool_)
+    for c in range(n_chunks):
+        live = _chunk_live_gather(q_ref, gcb_ref, c)
+
+        @pl.when(jnp.any(live))
+        def _(c=c, live=live):
+            out_ref[:, 0, c * CHUNK:(c + 1) * CHUNK] = (
+                _gather_block_hits_chunk(q_ref, g_ref, c) & live[:, None])
+
+
+def gather_count_skip_pallas(q4: jax.Array, gtiles: jax.Array,
+                             gcboxes: jax.Array, bq: int = DEFAULT_BQ,
+                             interpret: bool = False) -> jax.Array:
+    """Routed probe with chunk skipping, count form.
+
+    q4: (4, Q); gtiles: (Q, F, 4, cap); gcboxes: (Q, F, C, 4) each
+    query's gathered candidate chunk boxes (C == cap // CHUNK)
+    -> (Q, F) int32.
+    """
+    q = q4.shape[1]
+    _, f, _, cap = gtiles.shape
+    grid = (f, q // bq)
+    c = gcboxes.shape[2]
+    return pl.pallas_call(
+        _gather_count_skip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, bq), lambda fi, i: (0, i)),
+            pl.BlockSpec((bq, 1, 4, cap), lambda fi, i: (i, fi, 0, 0)),
+            pl.BlockSpec((bq, 1, c, 4), lambda fi, i: (i, fi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, 1), lambda fi, i: (i, fi)),
+        out_shape=jax.ShapeDtypeStruct((q, f), jnp.int32),
+        interpret=interpret,
+    )(q4, gtiles, gcboxes)
+
+
+def gather_mask_skip_pallas(q4: jax.Array, gtiles: jax.Array,
+                            gcboxes: jax.Array, bq: int = DEFAULT_BQ,
+                            interpret: bool = False) -> jax.Array:
+    """Routed mask with chunk skipping: -> (Q, F, cap) bool (skipped
+    chunks read False)."""
+    q = q4.shape[1]
+    _, f, _, cap = gtiles.shape
+    grid = (f, q // bq)
+    c = gcboxes.shape[2]
+    return pl.pallas_call(
+        _gather_mask_skip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((4, bq), lambda fi, i: (0, i)),
+            pl.BlockSpec((bq, 1, 4, cap), lambda fi, i: (i, fi, 0, 0)),
+            pl.BlockSpec((bq, 1, c, 4), lambda fi, i: (i, fi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, 1, cap), lambda fi, i: (i, fi, 0)),
+        out_shape=jax.ShapeDtypeStruct((q, f, cap), jnp.bool_),
+        interpret=interpret,
+    )(q4, gtiles, gcboxes)

@@ -10,6 +10,14 @@ indices from ``repro.serve.router`` — entries in [0, T) are real tiles,
 ``-1`` marks padding slots and is remapped to an all-sentinel tile, so
 padded candidates contribute exactly zero hits and no validity mask is
 needed downstream.
+
+Local-index contract (``*_skip``): ``cboxes`` is the staging's
+``(T, C, 4)`` chunk-box summary (``C == ceil(cap / CHUNK)``, chunk c
+bounding member slots ``[c*CHUNK, (c+1)*CHUNK)``; all-sentinel chunks
+carry inverted boxes).  Answers equal the unindexed variants whenever
+the chunk boxes bound their members; on TPU dead chunks are skipped,
+off-TPU the fused jnp path masks per-chunk partials (same O(1/CHUNK)
+bookkeeping cost, same bits).
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import jax.numpy as jnp
 
 from ...core.geometry import SENTINEL_BOX
 from . import kernel
+from .kernel import CHUNK  # noqa: F401  (re-export: staging chunks on this)
 
 _SENTINEL = jnp.array(SENTINEL_BOX, jnp.float32)
 _LANE = 128
@@ -100,12 +109,14 @@ def gathered_ids(ids: jax.Array, cand: jax.Array) -> jax.Array:
 
 
 def _gather_cm(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
-               bq: int) -> tuple[jax.Array, jax.Array]:
+               bq: int) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Shared gathered-probe staging: pad queries to a block multiple,
     remap -1 candidates to an appended all-sentinel tile, and gather the
     component-major candidate stack.
 
-    -> ``(q4[4, Q_pad], gtiles[Q_pad, F, 4, cap_pad])``.
+    -> ``(q4[4, Q_pad], gtiles[Q_pad, F, 4, cap_pad], cidx[Q_pad, F])``
+    (``cidx`` is the padded, remapped candidate index — reused to
+    gather per-candidate chunk boxes for the ``*_skip`` kernels).
     """
     tiles_p, t = _append_pad_row(tiles.astype(jnp.float32), _SENTINEL)
     t3 = _pad_tiles_cm(tiles_p)                    # (T+1, 4, cap_pad)
@@ -116,7 +127,7 @@ def _gather_cm(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
         cidx = jnp.concatenate(
             [cidx, jnp.full((pad, cand.shape[1]), t, cidx.dtype)], axis=0)
     q4 = _pad_queries_cm(qboxes.astype(jnp.float32), bq)
-    return q4, t3[cidx]
+    return q4, t3[cidx], cidx
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
@@ -142,7 +153,7 @@ def gathered_counts(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
     if interpret is None:
         interpret = False
     q = qboxes.shape[0]
-    q4, gt = _gather_cm(qboxes, tiles, cand, bq)
+    q4, gt, _ = _gather_cm(qboxes, tiles, cand, bq)
     return kernel.gather_count_pallas(q4, gt, bq, interpret=interpret)[:q]
 
 
@@ -164,7 +175,7 @@ def gathered_mask(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
     if interpret is None:
         interpret = False
     q, cap = qboxes.shape[0], tiles.shape[1]
-    q4, gt = _gather_cm(qboxes, tiles, cand, bq)
+    q4, gt, _ = _gather_cm(qboxes, tiles, cand, bq)
     full = kernel.gather_mask_pallas(q4, gt, bq, interpret=interpret)
     return full[:q, :, :cap]
 
@@ -185,3 +196,138 @@ def probe_mask(qboxes: jax.Array, tiles: jax.Array,
     t3 = _pad_tiles_cm(tiles.astype(jnp.float32))
     full = kernel.mask_pallas(q4, t3, bq, interpret=interpret)
     return jnp.swapaxes(full, 0, 1)[:q, :, :cap]
+
+
+# --------------------------------------------------------------------------
+# chunk-skipping (local-index) variants
+# --------------------------------------------------------------------------
+
+def gathered_chunk_boxes(cboxes: jax.Array, cand: jax.Array) -> jax.Array:
+    """Candidate gather of chunk boxes: (T, C, 4) x (Q, F) ->
+    (Q, F, C, 4) with -1 candidates remapped to an appended all-sentinel
+    chunk row — the chunk-box companion of ``gathered_rows``, so padded
+    candidates' chunks never test live."""
+    cb_p, t = _append_pad_row(cboxes.astype(jnp.float32), _SENTINEL)
+    return cb_p[jnp.where(cand >= 0, cand, t)]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def probe_counts_skip(qboxes: jax.Array, tiles: jax.Array,
+                      cboxes: jax.Array, bq: int = kernel.DEFAULT_BQ,
+                      interpret: bool | None = None) -> jax.Array:
+    """Dense per-(query, tile) hit counts with chunk skipping.
+
+    qboxes: (Q, 4); tiles: (T, cap, 4); cboxes: (T, C, 4) chunk boxes
+    (``C == ceil(cap / CHUNK)``) -> (Q, T) int32, equal to
+    ``probe_counts`` whenever each chunk box bounds the members of
+    *this* ``tiles`` array in its slot range.  NB the staging's
+    ``chunk_boxes`` bound **canonical** members only — pair them with
+    ``canon_tiles``; probing the full member tiles needs chunk boxes
+    built over the full tiles.  Executor selection as in
+    ``gathered_counts``: the Pallas skip kernel on TPU (or
+    ``interpret=True``), the fused chunk-masked jnp path off-TPU.
+    """
+    if interpret is None and _interpret_default():
+        from . import ref
+        return ref.probe_counts_skip(qboxes.astype(jnp.float32),
+                                     tiles.astype(jnp.float32),
+                                     cboxes.astype(jnp.float32))
+    if interpret is None:
+        interpret = False
+    q = qboxes.shape[0]
+    q4 = _pad_queries_cm(qboxes.astype(jnp.float32), bq)
+    t3 = _pad_tiles_cm(tiles.astype(jnp.float32))
+    counts = kernel.count_skip_pallas(q4, t3, cboxes.astype(jnp.float32),
+                                      bq, interpret=interpret)
+    return counts.T[:q]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def probe_mask_skip(qboxes: jax.Array, tiles: jax.Array,
+                    cboxes: jax.Array, bq: int = kernel.DEFAULT_BQ,
+                    interpret: bool | None = None) -> jax.Array:
+    """Dense hit table with chunk skipping: -> (Q, T, cap) bool
+    (un-padded view); same chunk-box contract (boxes must bound the
+    probed ``tiles`` — staged boxes pair with ``canon_tiles``) and
+    executor selection as ``probe_counts_skip``."""
+    if interpret is None and _interpret_default():
+        from . import ref
+        return jnp.swapaxes(
+            ref.probe_mask_skip(qboxes.astype(jnp.float32),
+                                tiles.astype(jnp.float32),
+                                cboxes.astype(jnp.float32)), 0, 1)
+    if interpret is None:
+        interpret = False
+    q, cap = qboxes.shape[0], tiles.shape[1]
+    q4 = _pad_queries_cm(qboxes.astype(jnp.float32), bq)
+    t3 = _pad_tiles_cm(tiles.astype(jnp.float32))
+    full = kernel.mask_skip_pallas(q4, t3, cboxes.astype(jnp.float32),
+                                   bq, interpret=interpret)
+    return jnp.swapaxes(full, 0, 1)[:q, :, :cap]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def gathered_counts_skip(qboxes: jax.Array, tiles: jax.Array,
+                         cboxes: jax.Array, cand: jax.Array,
+                         bq: int = kernel.DEFAULT_BQ,
+                         interpret: bool | None = None) -> jax.Array:
+    """Routed per-(query, candidate) hit counts with chunk skipping.
+
+    qboxes: (Q, 4); tiles: (T, cap, 4); cboxes: (T, C, 4); cand:
+    (Q, F) int32 (-1 padding) -> (Q, F) int32, equal to
+    ``gathered_counts`` whenever the chunk boxes bound their members —
+    the serving hot path's local-index executor.
+    """
+    if interpret is None and _interpret_default():
+        from . import ref
+        return ref.gathered_counts_skip(qboxes.astype(jnp.float32),
+                                        gathered_rows(tiles, cand),
+                                        gathered_chunk_boxes(cboxes, cand))
+    if interpret is None:
+        interpret = False
+    q = qboxes.shape[0]
+    q4, gt, cidx = _gather_cm(qboxes, tiles, cand, bq)
+    cb_p, _ = _append_pad_row(cboxes.astype(jnp.float32), _SENTINEL)
+    out = kernel.gather_count_skip_pallas(q4, gt, cb_p[cidx], bq,
+                                          interpret=interpret)
+    return out[:q]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def gathered_mask_skip(qboxes: jax.Array, tiles: jax.Array,
+                       cboxes: jax.Array, cand: jax.Array,
+                       bq: int = kernel.DEFAULT_BQ,
+                       interpret: bool | None = None) -> jax.Array:
+    """Routed hit table with chunk skipping: -> (Q, F, cap) bool
+    (un-padded view); executor selection as in ``gathered_counts_skip``."""
+    if interpret is None and _interpret_default():
+        from . import ref
+        return ref.gathered_mask_skip(qboxes.astype(jnp.float32),
+                                      gathered_rows(tiles, cand),
+                                      gathered_chunk_boxes(cboxes, cand))
+    if interpret is None:
+        interpret = False
+    q, cap = qboxes.shape[0], tiles.shape[1]
+    q4, gt, cidx = _gather_cm(qboxes, tiles, cand, bq)
+    cb_p, _ = _append_pad_row(cboxes.astype(jnp.float32), _SENTINEL)
+    full = kernel.gather_mask_skip_pallas(q4, gt, cb_p[cidx], bq,
+                                          interpret=interpret)
+    return full[:q, :, :cap]
+
+
+@jax.jit
+def chunk_skip_rate(qboxes: jax.Array, cboxes: jax.Array,
+                    cand: jax.Array) -> jax.Array:
+    """Fraction of (query, live candidate) chunk probes the local index
+    skips: chunks whose box the query misses, over all chunks of all
+    non-padding candidates.  All-sentinel chunks (pure padding past a
+    tile's canonical members) count as skipped — an unindexed probe
+    would have swept them.  -> () f32 in [0, 1].
+    """
+    from . import ref
+    live_cand = cand >= 0                                   # (Q, F)
+    hit = ref.gathered_chunk_hits(qboxes.astype(jnp.float32),
+                                  gathered_chunk_boxes(cboxes, cand))
+    total = jnp.sum(live_cand) * cboxes.shape[1]
+    skipped = jnp.sum(~hit & live_cand[..., None])
+    return skipped / jnp.maximum(total, 1)

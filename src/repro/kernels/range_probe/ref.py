@@ -4,11 +4,22 @@ Shapes mirror the kernels' logical outputs before the ops-layer
 transposes: dense oracles are tile-major, gathered oracles are
 query-major.  Sentinel boxes (xmin > xmax) intersect nothing, so
 padding contributes zero hits by construction.
+
+The ``*_skip`` oracles define the chunk-masked semantics of the
+local-index kernels: a member hit only counts if the query also hits
+the member's 128-lane chunk box.  When chunk boxes bound their members
+(the staging invariant) this equals the unmasked result; when they
+don't, the kernels must still match these oracles bit-for-bit.  They
+double as the fused off-TPU executors — the chunk bookkeeping is
+O(work / CHUNK), so the masked path costs within noise of the
+unmasked one on backends that cannot skip.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from .kernel import CHUNK
 
 
 def probe_mask(qboxes: jax.Array, tiles: jax.Array) -> jax.Array:
@@ -44,3 +55,79 @@ def gathered_mask(qboxes: jax.Array, gtiles: jax.Array) -> jax.Array:
 def gathered_counts(qboxes: jax.Array, gtiles: jax.Array) -> jax.Array:
     """(Q, 4) x (Q, F, cap, 4) -> (Q, F) per-candidate hit counts."""
     return jnp.sum(gathered_mask(qboxes, gtiles).astype(jnp.int32), axis=2)
+
+
+# --------------------------------------------------------------------------
+# chunk-masked (local-index) oracles
+# --------------------------------------------------------------------------
+
+def _pad_lanes(mask: jax.Array, n_chunks: int) -> jax.Array:
+    """Pad a (..., cap) hit table with False up to n_chunks * CHUNK."""
+    pad = n_chunks * CHUNK - mask.shape[-1]
+    if pad:
+        mask = jnp.pad(mask, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
+    return mask
+
+
+def chunk_hits(qboxes: jax.Array, cboxes: jax.Array) -> jax.Array:
+    """(Q, 4) x (T, C, 4) -> (Q, T, C) query-vs-chunk-box intersection."""
+    q = qboxes[:, None, None, :]
+    s = cboxes[None]
+    return (
+        (q[..., 0] <= s[..., 2])
+        & (s[..., 0] <= q[..., 2])
+        & (q[..., 1] <= s[..., 3])
+        & (s[..., 1] <= q[..., 3])
+    )
+
+
+def probe_mask_skip(qboxes: jax.Array, tiles: jax.Array,
+                    cboxes: jax.Array) -> jax.Array:
+    """Chunk-masked ``probe_mask``: -> (T, Q, cap); a hit survives only
+    if the query also hits the member's chunk box."""
+    live = jnp.swapaxes(chunk_hits(qboxes, cboxes), 0, 1)  # (T, Q, C)
+    lanes = jnp.repeat(live, CHUNK, axis=-1)[..., :tiles.shape[1]]
+    return probe_mask(qboxes, tiles) & lanes
+
+
+def probe_counts_skip(qboxes: jax.Array, tiles: jax.Array,
+                      cboxes: jax.Array) -> jax.Array:
+    """Chunk-masked ``probe_counts``: -> (Q, T).  Sums per-chunk
+    partials, then zeroes chunks the query's box cannot reach."""
+    n_chunks = cboxes.shape[1]
+    m = _pad_lanes(probe_mask(qboxes, tiles), n_chunks)     # (T, Q, cap_p)
+    part = jnp.sum(m.reshape(m.shape[0], m.shape[1], n_chunks, CHUNK)
+                   .astype(jnp.int32), axis=3)              # (T, Q, C)
+    live = jnp.swapaxes(chunk_hits(qboxes, cboxes), 0, 1)   # (T, Q, C)
+    return jnp.sum(part * live, axis=2).T
+
+
+def gathered_chunk_hits(qboxes: jax.Array, gcboxes: jax.Array) -> jax.Array:
+    """(Q, 4) x (Q, F, C, 4) -> (Q, F, C): query j vs ITS OWN gathered
+    candidates' chunk boxes."""
+    q = qboxes[:, None, None, :]
+    s = gcboxes
+    return (
+        (q[..., 0] <= s[..., 2])
+        & (s[..., 0] <= q[..., 2])
+        & (q[..., 1] <= s[..., 3])
+        & (s[..., 1] <= q[..., 3])
+    )
+
+
+def gathered_mask_skip(qboxes: jax.Array, gtiles: jax.Array,
+                       gcboxes: jax.Array) -> jax.Array:
+    """Chunk-masked ``gathered_mask``: -> (Q, F, cap)."""
+    live = gathered_chunk_hits(qboxes, gcboxes)             # (Q, F, C)
+    lanes = jnp.repeat(live, CHUNK, axis=-1)[..., :gtiles.shape[2]]
+    return gathered_mask(qboxes, gtiles) & lanes
+
+
+def gathered_counts_skip(qboxes: jax.Array, gtiles: jax.Array,
+                         gcboxes: jax.Array) -> jax.Array:
+    """Chunk-masked ``gathered_counts``: -> (Q, F)."""
+    n_chunks = gcboxes.shape[2]
+    m = _pad_lanes(gathered_mask(qboxes, gtiles), n_chunks)  # (Q, F, cap_p)
+    part = jnp.sum(m.reshape(m.shape[0], m.shape[1], n_chunks, CHUNK)
+                   .astype(jnp.int32), axis=3)               # (Q, F, C)
+    return jnp.sum(part * gathered_chunk_hits(qboxes, gcboxes), axis=2)

@@ -85,6 +85,13 @@ def initial_radius(diag, k: int, n_slots: int):
     objects, floored at diag·1e-6.  Shared by the executors and the
     server's LPT cost proxy (``serve.engine``) so packing weights match
     the radius the kernel actually starts from.
+
+    ``n_slots`` must be the number of *live canonical members* (the
+    dataset size ``n``), not the padded ``T·cap`` slot count — sentinel
+    slots hold nothing, so counting them biases the density high, the
+    radius low, and every high-padding layout burns extra deepening
+    rounds doubling back up (the ``n_live`` parameter of the executors
+    exists for exactly this).
     """
     r = diag * 0.5 * jnp.sqrt(k / jnp.float32(max(n_slots, 1)))
     return jnp.maximum(r, diag * 1e-6)
@@ -113,25 +120,34 @@ def _refine_topk(k: int, pt: jax.Array, hit: jax.Array,
     return jnp.where(d2[order] < _INF, cid[order], -1), d2[order]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand"))
+@functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand",
+                                             "n_live"))
 def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
                 ids: jax.Array, uni: jax.Array, r0: float | None = None,
-                max_rounds: int = 32, max_cand: int = 1024):
+                max_rounds: int = 32, max_cand: int = 1024,
+                n_live: int | None = None):
     """Exact batched kNN against a staged layout.
 
     pts: (Q, 2) query points; canon_tiles/ids: staging from
     ``serve.engine`` — canonical copies only, so deepening counts are
-    unique-object counts.  Returns ``(nn_ids[Q, k] int32,
-    nn_d2[Q, k] f32, radius[Q] f32, overflow[Q] bool)``; overflow marks
-    queries whose refinement box held more than ``max_cand`` candidates
-    (re-run with a bigger ``max_cand`` — exactness is flagged, never
-    silently lost).
+    unique-object counts.  ``n_live`` is the live canonical member
+    count (the dataset size) the initial radius is density-sized from;
+    ``None`` falls back to the padded ``T·cap`` slot count, which
+    undersizes the radius on high-padding layouts (see
+    ``initial_radius``) — callers that know ``n`` should pass it.
+    Returns ``(nn_ids[Q, k] int32, nn_d2[Q, k] f32, radius[Q] f32,
+    overflow[Q] bool, rounds[Q] int32)``; overflow marks queries whose
+    refinement box held more than ``max_cand`` candidates (re-run with
+    a bigger ``max_cand`` — exactness is flagged, never silently
+    lost); rounds counts each query's radius doublings (the deepening
+    cost the initial radius is meant to minimise).
     """
     q = pts.shape[0]
     diag = jnp.sqrt(jnp.sum((uni[2:] - uni[:2]) ** 2))
     if r0 is None:
-        r_init = initial_radius(
-            diag, k, canon_tiles.shape[0] * canon_tiles.shape[1])
+        n_slots = (n_live if n_live is not None
+                   else canon_tiles.shape[0] * canon_tiles.shape[1])
+        r_init = initial_radius(diag, k, n_slots)
     else:
         r_init = jnp.maximum(jnp.float32(r0), diag * 1e-6)
 
@@ -148,17 +164,19 @@ def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
                        axis=1)
 
     def cond(state):
-        r, counts, i = state
+        r, counts, rounds, i = state
         return jnp.any((counts < k) & (r < r_cover)) & (i < max_rounds)
 
     def body(state):
-        r, counts, i = state
+        r, counts, rounds, i = state
+        grow = (counts < k) & (r < r_cover)
         r = jnp.where(counts < k, jnp.minimum(r * 2.0, r_cover), r)
-        return r, counts_at(r), i + 1
+        return r, counts_at(r), rounds + grow.astype(jnp.int32), i + 1
 
     r = jnp.full((q,), r_init, jnp.float32)
     counts = counts_at(r)
-    r, counts, _ = jax.lax.while_loop(cond, body, (r, counts, jnp.int32(0)))
+    r, counts, rounds, _ = jax.lax.while_loop(
+        cond, body, (r, counts, jnp.zeros((q,), jnp.int32), jnp.int32(0)))
 
     # refinement: the √2-inflated box provably contains all true kNN
     re = r * jnp.sqrt(jnp.float32(2.0))
@@ -171,29 +189,36 @@ def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     nn_ids, nn_d2 = jax.vmap(
         lambda pt, hit: _refine_topk(k, pt, hit, tiles_flat, ids_flat,
                                      max_cand))(pts, flat)
-    return nn_ids, nn_d2, r, n_cand > max_cand
+    return nn_ids, nn_d2, r, n_cand > max_cand, rounds
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand"))
+@functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand",
+                                             "n_live"))
 def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
                ids: jax.Array, uni: jax.Array, cand: jax.Array,
                excluded: jax.Array, r0: float | None = None,
-               max_rounds: int = 32, max_cand: int = 1024):
+               max_rounds: int = 32, max_cand: int = 1024,
+               n_live: int | None = None,
+               chunk_boxes: jax.Array | None = None):
     """Exact batched kNN probing only each query's candidate tiles.
 
-    Same contract as ``batched_knn`` with two extra inputs from
-    ``serve.router.candidate_knn`` over the layout's canonical probe
-    boxes: ``cand`` (Q, F) int32 frontier tile indices (-1 padding) and
-    ``excluded`` (Q,) f32, the L∞ distance of the nearest tile *not* in
-    the frontier (+inf when the frontier holds every tile).
+    Same contract as ``batched_knn`` (including ``n_live`` for the
+    density-sized initial radius and the per-query ``rounds`` output)
+    with two extra inputs from ``serve.router.candidate_knn`` over the
+    layout's canonical probe boxes: ``cand`` (Q, F) int32 frontier tile
+    indices (-1 padding) and ``excluded`` (Q,) f32, the L∞ distance of
+    the nearest tile *not* in the frontier (+inf when the frontier
+    holds every tile).  ``chunk_boxes`` (T, C, 4), when given, runs
+    deepening counts and refinement through the chunk-skipping kernels
+    (``local_index=True`` staging) — same bits, dead chunks skipped.
 
     Returns ``(nn_ids[Q, k] int32, nn_d2[Q, k] f32, radius[Q] f32,
-    overflow[Q] bool)``.  ``overflow`` flags a query when (a) its
-    refinement box held more than ``max_cand`` candidates, or (b) its
-    final L∞ refinement radius reached ``excluded`` — a tile outside
-    the frontier could hold a true neighbour.  Non-flagged answers are
-    exact (ties by id, like the dense path); the server retries flagged
-    queries with a wider frontier.
+    overflow[Q] bool, rounds[Q] int32)``.  ``overflow`` flags a query
+    when (a) its refinement box held more than ``max_cand`` candidates,
+    or (b) its final L∞ refinement radius reached ``excluded`` — a tile
+    outside the frontier could hold a true neighbour.  Non-flagged
+    answers are exact (ties by id, like the dense path); the server
+    retries flagged queries with a wider frontier.
 
     Rows with an all ``-1`` candidate list (SPMD padding slots) can
     never reach k hits; they start at the covering radius so they don't
@@ -203,8 +228,9 @@ def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     dead = jnp.all(cand < 0, axis=1)
     diag = jnp.sqrt(jnp.sum((uni[2:] - uni[:2]) ** 2))
     if r0 is None:
-        r_init = initial_radius(
-            diag, k, canon_tiles.shape[0] * canon_tiles.shape[1])
+        n_slots = (n_live if n_live is not None
+                   else canon_tiles.shape[0] * canon_tiles.shape[1])
+        r_init = initial_radius(diag, k, n_slots)
     else:
         r_init = jnp.maximum(jnp.float32(r0), diag * 1e-6)
 
@@ -214,30 +240,37 @@ def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     r_cover = jnp.maximum(r_cover, diag * 1e-6)
 
     def counts_at(r):
-        return jnp.sum(
-            rops.gathered_counts(_qboxes(pts, r), canon_tiles, cand), axis=1)
+        qb = _qboxes(pts, r)
+        if chunk_boxes is None:
+            return jnp.sum(rops.gathered_counts(qb, canon_tiles, cand),
+                           axis=1)
+        return jnp.sum(rops.gathered_counts_skip(qb, canon_tiles,
+                                                 chunk_boxes, cand), axis=1)
 
     def cond(state):
-        r, counts, i = state
+        r, counts, rounds, i = state
         return jnp.any((counts < k) & (r < r_cover)) & (i < max_rounds)
 
     def body(state):
-        r, counts, i = state
+        r, counts, rounds, i = state
+        grow = (counts < k) & (r < r_cover)
         r = jnp.where(counts < k, jnp.minimum(r * 2.0, r_cover), r)
-        return r, counts_at(r), i + 1
+        return r, counts_at(r), rounds + grow.astype(jnp.int32), i + 1
 
     r = jnp.where(dead, r_cover, jnp.full((q,), r_init, jnp.float32))
     counts = counts_at(r)
-    r, counts, _ = jax.lax.while_loop(cond, body, (r, counts, jnp.int32(0)))
+    r, counts, rounds, _ = jax.lax.while_loop(
+        cond, body, (r, counts, jnp.zeros((q,), jnp.int32), jnp.int32(0)))
 
     # refinement over the frontier only; the √2-inflated box provably
     # contains all true kNN *unless* it reaches an excluded tile —
     # the same local extraction the sharded owners run
     re = r * jnp.sqrt(jnp.float32(2.0))
     nn_ids, nn_d2, n_cand = knn_partial(pts, canon_tiles, ids, cand, re,
-                                        k=k, max_cand=max_cand)
+                                        k=k, max_cand=max_cand,
+                                        chunk_boxes=chunk_boxes)
     overflow = (n_cand > max_cand) | (excluded <= re)
-    return nn_ids, nn_d2, r, overflow
+    return nn_ids, nn_d2, r, overflow, rounds
 
 
 # --------------------------------------------------------------------------
@@ -247,14 +280,17 @@ def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
 @functools.partial(jax.jit, static_argnames=("k", "max_cand"))
 def knn_partial(pts: jax.Array, canon_tiles: jax.Array, ids: jax.Array,
                 cand: jax.Array, re: jax.Array, k: int,
-                max_cand: int = 1024
+                max_cand: int = 1024,
+                chunk_boxes: jax.Array | None = None
                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Owner-side refinement: local top-k within ``[pt ± re]``.
 
     pts: (Q, 2) received query points; canon_tiles/ids: this owner's
     *local* shard; cand: (Q, F) local candidate tile indices (-1
     padding); re: (Q,) final L∞ refinement radii (already √2-inflated
-    by the caller) -> ``(nn_ids[Q, k], nn_d2[Q, k], n_cand[Q])``.
+    by the caller); chunk_boxes: this shard's (T, C, 4) local index or
+    None (selects the chunk-skipping mask kernel — same bits)
+    -> ``(nn_ids[Q, k], nn_d2[Q, k], n_cand[Q])``.
 
     Because the true global top-k is contained in the union of
     per-owner top-k's, exchanging only ``k`` rows per (query, owner)
@@ -265,7 +301,11 @@ def knn_partial(pts: jax.Array, canon_tiles: jax.Array, ids: jax.Array,
     ``max_cand``, so the caller must flag those queries.
     """
     q = pts.shape[0]
-    mask = rops.gathered_mask(_qboxes(pts, re), canon_tiles, cand)
+    if chunk_boxes is None:
+        mask = rops.gathered_mask(_qboxes(pts, re), canon_tiles, cand)
+    else:
+        mask = rops.gathered_mask_skip(_qboxes(pts, re), canon_tiles,
+                                       chunk_boxes, cand)
     gids = rops.gathered_ids(ids, cand).reshape(q, -1)
     gboxes = rops.gathered_rows(canon_tiles, cand).reshape(q, -1, 4)
     flat = mask.reshape(q, -1) & (gids >= 0)

@@ -113,25 +113,35 @@ def range_ids(qboxes: jax.Array, canon_tiles: jax.Array, ids: jax.Array,
 
 @jax.jit
 def pruned_range_counts(qboxes: jax.Array, canon_tiles: jax.Array,
-                        cand: jax.Array) -> jax.Array:
+                        cand: jax.Array,
+                        chunk_boxes: jax.Array | None = None) -> jax.Array:
     """Exact per-query unique hit counts, probing candidate tiles only.
 
     qboxes: (Q, 4); canon_tiles: (T, cap, 4) canonical-copy member
     boxes; cand: (Q, F) int32 from ``serve.router.candidate_range``
     over the layout's canonical probe boxes (-1 = padding slot)
-    -> (Q,) int32.
+    -> (Q,) int32.  ``chunk_boxes`` (T, C, 4), when given (staging with
+    ``local_index=True``), switches to the chunk-skipping kernel —
+    same bits, dead 128-member chunks skipped.
 
     Exactness: every canonical copy an un-pruned sweep would hit lives
     in a tile whose probe box the query overlaps, so a candidate list
     without overflow loses nothing; padded (-1) candidates gather an
-    all-sentinel tile and contribute zero.
+    all-sentinel tile and contribute zero.  Chunk boxes bound their
+    chunks' canonical members (a staging invariant), so a skipped
+    chunk provably holds no hit.
     """
-    return jnp.sum(rops.gathered_counts(qboxes, canon_tiles, cand), axis=1)
+    if chunk_boxes is None:
+        return jnp.sum(rops.gathered_counts(qboxes, canon_tiles, cand),
+                       axis=1)
+    return jnp.sum(rops.gathered_counts_skip(qboxes, canon_tiles,
+                                             chunk_boxes, cand), axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("max_hits",))
 def pruned_range_ids(qboxes: jax.Array, canon_tiles: jax.Array,
-                     ids: jax.Array, cand: jax.Array, max_hits: int
+                     ids: jax.Array, cand: jax.Array, max_hits: int,
+                     chunk_boxes: jax.Array | None = None
                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Exact per-query unique hit-id sets from candidate tiles only.
 
@@ -139,13 +149,19 @@ def pruned_range_ids(qboxes: jax.Array, canon_tiles: jax.Array,
     flagged past ``max_hits``) at O(Q·F·cap) instead of O(Q·T·cap):
     ids: (T, cap) int32 (-1 padding); cand: (Q, F) int32 (-1 padding)
     -> ``(hit_ids[Q, max_hits], counts[Q], overflow[Q])``.
+    ``chunk_boxes`` selects the chunk-skipping mask kernel (see
+    ``pruned_range_counts``).
 
     Uniqueness is free: each object has exactly one canonical slot
     repo-wide, and a candidate list names distinct tiles, so no id can
     appear twice in the gathered hit table.
     """
     q = qboxes.shape[0]
-    mask = rops.gathered_mask(qboxes, canon_tiles, cand)   # (Q, F, cap)
+    if chunk_boxes is None:
+        mask = rops.gathered_mask(qboxes, canon_tiles, cand)  # (Q, F, cap)
+    else:
+        mask = rops.gathered_mask_skip(qboxes, canon_tiles, chunk_boxes,
+                                       cand)
     gids = rops.gathered_ids(ids, cand)                    # (Q, F, cap)
     flat = mask.reshape(q, -1) & (gids.reshape(q, -1) >= 0)
     keyed = jnp.where(flat, gids.reshape(q, -1), _BIG_ID)

@@ -7,10 +7,13 @@
   (``owner_split``) that re-expresses candidate lists in sharded
   ``(owner device, local tile)`` coordinates.
 - ``engine``: stage a dataset once under any ``Partitioning`` (MASJ
-  tiles + canonical marks + canonical probe boxes), then answer
-  streams of range/kNN batches with an SPMD ``shard_map`` step:
-  fan-out-weighted LPT query packing and pruned candidate-tile probing
-  (dense all-tile sweep kept as the oracle, ``pruned=False``).
+  tiles + canonical marks + canonical probe boxes + the intra-tile
+  local index: x-sorted members and per-128-slot chunk boxes,
+  ``local_index=True``), then answer streams of range/kNN batches with
+  an SPMD ``shard_map`` step: fan-out-weighted LPT query packing and
+  pruned candidate-tile probing with chunk-skipping kernels (dense
+  all-tile sweep kept as the oracle, ``pruned=False``; unindexed
+  staging via ``local_index=False``).
   ``sharded=True`` shards the tiles themselves across devices
   (``stage_sharded`` — capped-LPT placement, O(total/D) per-device
   memory) and serves through the exchange layer.

@@ -17,8 +17,11 @@ jitted ``shard_map`` step:
             on one device),
   probe   — each device probes its query shard's candidate tiles only,
             via the gathered ``range_probe`` Pallas kernel — O(Q·F·cap)
-            work; the dense all-tile sweep is kept as the oracle path
-            (``pruned=False``),
+            work, and inside each candidate tile the **local index**
+            (``local_index=True``: x-sorted members + per-128-slot
+            chunk boxes) lets the chunk-skipping kernel variants drop
+            dead chunks; the dense all-tile sweep is kept as the
+            oracle path (``pruned=False``),
   gather  — results come back query-sharded and are unpermuted.
 
 Two placements of the *data* are supported:
@@ -62,6 +65,7 @@ from ..core import geometry, placement
 from ..core.compat import shard_map
 from ..core.partition import api, assign
 from ..core.partition.assign import round_up
+from ..kernels.range_probe import ops as rops
 from ..query import knn as knn_mod, range as range_mod
 from . import exchange, router
 
@@ -72,7 +76,7 @@ log = logging.getLogger(__name__)
 
 @partial(jax.tree_util.register_dataclass,
          data_fields=("tiles", "ids", "canon_tiles", "tile_boxes",
-                      "probe_boxes", "uni"),
+                      "probe_boxes", "chunk_boxes", "uni"),
          meta_fields=())
 @dataclasses.dataclass(frozen=True)
 class StagedLayout:
@@ -86,6 +90,12 @@ class StagedLayout:
                   MBRs (sentinel where a tile holds none) — the box set
                   the pruned executor routes on; covers every canonical
                   hit on all six layouts
+    chunk_boxes : (T, C, 4) the **local index** (``local_index=True``
+                  staging, else None): slots are sorted canonical-first
+                  by ascending xmin, and chunk c's box is the tight MBR
+                  over canonical members in slots [c·128, (c+1)·128) —
+                  sentinel where a chunk holds none, so the ``*_skip``
+                  probe kernels skip it outright
     uni         : (4,) dataset universe
     """
 
@@ -94,16 +104,45 @@ class StagedLayout:
     canon_tiles: jax.Array
     tile_boxes: jax.Array
     probe_boxes: jax.Array
+    chunk_boxes: jax.Array | None
     uni: jax.Array
 
 
+def _chunk_summary(canon_tiles: jax.Array) -> jax.Array:
+    """(T, cap, 4) canonical tiles -> (T, ceil(cap/CHUNK), 4) chunk
+    boxes: per 128-member slot group, the tight MBR over its canonical
+    member MBRs (sentinel slots are min/max-neutral; an all-sentinel
+    chunk collapses to the sentinel box and is always skipped)."""
+    t, cap, _ = canon_tiles.shape
+    c = -(-cap // rops.CHUNK)
+    pad = c * rops.CHUNK - cap
+    if pad:
+        canon_tiles = jnp.concatenate(
+            [canon_tiles,
+             jnp.broadcast_to(jnp.asarray(_SENTINEL), (t, pad, 4))], axis=1)
+    g = canon_tiles.reshape(t, c, rops.CHUNK, 4)
+    return jnp.concatenate(
+        [jnp.min(g[..., :2], axis=2), jnp.max(g[..., 2:], axis=2)], axis=-1)
+
+
 def stage(parts: api.Partitioning, mbrs: jax.Array,
-          capacity: int | None = None) -> tuple[StagedLayout, dict]:
+          capacity: int | None = None, local_index: bool = True
+          ) -> tuple[StagedLayout, dict]:
     """MASJ-stage ``mbrs`` under ``parts``; 128-aligned, overflow-checked.
 
     mbrs: (N, 4) f32 -> ``(StagedLayout, stats)``; raises on capacity
     overflow (never silently drops members).  ``stats['replication']``
     is the paper's λ.
+
+    ``local_index=True`` (default) additionally builds the intra-tile
+    local index: each tile's slots are permuted so canonical members
+    come first in ascending xmin order (non-canonical copies and
+    padding sink to the tail, their relative order preserved), and a
+    per-128-slot chunk-box summary is carried in ``chunk_boxes`` for
+    the chunk-skipping probe kernels.  The permutation is applied to
+    ``tiles``/``ids``/``canon_tiles`` consistently, so canonical
+    marking — and therefore every query answer — is unchanged;
+    ``local_index=False`` staging is the unindexed oracle.
     """
     n = mbrs.shape[0]
     counts, copies = assign.partition_counts(mbrs, parts)
@@ -111,7 +150,12 @@ def stage(parts: api.Partitioning, mbrs: jax.Array,
         capacity = round_up(max(int(jnp.max(counts)), 1), 128)
     members, mask, overflow = assign.assign_padded(mbrs, parts, capacity)
     if int(jnp.sum(overflow)) > 0:
-        raise ValueError(f"staging overflow: capacity {capacity} too small")
+        over = np.asarray(counts) - capacity
+        raise ValueError(
+            f"staging overflow: capacity {capacity} < max tile count "
+            f"{int(jnp.max(counts))} ({int((over > 0).sum())} of "
+            f"{int(parts.k())} tiles overflow, worst by "
+            f"{int(over.max())} members — raise capacity or payload)")
 
     sentinel = jnp.asarray(_SENTINEL)
     tiles = jnp.where(mask[..., None], mbrs[members], sentinel)
@@ -127,6 +171,21 @@ def stage(parts: api.Partitioning, mbrs: jax.Array,
     canon = canon.reshape(ids.shape)
     canon_tiles = jnp.where(canon[..., None], tiles, sentinel)
 
+    chunk_boxes = None
+    if local_index:
+        # intra-tile sort: canonical xmin ascending (sentinel 9e9 sinks
+        # non-canonical copies and padding to the tail, stably)
+        slot_order = jnp.argsort(canon_tiles[..., 0], axis=1, stable=True)
+
+        def permute(a):
+            idx = slot_order if a.ndim == 2 else slot_order[..., None]
+            return jnp.take_along_axis(a, jnp.broadcast_to(idx, a.shape),
+                                       axis=1)
+
+        tiles, ids, canon_tiles = (permute(tiles), permute(ids),
+                                   permute(canon_tiles))
+        chunk_boxes = _chunk_summary(canon_tiles)
+
     # canonical probe boxes: sentinel slots are min/max-neutral, and an
     # all-sentinel tile collapses back to the sentinel box
     probe_boxes = jnp.concatenate(
@@ -136,6 +195,7 @@ def stage(parts: api.Partitioning, mbrs: jax.Array,
     tile_boxes = jnp.where(parts.valid[:, None], parts.boxes, sentinel)
     layout = StagedLayout(tiles=tiles, ids=ids, canon_tiles=canon_tiles,
                           tile_boxes=tile_boxes, probe_boxes=probe_boxes,
+                          chunk_boxes=chunk_boxes,
                           uni=geometry.universe(mbrs))
     stats = dict(
         n=n, t=int(parts.k()), cap=capacity,
@@ -143,6 +203,7 @@ def stage(parts: api.Partitioning, mbrs: jax.Array,
         # the pruned executor can ever need (<= t, since padding rows and
         # canonically-empty tiles probe as sentinel)
         t_live=int(jnp.sum(probe_boxes[:, 0] <= probe_boxes[:, 2])),
+        chunks=0 if chunk_boxes is None else int(chunk_boxes.shape[1]),
         replication=float(jnp.sum(counts)) / n - 1.0,
     )
     return layout, stats
@@ -157,9 +218,15 @@ class ShardedLayout:
                    device's tile count) — device-sharded when a mesh is
                    given, so per-device memory is O(total/D)
     id_shards    : (D, T_local, cap) int32 member ids (-1 padding)
+    chunk_shards : (D, T_local, C, 4) per-shard local index (chunk
+                   boxes in owner-local tile rows; None when staged
+                   with ``local_index=False``)
     probe_boxes  : (T, 4) *global* canonical probe boxes — routing is a
                    host-side O(Q·T) scan, so the (small) index stays
                    replicated while the (large) member data shards
+    chunk_boxes  : (T, C, 4) *global* chunk boxes (None when unindexed)
+                   — like the probe boxes, a small replicated index;
+                   used for host-side skip-rate reporting
     uni          : (4,) dataset universe
     owner        : (T,) int32 host map, global tile -> owner device
     local        : (T,) int32 host map, global tile -> row in the
@@ -168,7 +235,9 @@ class ShardedLayout:
 
     canon_shards: jax.Array
     id_shards: jax.Array
+    chunk_shards: jax.Array | None
     probe_boxes: jax.Array
+    chunk_boxes: jax.Array | None
     uni: jax.Array
     owner: np.ndarray
     local: np.ndarray
@@ -176,7 +245,7 @@ class ShardedLayout:
 
 def stage_sharded(parts: api.Partitioning, mbrs: jax.Array, n_shards: int,
                   capacity: int | None = None, mesh: Mesh | None = None,
-                  axis: str = "d"
+                  axis: str = "d", local_index: bool = True
                   ) -> tuple[ShardedLayout, tuple, dict]:
     """Stage ``mbrs`` and shard the tiles across ``n_shards`` owners.
 
@@ -185,12 +254,14 @@ def stage_sharded(parts: api.Partitioning, mbrs: jax.Array, n_shards: int,
     member mass while no device holds more than ``ceil(T/D)`` tiles, so
     per-device shard memory is at most one tile over an even split.
     With a mesh the shards are ``device_put`` sharded over ``axis``.
+    ``local_index=True`` staging (see ``stage``) also shards the chunk
+    boxes, owner-local, so owners probe their shards chunk-skipping.
 
     Returns ``(ShardedLayout, (canon_np, ids_np), stats)`` — the numpy
     pair is the host-side copy of the *unsharded* canonical staging,
     kept off-device for the ``pruned=False`` oracle path.
     """
-    layout, stats = stage(parts, mbrs, capacity)
+    layout, stats = stage(parts, mbrs, capacity, local_index=local_index)
     canon_np = np.asarray(layout.canon_tiles)
     ids_np = np.asarray(layout.ids)
     t, cap = ids_np.shape
@@ -202,17 +273,27 @@ def stage_sharded(parts: api.Partitioning, mbrs: jax.Array, n_shards: int,
     ids_sh = np.full((d, t_local, cap), -1, np.int32)
     canon_sh[owner, local] = canon_np
     ids_sh[owner, local] = ids_np
+    cb_sh = None
+    if layout.chunk_boxes is not None:
+        c = layout.chunk_boxes.shape[1]
+        cb_sh = np.broadcast_to(_SENTINEL, (d, t_local, c, 4)).copy()
+        cb_sh[owner, local] = np.asarray(layout.chunk_boxes)
     if mesh is not None:
         # device_put straight from host numpy: no transient full-size
         # single-device copy — peak per-device memory stays O(total/D)
         sharding = NamedSharding(mesh, P(axis))
         canon_shards = jax.device_put(canon_sh, sharding)
         id_shards = jax.device_put(ids_sh, sharding)
+        chunk_shards = (None if cb_sh is None
+                        else jax.device_put(cb_sh, sharding))
     else:
         canon_shards, id_shards = jnp.asarray(canon_sh), jnp.asarray(ids_sh)
+        chunk_shards = None if cb_sh is None else jnp.asarray(cb_sh)
 
     slayout = ShardedLayout(canon_shards=canon_shards, id_shards=id_shards,
-                            probe_boxes=layout.probe_boxes, uni=layout.uni,
+                            chunk_shards=chunk_shards,
+                            probe_boxes=layout.probe_boxes,
+                            chunk_boxes=layout.chunk_boxes, uni=layout.uni,
                             owner=owner, local=local)
     stats = dict(stats, shards=d, t_local=t_local,
                  shard_bytes=(canon_shards.nbytes + id_shards.nbytes) // d,
@@ -300,14 +381,26 @@ class WidthPolicy:
       from the converged width of earlier batches and skip their
       widening ladder; fall back to the density ``default`` cold.
 
+    Cached widths are clamped to ``cap`` (the server passes its
+    ``t_live`` — no candidate list can usefully exceed the live tile
+    count), so one pathological batch can never inflate later batches'
+    gather width and memory past the layout itself; ``reset()`` drops
+    the cache entirely when a stream's width profile changes (e.g.
+    after a burst of worst-case boxes).
+
     ``hits``/``misses`` count cache effectiveness; ``seed`` force-sets
-    a width (tests use it to exercise the widen-and-retry path).
+    a width unclamped (tests use it to exercise the widen-and-retry
+    path).
     """
 
-    def __init__(self):
+    def __init__(self, cap: int | None = None):
+        self.cap = cap
         self._w: dict = {}
         self.hits = 0
         self.misses = 0
+
+    def _clamp(self, w: int) -> int:
+        return w if self.cap is None else min(w, self.cap)
 
     def at_least(self, key, floor: int) -> int:
         w = self._w.get(key)
@@ -326,7 +419,12 @@ class WidthPolicy:
         return default
 
     def observe(self, key, width: int) -> None:
-        self._w[key] = max(self._w.get(key, 0), width)
+        self._w[key] = self._clamp(max(self._w.get(key, 0), width))
+
+    def reset(self) -> None:
+        """Forget every cached width (the next batch of each kind pays
+        one recompile / widening ladder again, at its natural width)."""
+        self._w.clear()
 
     def seed(self, key, width: int) -> None:
         self._w[key] = width
@@ -350,17 +448,26 @@ class SpatialServer:
     oracle.  In-process (``mesh=None``) sharded serving simulates the
     exchange over ``shards`` virtual owners (default 1) — same maths,
     one device; useful for validation and for sizing shard counts.
+
+    ``local_index=True`` (default) stages the intra-tile local index
+    (sorted members + per-128-slot chunk boxes, see ``stage``) and
+    probes candidate tiles with the chunk-skipping kernel variants —
+    LocationSpark's second index layer, cutting the constant factor
+    *inside* each candidate tile.  Answers are bit-identical to
+    ``local_index=False`` (the unindexed oracle staging);
+    ``chunk_skip_rate(qboxes)`` reports the realised skip fraction.
     """
 
     def __init__(self, parts: api.Partitioning, mbrs: jax.Array,
                  mesh: Mesh | None = None, axis: str = "d",
                  capacity: int | None = None, method: str | None = None,
                  pruned: bool = True, sharded: bool = False,
-                 shards: int | None = None):
+                 shards: int | None = None, local_index: bool = True):
         self.parts = parts
         self.mesh, self.axis = mesh, axis
         self.pruned = pruned
         self.sharded = sharded
+        self.local_index = local_index
         self.n_devices = int(mesh.shape[axis]) if mesh is not None else 1
         if sharded:
             self.shards = int(shards) if shards else self.n_devices
@@ -370,15 +477,18 @@ class SpatialServer:
                     f"mesh device ({self.n_devices}), got shards="
                     f"{self.shards}")
             self.slayout, self._oracle_np, self.stats = stage_sharded(
-                parts, mbrs, self.shards, capacity, mesh=mesh, axis=axis)
+                parts, mbrs, self.shards, capacity, mesh=mesh, axis=axis,
+                local_index=local_index)
             self.layout = None
             self._oracle_jax = None
         else:
             self.shards = 1
-            self.layout, self.stats = stage(parts, mbrs, capacity)
+            self.layout, self.stats = stage(parts, mbrs, capacity,
+                                            local_index=local_index)
         self.stats["method"] = method
+        self.stats["local_index"] = local_index
         self._steps: dict = {}
-        self.widths = WidthPolicy()
+        self.widths = WidthPolicy(cap=self.stats["t_live"])
 
     @classmethod
     def from_method(cls, method: str, mbrs: jax.Array, payload: int,
@@ -398,6 +508,26 @@ class SpatialServer:
     def uni(self) -> jax.Array:
         lay = self.slayout if self.sharded else self.layout
         return lay.uni
+
+    @property
+    def chunk_boxes(self) -> jax.Array | None:
+        """The (T, C, 4) global local index (None when unindexed)."""
+        lay = self.slayout if self.sharded else self.layout
+        return lay.chunk_boxes
+
+    def chunk_skip_rate(self, qboxes: jax.Array) -> float:
+        """Measured local-index effectiveness for one batch: the
+        fraction of per-candidate 128-member chunks whose box the query
+        misses (work the ``*_skip`` kernels drop).  0.0 when staged
+        with ``local_index=False``.  Pure measurement — does not touch
+        the width cache."""
+        if self.chunk_boxes is None:
+            return 0.0
+        hit = router.probe_overlap(self.probe_boxes, qboxes)
+        pf = np.asarray(jnp.sum(hit, axis=1, dtype=jnp.int32))
+        f = _f_width(int(pf.max(initial=0)), self.stats["t_live"])
+        cand, _, _ = router.candidates_from_overlap(hit, f)
+        return float(rops.chunk_skip_rate(qboxes, self.chunk_boxes, cand))
 
     def resident_tile_bytes(self) -> int:
         """Per-device bytes of device-resident staged member data.
@@ -519,11 +649,13 @@ class SpatialServer:
         cand, costs, f = self._route_batch(qboxes)
         slots, ss, sc, xstats = self._exchange_plan(cand, costs)
         qp = _pack_rows(np.asarray(qboxes, np.float32), slots, _SENTINEL)
+        li = self.local_index
+        extra = (self.slayout.chunk_shards,) if li else ()
         step = self._exchange_step(
-            ("s_range_counts", qp.shape[1], ss.shape[2], sc.shape[3]),
-            exchange.serve_range_counts, n_sharded=4)
+            ("s_range_counts", qp.shape[1], ss.shape[2], sc.shape[3], li),
+            exchange.serve_range_counts, n_sharded=4 + len(extra))
         out = step(self._put(qp), self._put(ss), self._put(sc),
-                   self.slayout.canon_shards)
+                   self.slayout.canon_shards, *extra)
         counts = _unpack_rows(out, slots, qboxes.shape[0])
         return jnp.asarray(counts), dict(f_max=f, **xstats)
 
@@ -533,13 +665,16 @@ class SpatialServer:
         qp = _pack_rows(np.asarray(qboxes, np.float32), slots, _SENTINEL)
         cap = int(self.slayout.id_shards.shape[-1])
         mh_local = min(max_hits, sc.shape[3] * cap)
+        li = self.local_index
+        extra = (self.slayout.chunk_shards,) if li else ()
         step = self._exchange_step(
             ("s_range_ids", qp.shape[1], ss.shape[2], sc.shape[3],
-             max_hits),
-            exchange.serve_range_ids, n_sharded=5,
+             max_hits, li),
+            exchange.serve_range_ids, n_sharded=5 + len(extra),
             max_hits=max_hits, mh_local=mh_local)
         out = step(self._put(qp), self._put(ss), self._put(sc),
-                   self.slayout.canon_shards, self.slayout.id_shards)
+                   self.slayout.canon_shards, self.slayout.id_shards,
+                   *extra)
         n_q = qboxes.shape[0]
         hit_ids, counts, overflow = (
             _unpack_rows(x, slots, n_q) for x in out)
@@ -548,11 +683,13 @@ class SpatialServer:
 
     def _knn_cost_proxy(self, dist, k: int) -> np.ndarray:
         """LPT packing weight: tiles the first deepening box would
-        touch (matches the radius the kernel actually starts from)."""
+        touch (matches the radius the kernel actually starts from —
+        density over the ``n`` live canonical members, not the padded
+        slot count)."""
         uni = self.uni
         diag = float(np.linalg.norm(np.asarray(uni[2:] - uni[:2])))
         r0 = float(knn_mod.initial_radius(
-            jnp.float32(diag), k, self.stats["t"] * self.stats["cap"]))
+            jnp.float32(diag), k, self.stats["n"]))
         return (1.0 + np.sum(np.asarray(dist) <= r0, axis=1)
                 ).astype(np.float64)
 
@@ -591,10 +728,11 @@ class SpatialServer:
                                              **xstats)
 
     def _sharded_knn(self, pts: jax.Array, k: int, max_cand: int):
-        n_slots = self.stats["t"] * self.stats["cap"]
+        n_live = self.stats["n"]
         uni = self.uni
         pad_pt = np.asarray((uni[:2] + uni[2:]) * 0.5)
         n_q = pts.shape[0]
+        li = self.local_index
 
         def run_batch(f):
             cand, dist, excl = router.candidate_knn(
@@ -603,16 +741,20 @@ class SpatialServer:
                 cand, self._knn_cost_proxy(dist, k))
             pp = _pack_rows(np.asarray(pts, np.float32), slots, pad_pt)
             dead = slots < 0
+            orch = (exchange.serve_knn if li
+                    else exchange.serve_knn_unindexed)
+            extra = (self.slayout.chunk_shards,) if li else ()
             step = self._exchange_step(
                 ("s_knn", k, max_cand, pp.shape[1], ss.shape[2],
-                 sc.shape[3]),
-                exchange.serve_knn, n_sharded=6, n_replicated=1,
-                k=k, max_cand=max_cand, n_slots=n_slots)
+                 sc.shape[3], li),
+                orch, n_sharded=6 + len(extra), n_replicated=1,
+                k=k, max_cand=max_cand, n_live=n_live)
             out = step(self._put(pp), self._put(ss), self._put(sc),
                        self._put(dead), self.slayout.canon_shards,
-                       self.slayout.id_shards, uni)
-            nn_ids, nn_d2, radius, overflow = (
+                       self.slayout.id_shards, *extra, uni)
+            nn_ids, nn_d2, radius, overflow, rounds = (
                 _unpack_rows(x, slots, n_q) for x in out)
+            xstats = dict(xstats, rounds=int(rounds.max(initial=0)))
             return nn_ids, nn_d2, radius, overflow, excl, xstats
 
         nn_ids, nn_d2, overflow, stats = self._knn_retry_loop(
@@ -642,10 +784,11 @@ class SpatialServer:
         layout = self.layout
         if use_pruned:
             cand, costs, f = self._route_batch(qboxes)
+            cb = layout.chunk_boxes if self.local_index else None
             counts, pstats = self._sharded_call(
-                f"range_counts_pruned_{f}",
+                f"range_counts_pruned_{f}_{self.local_index}",
                 lambda qs, cd: range_mod.pruned_range_counts(
-                    qs, layout.canon_tiles, cd),
+                    qs, layout.canon_tiles, cd, chunk_boxes=cb),
                 (qboxes, cand), costs,
                 (_SENTINEL, np.full((f,), -1, np.int32)))
             stats.update(mode="pruned", f_max=f, **pstats)
@@ -678,10 +821,12 @@ class SpatialServer:
         layout = self.layout
         if use_pruned:
             cand, costs, f = self._route_batch(qboxes)
+            cb = layout.chunk_boxes if self.local_index else None
             (hit_ids, counts, overflow), pstats = self._sharded_call(
-                f"range_ids_pruned_{f}_{max_hits}",
+                f"range_ids_pruned_{f}_{max_hits}_{self.local_index}",
                 lambda qs, cd: range_mod.pruned_range_ids(
-                    qs, layout.canon_tiles, layout.ids, cd, max_hits),
+                    qs, layout.canon_tiles, layout.ids, cd, max_hits,
+                    chunk_boxes=cb),
                 (qboxes, cand), costs,
                 (_SENTINEL, np.full((f,), -1, np.int32)))
             stats.update(mode="pruned", f_max=f, **pstats)
@@ -711,9 +856,12 @@ class SpatialServer:
         if self.sharded:
             if not use_pruned:
                 canon, ids = self._oracle()
-                nn_ids, nn_d2, _, overflow = knn_mod.batched_knn(
-                    pts, k, canon, ids, self.uni, max_cand=max_cand)
-                mode_stats = dict(mode="dense")
+                nn_ids, nn_d2, _, overflow, rounds = knn_mod.batched_knn(
+                    pts, k, canon, ids, self.uni, max_cand=max_cand,
+                    n_live=self.stats["n"])
+                mode_stats = dict(
+                    mode="dense",
+                    rounds=int(np.asarray(rounds).max(initial=0)))
             else:
                 nn_ids, nn_d2, overflow, xstats = self._sharded_knn(
                     pts, k, max_cand)
@@ -732,29 +880,38 @@ class SpatialServer:
     def _replicated_knn(self, pts: jax.Array, k: int, max_cand: int,
                         use_pruned: bool):
         layout = self.layout
+        n_live = self.stats["n"]
         pad_pt = np.asarray((layout.uni[:2] + layout.uni[2:]) * 0.5)
         if not use_pruned:
-            (nn_ids, nn_d2, radius, overflow), pstats = self._sharded_call(
-                f"knn_{k}_{max_cand}",
-                lambda qs: knn_mod.batched_knn(qs, k, layout.canon_tiles,
-                                               layout.ids, layout.uni,
-                                               max_cand=max_cand),
-                (pts,), np.ones(pts.shape[0], np.float64), (pad_pt,))
-            return nn_ids, nn_d2, overflow, dict(mode="dense", **pstats)
+            (nn_ids, nn_d2, radius, overflow, rounds), pstats = \
+                self._sharded_call(
+                    f"knn_{k}_{max_cand}",
+                    lambda qs: knn_mod.batched_knn(
+                        qs, k, layout.canon_tiles, layout.ids, layout.uni,
+                        max_cand=max_cand, n_live=n_live),
+                    (pts,), np.ones(pts.shape[0], np.float64), (pad_pt,))
+            return nn_ids, nn_d2, overflow, dict(
+                mode="dense", rounds=int(np.asarray(rounds).max(initial=0)),
+                **pstats)
+
+        cb = layout.chunk_boxes if self.local_index else None
 
         def run_batch(f):
             cand, dist, excl = router.candidate_knn(
                 layout.probe_boxes, pts, f)
-            (nn_ids, nn_d2, radius, overflow), pstats = \
+            (nn_ids, nn_d2, radius, overflow, rounds), pstats = \
                 self._sharded_call(
-                    f"knn_pruned_{k}_{max_cand}_{f}",
+                    f"knn_pruned_{k}_{max_cand}_{f}_{self.local_index}",
                     lambda qs, cd, ex: knn_mod.pruned_knn(
                         qs, k, layout.canon_tiles, layout.ids,
-                        layout.uni, cd, ex, max_cand=max_cand),
+                        layout.uni, cd, ex, max_cand=max_cand,
+                        n_live=n_live, chunk_boxes=cb),
                     (pts, cand, excl),
                     self._knn_cost_proxy(dist, k),
                     (pad_pt, np.full((f,), -1, np.int32),
                      np.float32(np.inf)))
+            pstats = dict(pstats,
+                          rounds=int(np.asarray(rounds).max(initial=0)))
             return nn_ids, nn_d2, radius, overflow, excl, pstats
 
         nn_ids, nn_d2, overflow, stats = self._knn_retry_loop(

@@ -97,12 +97,14 @@ def _gather_send(x: jax.Array, slots: jax.Array, pad) -> jax.Array:
 # --------------------------------------------------------------------------
 
 def serve_range_counts(comm: _Comm, q: jax.Array, sl: jax.Array,
-                       sc: jax.Array, tiles: jax.Array) -> jax.Array:
+                       sc: jax.Array, tiles: jax.Array,
+                       cboxes: jax.Array | None = None) -> jax.Array:
     """Sharded exact range counts: scatter -> local probe -> sum merge.
 
     Per-device view: q (Qpd, 4) home query shard, sl (D, M) message
     slots, sc (D, M, Fl) local candidate lists, tiles (Tl, cap, 4)
-    owner shard -> (Qpd,) int32.
+    owner shard, cboxes (Tl, C, 4) owner-local chunk boxes or None
+    (selects the chunk-skipping probe — same bits) -> (Qpd,) int32.
     """
     d, m = sl.shape[-2], sl.shape[-1]
     fl = sc.shape[-1]
@@ -110,17 +112,19 @@ def serve_range_counts(comm: _Comm, q: jax.Array, sl: jax.Array,
     qs = comm.apply(lambda qq, ss: _gather_send(qq, ss, _SENTINEL), q, sl)
     qr, cr = comm.exchange(qs), comm.exchange(sc)
 
-    def owner_probe(t, qrr, crr):
+    def owner_probe(t, cb, qrr, crr):
         return range_mod.pruned_range_counts(
-            qrr.reshape(d * m, 4), t, crr.reshape(d * m, fl)).reshape(d, m)
+            qrr.reshape(d * m, 4), t, crr.reshape(d * m, fl),
+            chunk_boxes=cb).reshape(d, m)
 
-    pb = comm.exchange(comm.apply(owner_probe, tiles, qr, cr))
+    pb = comm.exchange(comm.apply(owner_probe, tiles, cboxes, qr, cr))
     return comm.apply(
         lambda p, s: range_mod.merge_owner_counts(p, s, qpd), pb, sl)
 
 
 def serve_range_ids(comm: _Comm, q: jax.Array, sl: jax.Array, sc: jax.Array,
-                    tiles: jax.Array, ids: jax.Array, *, max_hits: int,
+                    tiles: jax.Array, ids: jax.Array,
+                    cboxes: jax.Array | None = None, *, max_hits: int,
                     mh_local: int
                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Sharded exact unique id sets: scatter -> local ids -> union merge.
@@ -136,13 +140,13 @@ def serve_range_ids(comm: _Comm, q: jax.Array, sl: jax.Array, sc: jax.Array,
     qs = comm.apply(lambda qq, ss: _gather_send(qq, ss, _SENTINEL), q, sl)
     qr, cr = comm.exchange(qs), comm.exchange(sc)
 
-    def owner_ids(t, i, qrr, crr):
+    def owner_ids(t, i, cb, qrr, crr):
         hids, counts, _ = range_mod.pruned_range_ids(
             qrr.reshape(d * m, 4), t, i, crr.reshape(d * m, fl),
-            max_hits=mh_local)
+            max_hits=mh_local, chunk_boxes=cb)
         return hids.reshape(d, m, mh_local), counts.reshape(d, m)
 
-    pids, pcounts = comm.apply(owner_ids, tiles, ids, qr, cr)
+    pids, pcounts = comm.apply(owner_ids, tiles, ids, cboxes, qr, cr)
     bids, bcounts = comm.exchange(pids), comm.exchange(pcounts)
     return comm.apply(
         lambda pi, pc, s: range_mod.merge_owner_ids(pi, pc, s, qpd, max_hits),
@@ -151,25 +155,29 @@ def serve_range_ids(comm: _Comm, q: jax.Array, sl: jax.Array, sc: jax.Array,
 
 def serve_knn(comm: _Comm, pts: jax.Array, sl: jax.Array, sc: jax.Array,
               dead: jax.Array, tiles: jax.Array, ids: jax.Array,
-              uni: jax.Array, *, k: int, max_cand: int, n_slots: int,
-              max_rounds: int = 32
-              ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+              cboxes: jax.Array | None, uni: jax.Array, *, k: int,
+              max_cand: int, n_live: int, max_rounds: int = 32
+              ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                         jax.Array]:
     """Sharded exact kNN: lock-step deepening + top-k frontier merge.
 
     Per-device view: pts (Qpd, 2) home shard, sl/sc as in the range
     steps (kNN frontier candidates in owner-local coordinates), dead
-    (Qpd,) marks padding slots, tiles/ids the owner shard, uni the
-    (replicated) dataset universe; ``n_slots`` is the *global* T·cap so
-    the density-based initial radius matches the single-device paths ->
-    ``(nn_ids[Qpd, k], nn_d2[Qpd, k], radius[Qpd], overflow[Qpd])``.
+    (Qpd,) marks padding slots, tiles/ids the owner shard, cboxes the
+    owner's (Tl, C, 4) local index (or None — ``serve_knn_unindexed``
+    is the oracle arg-order wrapper), uni the (replicated) dataset
+    universe; ``n_live`` is the *global* live canonical member count
+    (the dataset size) so the density-based initial radius matches the
+    single-device paths -> ``(nn_ids[Qpd, k], nn_d2[Qpd, k],
+    radius[Qpd], overflow[Qpd], rounds[Qpd])``.
 
     The radius state lives at home.  Each deepening round exchanges
     radii to owners, sums per-owner unique-candidate counts back, and
     doubles the radius of unconverged queries — identical count totals
-    and identical radius trajectories to ``pruned_knn``.  ``overflow``
-    flags owner-side candidate extraction past ``max_cand``; the
-    frontier-miss flag is the caller's (it holds the global excluded
-    distance).
+    and identical radius trajectories to ``pruned_knn`` (``rounds``
+    counts each home query's doublings).  ``overflow`` flags owner-side
+    candidate extraction past ``max_cand``; the frontier-miss flag is
+    the caller's (it holds the global excluded distance).
     """
     d, m = sl.shape[-2], sl.shape[-1]
     fl = sc.shape[-1]
@@ -179,54 +187,58 @@ def serve_knn(comm: _Comm, pts: jax.Array, sl: jax.Array, sc: jax.Array,
     pr, cr = comm.exchange(ps), comm.exchange(sc)
 
     diag = jnp.sqrt(jnp.sum((uni[2:] - uni[:2]) ** 2))
-    r_init = knn_mod.initial_radius(diag, k, n_slots)
+    r_init = knn_mod.initial_radius(diag, k, n_live)
     r_cover = jnp.maximum(
         jnp.maximum(pts[..., 0] - uni[0], uni[2] - pts[..., 0]),
         jnp.maximum(pts[..., 1] - uni[1], uni[3] - pts[..., 1]))
     r_cover = jnp.maximum(r_cover, diag * 1e-6)
 
-    def owner_counts(t, p, c, rad):
+    def owner_counts(t, cb, p, c, rad):
         qb = jnp.concatenate([p - rad[..., None], p + rad[..., None]], -1)
         return range_mod.pruned_range_counts(
-            qb.reshape(d * m, 4), t, c.reshape(d * m, fl)).reshape(d, m)
+            qb.reshape(d * m, 4), t, c.reshape(d * m, fl),
+            chunk_boxes=cb).reshape(d, m)
 
     def counts_at(r):
         rr = comm.exchange(comm.apply(
             lambda r_, s: _gather_send(r_, s, jnp.float32(0.0)), r, sl))
-        pb = comm.exchange(comm.apply(owner_counts, tiles, pr, cr, rr))
+        pb = comm.exchange(comm.apply(owner_counts, tiles, cboxes,
+                                      pr, cr, rr))
         return comm.apply(
             lambda p, s: range_mod.merge_owner_counts(p, s, qpd), pb, sl)
 
     r0 = jnp.where(dead, r_cover, jnp.full(pts.shape[:-1], r_init,
                                            jnp.float32))
     c0 = counts_at(r0)
+    rounds0 = jnp.zeros(pts.shape[:-1], jnp.int32)
 
     def cont(r, c):
         return comm.any((c < k) & (r < r_cover))
 
     def body(state):
-        r, c, i, _ = state
+        r, c, rounds, i, _ = state
+        grow = (c < k) & (r < r_cover)
         r = jnp.where(c < k, jnp.minimum(r * 2.0, r_cover), r)
         c = counts_at(r)
-        return r, c, i + 1, cont(r, c)
+        return r, c, rounds + grow.astype(jnp.int32), i + 1, cont(r, c)
 
-    r, counts, _, _ = jax.lax.while_loop(
-        lambda s: s[3] & (s[2] < max_rounds), body,
-        (r0, c0, jnp.int32(0), cont(r0, c0)))
+    r, counts, rounds, _, _ = jax.lax.while_loop(
+        lambda s: s[4] & (s[3] < max_rounds), body,
+        (r0, c0, rounds0, jnp.int32(0), cont(r0, c0)))
 
     # refinement: owners extract local top-k within the √2-inflated box
     re = r * jnp.sqrt(jnp.float32(2.0))
     rr = comm.exchange(comm.apply(
         lambda r_, s: _gather_send(r_, s, jnp.float32(0.0)), re, sl))
 
-    def owner_refine(t, i, p, c, rad):
+    def owner_refine(t, i, cb, p, c, rad):
         nn_i, nn_d, nc = knn_mod.knn_partial(
             p.reshape(d * m, 2), t, i, c.reshape(d * m, fl),
-            rad.reshape(d * m), k=k, max_cand=max_cand)
+            rad.reshape(d * m), k=k, max_cand=max_cand, chunk_boxes=cb)
         return (nn_i.reshape(d, m, k), nn_d.reshape(d, m, k),
                 nc.reshape(d, m))
 
-    pid, pd2, pnc = comm.apply(owner_refine, tiles, ids, pr, cr, rr)
+    pid, pd2, pnc = comm.apply(owner_refine, tiles, ids, cboxes, pr, cr, rr)
     bid, bd2, bnc = (comm.exchange(pid), comm.exchange(pd2),
                      comm.exchange(pnc))
     nn_ids, nn_d2 = comm.apply(
@@ -235,7 +247,17 @@ def serve_knn(comm: _Comm, pts: jax.Array, sl: jax.Array, sc: jax.Array,
     over = comm.apply(
         lambda nc, s: range_mod.merge_owner_counts(
             (nc > max_cand).astype(jnp.int32), s, qpd) > 0, bnc, sl)
-    return nn_ids, nn_d2, r, over
+    return nn_ids, nn_d2, r, over, rounds
+
+
+def serve_knn_unindexed(comm: _Comm, pts: jax.Array, sl: jax.Array,
+                        sc: jax.Array, dead: jax.Array, tiles: jax.Array,
+                        ids: jax.Array, uni: jax.Array, **static):
+    """``serve_knn`` without the local-index chunk shards — the oracle
+    arg order (no ``cboxes`` slot), so the ``local_index=False`` server
+    can build the step with one fewer sharded input."""
+    return serve_knn(comm, pts, sl, sc, dead, tiles, ids, None, uni,
+                     **static)
 
 
 # --------------------------------------------------------------------------

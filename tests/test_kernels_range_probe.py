@@ -114,3 +114,97 @@ def test_gathered_all_padding_is_zero():
     cand = jnp.full((3, 4), -1, jnp.int32)
     assert int(jnp.sum(ops.gathered_counts(qb, tiles, cand))) == 0
     assert not bool(jnp.any(ops.gathered_mask(qb, tiles, cand)))
+
+
+# --------------------------------------------------------------------------
+# chunk-skipping (local-index) variants
+# --------------------------------------------------------------------------
+
+def _chunk_boxes(tiles):
+    """True per-128-slot MBR summary of ``tiles`` (staging invariant)."""
+    t, cap, _ = tiles.shape
+    c = -(-cap // ops.CHUNK)
+    sent = jnp.array([9e9, 9e9, -9e9, -9e9])
+    pad = c * ops.CHUNK - cap
+    if pad:
+        tiles = jnp.concatenate(
+            [tiles, jnp.broadcast_to(sent, (t, pad, 4))], axis=1)
+    g = tiles.reshape(t, c, ops.CHUNK, 4)
+    return jnp.concatenate(
+        [jnp.min(g[..., :2], axis=2), jnp.max(g[..., 2:], axis=2)], axis=-1)
+
+
+@pytest.mark.parametrize("q,t,cap", [(7, 3, 50), (130, 4, 257),
+                                     (256, 2, 640)])
+def test_skip_variants_equal_unindexed_with_true_boxes(q, t, cap):
+    """With bounding chunk boxes the skip kernels (Pallas interpret and
+    default executor) reproduce the unindexed results bit-for-bit."""
+    qb = _boxes(jax.random.PRNGKey(q), q, 0.2)
+    tiles = _tiles(jax.random.PRNGKey(t + 1), t, cap)
+    cb = _chunk_boxes(tiles)
+    cand = jax.random.randint(jax.random.PRNGKey(cap), (q, 3), -1, t)
+
+    want_c = ref.probe_counts(qb, tiles)
+    assert bool(jnp.all(ops.probe_counts_skip(qb, tiles, cb) == want_c))
+    assert bool(jnp.all(
+        ops.probe_counts_skip(qb, tiles, cb, interpret=True) == want_c))
+    want_m = ops.probe_mask(qb, tiles)
+    assert bool(jnp.all(ops.probe_mask_skip(qb, tiles, cb) == want_m))
+    assert bool(jnp.all(
+        ops.probe_mask_skip(qb, tiles, cb, interpret=True) == want_m))
+
+    want_gc = ops.gathered_counts(qb, tiles, cand)
+    assert bool(jnp.all(
+        ops.gathered_counts_skip(qb, tiles, cb, cand) == want_gc))
+    assert bool(jnp.all(
+        ops.gathered_counts_skip(qb, tiles, cb, cand, interpret=True)
+        == want_gc))
+    want_gm = ops.gathered_mask(qb, tiles, cand)
+    assert bool(jnp.all(
+        ops.gathered_mask_skip(qb, tiles, cb, cand) == want_gm))
+    assert bool(jnp.all(
+        ops.gathered_mask_skip(qb, tiles, cb, cand, interpret=True)
+        == want_gm))
+
+
+def test_skip_kernels_match_masked_ref_with_arbitrary_boxes():
+    """The kernels implement exactly the refs' chunk-masked semantics —
+    even for chunk boxes that do NOT bound their members (a staging bug
+    would surface as an answer diff, not silent corruption)."""
+    q, t, cap, f = 130, 4, 257, 3
+    qb = _boxes(jax.random.PRNGKey(1), q, 0.2)
+    tiles = _tiles(jax.random.PRNGKey(2), t, cap)
+    c = -(-cap // ops.CHUNK)
+    cb = _boxes(jax.random.PRNGKey(3), t * c, 0.05).reshape(t, c, 4)
+    cand = jax.random.randint(jax.random.PRNGKey(4), (q, f), -1, t)
+
+    want = ref.probe_counts_skip(qb, tiles, cb)
+    assert bool(jnp.all(
+        ops.probe_counts_skip(qb, tiles, cb, interpret=True) == want))
+    want_g = ref.gathered_counts_skip(qb, ops.gathered_rows(tiles, cand),
+                                      ops.gathered_chunk_boxes(cb, cand))
+    assert bool(jnp.all(
+        ops.gathered_counts_skip(qb, tiles, cb, cand, interpret=True)
+        == want_g))
+    want_gm = ref.gathered_mask_skip(qb, ops.gathered_rows(tiles, cand),
+                                     ops.gathered_chunk_boxes(cb, cand))
+    assert bool(jnp.all(
+        ops.gathered_mask_skip(qb, tiles, cb, cand, interpret=True)
+        == want_gm))
+
+
+def test_sentinel_chunks_always_skip_and_rate_reports_them():
+    """All-sentinel chunks (inverted boxes) contribute nothing and count
+    as skipped in the measured rate."""
+    qb = jnp.array([[0.0, 0.0, 1.0, 1.0]])     # hits everything real
+    tiles = _tiles(jax.random.PRNGKey(0), 2, 128, 0.1)
+    sent = jnp.array([9e9, 9e9, -9e9, -9e9])
+    tiles = jnp.concatenate(
+        [tiles, jnp.broadcast_to(sent, (2, 128, 4))], axis=1)  # cap 256
+    cb = _chunk_boxes(tiles)
+    assert bool(jnp.all(cb[:, 1, 0] > cb[:, 1, 2]))    # sentinel chunk
+    cand = jnp.array([[0, 1]], jnp.int32)
+    got = ops.gathered_counts_skip(qb, tiles, cb, cand)
+    assert bool(jnp.all(got == ops.gathered_counts(qb, tiles, cand)))
+    rate = float(ops.chunk_skip_rate(qb, cb, cand))
+    assert rate == pytest.approx(0.5)   # live chunks hit, sentinels skip

@@ -1,0 +1,223 @@
+"""The intra-tile local index (chunk-skipping probe layer): the staged
+sort is a pure per-tile permutation that preserves canonical marking,
+chunk boxes bound their chunks' canonical members, and range/kNN
+answers with ``local_index=True`` are bit-identical to the unindexed
+oracle staging across ALL SIX layouts on skewed (osm) and uniform (pi)
+data — replicated and sharded (vmap simulation here; the 8-device SPMD
+job runs the mesh test below whenever ≥ 8 devices are visible)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partition import api
+from repro.data import spatial_gen
+from repro.kernels.range_probe import ops as rops
+from repro.query import knn as knn_mod, range as range_mod
+from repro.serve import SpatialServer, engine as serve_engine
+
+LAYOUTS = ["hc", "str", "fg", "bsp", "slc", "bos"]
+DATASETS = ["osm", "pi"]
+N, NQ, K, SHARDS = 1500, 24, 4, 4
+
+
+def _qboxes(key, q, scale=0.06):
+    k1, k2 = jax.random.split(key)
+    c = jax.random.uniform(k1, (q, 2))
+    s = jax.random.uniform(k2, (q, 2)) * scale
+    return jnp.concatenate([c - s, c + s], axis=-1)
+
+
+@pytest.fixture(scope="module", params=DATASETS)
+def data(request):
+    mbrs = spatial_gen.dataset(request.param, jax.random.PRNGKey(0), N)
+    return mbrs, np.asarray(mbrs)
+
+
+@pytest.fixture(scope="module")
+def staged_pairs(data):
+    """(indexed layout, unindexed layout, parts) per layout method."""
+    mbrs, _ = data
+    out = {}
+    for m in LAYOUTS:
+        parts = api.partition(m, mbrs, 120)
+        indexed, _ = serve_engine.stage(parts, mbrs, local_index=True)
+        plain, _ = serve_engine.stage(parts, mbrs, local_index=False)
+        out[m] = (indexed, plain, parts)
+    return out
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+def test_sort_is_pure_per_tile_permutation(data, staged_pairs, method):
+    """Property: per tile, the sorted layout's ids are a permutation of
+    the unsorted layout's ids (with identical canonical id sets), and
+    exactly one canonical slot per object survives globally."""
+    indexed, plain, _ = staged_pairs[method]
+    ids_s, ids_u = np.asarray(indexed.ids), np.asarray(plain.ids)
+    canon_s = np.asarray(indexed.canon_tiles[..., 0]) < 1e9
+    canon_u = np.asarray(plain.canon_tiles[..., 0]) < 1e9
+    for t in range(ids_s.shape[0]):
+        np.testing.assert_array_equal(np.sort(ids_s[t]), np.sort(ids_u[t]))
+        assert (set(ids_s[t][canon_s[t]].tolist())
+                == set(ids_u[t][canon_u[t]].tolist())), t
+    n = int(max(ids_u.max(), 0)) + 1
+    counts = np.bincount(ids_s[canon_s].ravel(), minlength=n)
+    np.testing.assert_array_equal(counts, np.ones(n))
+    # member boxes moved with their ids: every slot still holds its
+    # object's MBR
+    mbrs_np = data[1]
+    tiles_s = np.asarray(indexed.tiles)
+    live = ids_s >= 0
+    np.testing.assert_allclose(tiles_s[live], mbrs_np[ids_s[live]],
+                               rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+def test_sorted_canonicals_lead_in_x_order(data, staged_pairs, method):
+    """The sort contract the chunk boxes rely on: canonical members come
+    first in ascending xmin; non-canonical copies and padding trail."""
+    indexed, _, _ = staged_pairs[method]
+    key = np.asarray(indexed.canon_tiles[..., 0])     # 9e9 for non-canon
+    canon = key < 1e9
+    for t in range(key.shape[0]):
+        k = canon[t].sum()
+        assert not canon[t][k:].any()                 # canonicals lead
+        assert np.all(np.diff(key[t][:k]) >= 0)       # ascending xmin
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+def test_chunk_boxes_bound_canonical_members(data, staged_pairs, method):
+    """The skip-safety invariant: chunk c's box contains every canonical
+    member MBR in slots [c·128, (c+1)·128); all-sentinel chunks carry
+    inverted (never-matching) boxes."""
+    indexed, _, _ = staged_pairs[method]
+    ct = np.asarray(indexed.canon_tiles)
+    cb = np.asarray(indexed.chunk_boxes)
+    t, cap, _ = ct.shape
+    chunk = rops.CHUNK
+    assert cb.shape == (t, -(-cap // chunk), 4)
+    live = ct[..., 0] < 1e9
+    for ti in range(t):
+        for c in range(cb.shape[1]):
+            sl = slice(c * chunk, min((c + 1) * chunk, cap))
+            boxes = ct[ti, sl][live[ti, sl]]
+            if boxes.size == 0:
+                assert cb[ti, c, 0] > cb[ti, c, 2]    # sentinel chunk
+                continue
+            assert np.all(cb[ti, c, 0] <= boxes[:, 0] + 1e-7)
+            assert np.all(cb[ti, c, 1] <= boxes[:, 1] + 1e-7)
+            assert np.all(cb[ti, c, 2] >= boxes[:, 2] - 1e-7)
+            assert np.all(cb[ti, c, 3] >= boxes[:, 3] - 1e-7)
+
+
+@pytest.fixture(scope="module")
+def servers(data):
+    mbrs, _ = data
+    return {m: (SpatialServer.from_method(m, mbrs, 120),
+                SpatialServer.from_method(m, mbrs, 120, local_index=False))
+            for m in LAYOUTS}
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+def test_local_index_range_bit_identical_to_oracle(data, servers, method):
+    """local_index=True answers == local_index=False answers == brute
+    force, replicated pruned path."""
+    _, mbrs_np = data
+    srv, osrv = servers[method]
+    assert srv.stats["local_index"] and not osrv.stats["local_index"]
+    qb = _qboxes(jax.random.PRNGKey(1), NQ)
+    ref = range_mod.range_query_ref(mbrs_np, np.asarray(qb))
+
+    counts, _ = srv.range_counts(qb)
+    ocounts, _ = osrv.range_counts(qb)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(ocounts))
+    assert [int(c) for c in counts] == [len(r) for r in ref]
+
+    hit_ids, cnts, ovf, _ = srv.range_ids(qb, max_hits=2048)
+    o_ids, o_cnts, o_ovf, _ = osrv.range_ids(qb, max_hits=2048)
+    assert not np.asarray(ovf).any() and not np.asarray(o_ovf).any()
+    np.testing.assert_array_equal(np.asarray(hit_ids), np.asarray(o_ids))
+    for i, want in enumerate(ref):
+        got = np.asarray(hit_ids[i])
+        np.testing.assert_array_equal(got[got >= 0], want)
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+def test_local_index_knn_bit_identical_to_oracle(data, servers, method):
+    _, mbrs_np = data
+    srv, osrv = servers[method]
+    pts = jax.random.uniform(jax.random.PRNGKey(2), (NQ, 2))
+    want_ids, want_d2 = knn_mod.knn_ref(mbrs_np, np.asarray(pts), K)
+
+    nn_ids, nn_d2, ovf, _ = srv.knn(pts, K)
+    o_ids, o_d2, o_ovf, _ = osrv.knn(pts, K)
+    assert not np.asarray(ovf).any() and not np.asarray(o_ovf).any()
+    np.testing.assert_array_equal(np.asarray(nn_ids), want_ids)
+    np.testing.assert_array_equal(np.asarray(nn_ids), np.asarray(o_ids))
+    np.testing.assert_array_equal(np.asarray(nn_d2), np.asarray(o_d2))
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+def test_local_index_sharded_bit_identical(data, method):
+    """Sharded serving (vmap-simulated exchange) with chunk shards ==
+    the dense oracle == brute force."""
+    mbrs, mbrs_np = data
+    srv = SpatialServer.from_method(method, mbrs, 120, sharded=True,
+                                    shards=SHARDS)
+    assert srv.slayout.chunk_shards is not None
+    qb = _qboxes(jax.random.PRNGKey(3), NQ)
+    pts = jax.random.uniform(jax.random.PRNGKey(4), (NQ, 2))
+    ref = range_mod.range_query_ref(mbrs_np, np.asarray(qb))
+    counts, _ = srv.range_counts(qb)
+    assert [int(c) for c in counts] == [len(r) for r in ref], method
+    hit_ids, _, ovf, _ = srv.range_ids(qb, max_hits=2048)
+    d_ids, _, _, _ = srv.range_ids(qb, max_hits=2048, pruned=False)
+    assert not np.asarray(ovf).any()
+    np.testing.assert_array_equal(np.asarray(hit_ids), np.asarray(d_ids))
+    nn_ids, nn_d2, ovk, _ = srv.knn(pts, K)
+    d_nn, d_d2, _, _ = srv.knn(pts, K, pruned=False)
+    assert not np.asarray(ovk).any()
+    np.testing.assert_array_equal(np.asarray(nn_ids), np.asarray(d_nn))
+    np.testing.assert_array_equal(np.asarray(nn_d2), np.asarray(d_d2))
+
+
+def test_chunk_skip_rate_positive_on_multichunk_layout(data):
+    """A layout whose capacity spans several chunks must actually skip:
+    the measured rate is in (0, 1] and 0.0 for unindexed staging."""
+    mbrs, _ = data
+    srv = SpatialServer.from_method("fg", mbrs, 120)
+    osrv = SpatialServer.from_method("fg", mbrs, 120, local_index=False)
+    qb = _qboxes(jax.random.PRNGKey(5), NQ, scale=0.03)
+    if srv.stats["chunks"] < 2:
+        pytest.skip("fixture capacity fits one chunk")
+    rate = srv.chunk_skip_rate(qb)
+    assert 0.0 < rate <= 1.0
+    assert osrv.chunk_skip_rate(qb) == 0.0
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (CI virtual-device job)")
+def test_local_index_spmd_mesh_bit_identical():
+    """Chunk shards travel the real all_to_all exchange: mesh answers ==
+    dense oracle == brute force, replicated and sharded."""
+    from jax.sharding import Mesh
+    mbrs = spatial_gen.dataset("osm", jax.random.PRNGKey(0), 2000)
+    mesh = Mesh(np.array(jax.devices()[:8]), ("d",))
+    qb = _qboxes(jax.random.PRNGKey(1), 32, scale=0.05)
+    pts = jax.random.uniform(jax.random.PRNGKey(2), (32, 2))
+    ref = range_mod.range_query_ref(np.asarray(mbrs), np.asarray(qb))
+    want_ids, _ = knn_mod.knn_ref(np.asarray(mbrs), np.asarray(pts), 5)
+    for m in ["bsp", "hc"]:
+        for srv in [SpatialServer.from_method(m, mbrs, 150, mesh=mesh),
+                    SpatialServer.from_method(m, mbrs, 150, mesh=mesh,
+                                              sharded=True)]:
+            counts, _ = srv.range_counts(qb)
+            assert [int(c) for c in counts] == [len(r) for r in ref], m
+            hit_ids, _, ovf, _ = srv.range_ids(qb, max_hits=2048)
+            d_ids, _, _, _ = srv.range_ids(qb, max_hits=2048, pruned=False)
+            assert not np.asarray(ovf).any()
+            np.testing.assert_array_equal(np.asarray(hit_ids),
+                                          np.asarray(d_ids))
+            nn_ids, _, ovk, _ = srv.knn(pts, 5)
+            assert not np.asarray(ovk).any()
+            np.testing.assert_array_equal(np.asarray(nn_ids), want_ids)

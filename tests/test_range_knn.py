@@ -106,7 +106,7 @@ def test_knn_exact(data, staged, method, k):
     _, mbrs_np = data
     _, layout, _ = staged[method]
     pts = jax.random.uniform(jax.random.PRNGKey(5), (30, 2))
-    nn_ids, nn_d2, _, overflow = knn_mod.batched_knn(
+    nn_ids, nn_d2, _, overflow, _ = knn_mod.batched_knn(
         pts, k, layout.canon_tiles, layout.ids, layout.uni)
     assert not bool(jnp.any(overflow))
     want_ids, want_d2 = knn_mod.knn_ref(mbrs_np, np.asarray(pts), k)
@@ -121,9 +121,35 @@ def test_knn_tie_break_by_id():
     parts = api.partition("fg", mbrs, 4)
     layout, _ = serve_engine.stage(parts, mbrs)
     pts = jnp.array([[0.1, 0.1]])
-    nn_ids, _, _, _ = knn_mod.batched_knn(pts, 3, layout.canon_tiles,
-                                          layout.ids, layout.uni)
+    nn_ids, _, _, _, _ = knn_mod.batched_knn(pts, 3, layout.canon_tiles,
+                                             layout.ids, layout.uni)
     np.testing.assert_array_equal(np.asarray(nn_ids[0]), [0, 1, 2])
+
+
+def test_knn_initial_radius_from_live_count_saves_rounds():
+    """Regression (density bias): sizing the initial radius from the
+    padded T·cap slot count starts the deepening too shallow — passing
+    the live canonical member count must answer identically with
+    strictly fewer deepening rounds on a high-padding layout."""
+    mbrs = spatial_gen.dataset("osm", jax.random.PRNGKey(0), 400)
+    mbrs_np = np.asarray(mbrs)
+    parts = api.partition("hc", mbrs, 30)        # small payload, cap
+    layout, stats = serve_engine.stage(parts, mbrs)   # rounds up to 128
+    n_slots = stats["t"] * stats["cap"]
+    assert n_slots > 4 * stats["n"]              # genuinely padded
+    pts = jax.random.uniform(jax.random.PRNGKey(9), (20, 2))
+    k = 5
+    ids_new, d2_new, _, _, rounds_new = knn_mod.batched_knn(
+        pts, k, layout.canon_tiles, layout.ids, layout.uni,
+        n_live=stats["n"])
+    # old behaviour: n_live=None falls back to the padded slot count
+    ids_old, d2_old, _, _, rounds_old = knn_mod.batched_knn(
+        pts, k, layout.canon_tiles, layout.ids, layout.uni)
+    np.testing.assert_array_equal(np.asarray(ids_new), np.asarray(ids_old))
+    want_ids, _ = knn_mod.knn_ref(mbrs_np, np.asarray(pts), k)
+    np.testing.assert_array_equal(np.asarray(ids_new), want_ids)
+    assert int(jnp.sum(rounds_old)) > int(jnp.sum(rounds_new))
+    assert bool(jnp.all(rounds_new <= rounds_old))
 
 
 def test_router_fanout_orders_layouts(data):

@@ -86,6 +86,54 @@ def test_server_rejects_overflowing_capacity(mbrs):
         serve_engine.stage(parts, mbrs, capacity=1)
 
 
+def test_overflow_error_is_actionable(mbrs):
+    """The capacity-overflow message names the max tile count and how
+    many tiles overflow — enough to size a retry without bisecting."""
+    from repro.core.partition import api, assign
+    parts = api.partition("fg", mbrs, 200)
+    counts, _ = assign.partition_counts(mbrs, parts)
+    max_count = int(np.asarray(counts).max())
+    n_over = int((np.asarray(counts) > 1).sum())
+    with pytest.raises(ValueError) as ei:
+        serve_engine.stage(parts, mbrs, capacity=1)
+    msg = str(ei.value)
+    assert f"max tile count {max_count}" in msg
+    assert f"{n_over} of {int(parts.k())} tiles overflow" in msg
+    assert f"worst by {max_count - 1} members" in msg
+
+
+def test_width_policy_caps_cached_widths():
+    """One pathological observation can never inflate later batches
+    past the live tile count."""
+    wp = serve_engine.WidthPolicy(cap=16)
+    wp.observe("range", 640)
+    assert wp.at_least("range", 8) == 16
+    wp.observe(("knn", 3, 1024), 9)
+    assert wp.start(("knn", 3, 1024), 4) == 9      # under cap: kept
+
+
+def test_width_policy_reset_forgets_widths():
+    wp = serve_engine.WidthPolicy(cap=64)
+    wp.observe("range", 32)
+    assert wp.at_least("range", 8) == 32
+    wp.reset()
+    assert wp.at_least("range", 8) == 8            # back to the floor
+    assert wp.start(("knn", 3, 1024), 4) == 4      # cold default again
+
+
+def test_server_width_policy_capped_at_t_live(mbrs, qboxes):
+    """The server wires t_live as the cap, so even a seeded/observed
+    pathological width is clamped on the observe path and answers stay
+    exact."""
+    srv = SpatialServer.from_method("bsp", mbrs, 150)
+    assert srv.widths.cap == srv.stats["t_live"]
+    srv.widths.observe("range", 10 * srv.stats["t_live"])
+    counts, stats = srv.range_counts(qboxes)
+    assert stats["f_max"] <= srv.stats["t_live"]
+    ref = range_mod.range_query_ref(np.asarray(mbrs), np.asarray(qboxes))
+    assert [int(c) for c in counts] == [len(r) for r in ref]
+
+
 def test_range_width_cache_hit_reuses_wide_f_max(mbrs, qboxes):
     """Adaptive f_max: a narrow batch after a wide one reuses the
     cached (already-compiled) width instead of recomputing a smaller
