@@ -1,12 +1,15 @@
 """Range/kNN serving throughput across all six layouts × both datasets,
 pruned (routed candidate-tile probe, with the intra-tile local index)
-vs unindexed (``local_index=False``, same routing, linear tile sweep)
-vs dense (all-tile oracle sweep) vs sharded (owner-routed all_to_all
-exchange) — the paper's layout-quality thesis measured as queries/sec,
-not just mean fan-out: the better the layout routes, the smaller each
-query's candidate list and the larger the pruned speedup; the local
-index then skips dead 128-member chunks *inside* each candidate tile
-(chunk-skip rate reported per layout).
+vs unindexed (``ServeConfig(local_index="off")``, same routing, linear
+tile sweep) vs dense (all-tile oracle sweep) vs sharded (owner-routed
+all_to_all exchange) — the paper's layout-quality thesis measured as
+queries/sec, not just mean fan-out: the better the layout routes, the
+smaller each query's candidate list and the larger the pruned speedup;
+the local index then skips dead 128-member chunks *inside* each
+candidate tile (chunk-skip rate reported per layout, for the default
+``"x"`` sort and the ``"hilbert"`` sort — square-ish chunk boxes vs
+x-strips).  Streaming rows time ``append`` throughput into reserved
+slack and the cost of a forced tile-overflow re-stage.
 
 ``--smoke`` runs a small configuration (CI: exercises the pruned,
 local-index, and sharded paths and the exactness assertions on every
@@ -24,6 +27,7 @@ import json
 import os
 import pathlib
 import sys
+import time
 
 if __name__ == "__main__" and "--devices" in sys.argv:
     _n = int(sys.argv[sys.argv.index("--devices") + 1])
@@ -36,7 +40,7 @@ import numpy as np
 
 from repro.data import spatial_gen
 from repro.query import range as range_mod
-from repro.serve import SpatialServer
+from repro.serve import ServeConfig, SpatialServer
 
 from .common import emit, timeit, timeit_many
 
@@ -70,10 +74,16 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
         want = [len(r) for r in ref]
         for m in METHODS:
             srv = SpatialServer.from_method(m, mbrs, payload, mesh=mesh)
-            usrv = SpatialServer.from_method(m, mbrs, payload, mesh=mesh,
-                                             local_index=False)
-            ssrv = SpatialServer.from_method(m, mbrs, payload, mesh=mesh,
-                                             sharded=True, shards=shards)
+            usrv = SpatialServer.from_method(
+                m, mbrs, payload, ServeConfig(local_index="off"),
+                mesh=mesh)
+            ssrv = SpatialServer.from_method(
+                m, mbrs, payload,
+                ServeConfig(placement="sharded", shards=shards),
+                mesh=mesh)
+            hsrv = SpatialServer.from_method(
+                m, mbrs, payload, ServeConfig(local_index="hilbert"),
+                mesh=mesh)
             counts, rstats = srv.range_counts(qb)
             assert [int(c) for c in counts] == want, (ds, m, "local")
             ucounts, _ = usrv.range_counts(qb)
@@ -82,7 +92,32 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
             assert [int(c) for c in dcounts] == want, (ds, m, "dense")
             scounts, sstats = ssrv.range_counts(qb)
             assert [int(c) for c in scounts] == want, (ds, m, "sharded")
+            hcounts, _ = hsrv.range_counts(qb)
+            assert [int(c) for c in hcounts] == want, (ds, m, "hilbert")
             skip_rate = srv.chunk_skip_rate(qb)
+            skip_rate_h = hsrv.chunk_skip_rate(qb)
+
+            # streaming: stage 90% with slack, stream the tail in, then
+            # force one tile overflow and time the re-stage
+            head, tail = mbrs[: 9 * n // 10], np.asarray(mbrs[9 * n // 10:])
+            asrv = SpatialServer.from_method(m, head, payload,
+                                             ServeConfig(slack=512))
+            t0 = time.perf_counter()
+            for i in range(0, tail.shape[0], 128):
+                asrv.append(tail[i:i + 128])
+            dt_append = time.perf_counter() - t0
+            acounts, _ = asrv.range_counts(qb)
+            assert [int(c) for c in acounts] == want, (ds, m, "append")
+            append_restages = asrv.stats["restages"]
+            # cap+1 copies into one tile guarantees the overflow path
+            tb = np.asarray(asrv.parts.boxes)[0]
+            ctr = [(tb[0] + tb[2]) / 2, (tb[1] + tb[3]) / 2]
+            burst = np.tile(np.asarray(ctr + ctr, np.float32),
+                            (asrv.stats["cap"] + 1, 1))
+            t0 = time.perf_counter()
+            rep = asrv.append(burst)
+            dt_restage = time.perf_counter() - t0
+            assert rep["restaged"], (ds, m, "restage")
 
             # interleaved: the local-vs-unindexed delta is the point of
             # the comparison, so machine drift must hit both equally
@@ -99,6 +134,7 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
                  f";f_max={rstats['f_max']};tiles={srv.stats['t']}"
                  f";chunks={srv.stats['chunks']}"
                  f";chunk_skip={skip_rate:.3f}"
+                 f";chunk_skip_hilbert={skip_rate_h:.3f}"
                  f";unindexed_us={us_u:.1f}"
                  f";dense_us={us_d:.1f};speedup={us_d / us_p:.2f}")
             emit(f"range_serve_sharded/{ds}/{m}/q{q}/d{shards}", us_s,
@@ -113,6 +149,10 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
             us_dk = timeit(lambda: srv.knn(pts, k, pruned=False)[0],
                            warmup=1, iters=3)
             us_sk = timeit(lambda: ssrv.knn(pts, k)[0], warmup=1, iters=3)
+            emit(f"append_serve/{ds}/{m}", dt_append * 1e6,
+                 f"objs_per_s={tail.shape[0] / max(dt_append, 1e-9):.0f}"
+                 f";restages={append_restages}"
+                 f";restage_ms={dt_restage * 1e3:.1f}")
             emit(f"knn_serve/{ds}/{m}/k{k}", us_pk,
                  f"qps={q / (us_pk * 1e-6):.0f}"
                  f";fanout={kstats['fanout_mean']:.2f}"
@@ -132,6 +172,11 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
                 knn_rounds=int(kstats["rounds"]),
                 tiles=int(srv.stats["t"]), chunks=int(srv.stats["chunks"]),
                 chunk_skip_rate=round(skip_rate, 4),
+                chunk_skip_rate_hilbert=round(skip_rate_h, 4),
+                append_objs_per_s=round(
+                    tail.shape[0] / max(dt_append, 1e-9), 1),
+                append_restages=int(append_restages),
+                restage_ms=round(dt_restage * 1e3, 2),
                 exchange_messages=int(sstats["messages"]),
                 shard_bytes_per_device=int(ssrv.resident_tile_bytes()),
             ))
@@ -150,6 +195,9 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
                 prod ** (1.0 / len(ratios)), 4)
             summary[f"{ds}_chunk_skip_rate_mean"] = round(
                 sum(r["chunk_skip_rate"] for r in rows
+                    if r["dataset"] == ds) / len(ratios), 4)
+            summary[f"{ds}_chunk_skip_rate_hilbert_mean"] = round(
+                sum(r["chunk_skip_rate_hilbert"] for r in rows
                     if r["dataset"] == ds) / len(ratios), 4)
         payload_doc = dict(
             bench="serving", smoke=smoke, n_objects=n, batch_queries=q,

@@ -29,7 +29,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.data import spatial_gen
-from repro.serve import SpatialServer
+from repro.serve import ServeConfig, SpatialServer
 
 N, Q, K = 20_000, 1024, 10
 
@@ -47,8 +47,9 @@ if __name__ == "__main__":
           f"{n_dev} device(s)")
     for method in ["fg", "bsp", "slc", "bos", "str", "hc"]:
         srv = SpatialServer.from_method(method, mbrs, 500, mesh=mesh)
-        ssrv = SpatialServer.from_method(method, mbrs, 500, mesh=mesh,
-                                         sharded=True)
+        ssrv = SpatialServer.from_method(
+            method, mbrs, 500, ServeConfig(placement="sharded"),
+            mesh=mesh)
         for s_ in (srv, ssrv):                        # warm the jit cache
             s_.range_counts(qboxes)
         srv.range_counts(qboxes, pruned=False)
@@ -73,3 +74,18 @@ if __name__ == "__main__":
               f"resident/dev {srv.resident_tile_bytes() / 2**20:6.2f} MiB "
               f"repl vs {ssrv.resident_tile_bytes() / 2**20:6.2f} MiB "
               f"sharded")
+
+    # streaming: stage 90% with slack, append the rest, keep serving
+    head, tail = mbrs[: 9 * N // 10], mbrs[9 * N // 10:]
+    srv = SpatialServer.from_method("bsp", head, 500,
+                                    ServeConfig(slack=1024))
+    t0 = time.perf_counter()
+    for i in range(0, tail.shape[0], 256):
+        rep = srv.append(tail[i:i + 256])
+    dt = time.perf_counter() - t0
+    counts, _ = srv.range_counts(qboxes)
+    full = SpatialServer.from_method("bsp", mbrs, 500)
+    fcounts, _ = full.range_counts(qboxes)
+    assert np.array_equal(np.asarray(counts), np.asarray(fcounts))
+    print(f"append: {tail.shape[0] / dt:>9.0f} obj/s streamed into slack "
+          f"(restages {srv.stats['restages']}, answers == full restage)")

@@ -54,9 +54,21 @@ def assign_padded(mbrs: jax.Array, parts: Partitioning, capacity: int
     from the cost model so overflow is an error signal, not a silent
     truncation).
     """
-    n = mbrs.shape[0]
-    kmax = parts.kmax
     hit = geometry.intersect_matrix(mbrs, parts.boxes) & parts.valid[None, :]
+    return assign_from_hit(hit, capacity)
+
+
+def assign_from_hit(hit: jax.Array, capacity: int
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """``assign_padded`` from a precomputed membership matrix.
+
+    hit: (N, kmax) bool — object n is a member of partition k.  Callers
+    that amend the geometric membership (e.g. the serving layer's
+    nearest-tile adoption of objects that intersect no region on
+    non-covering layouts) build ``hit`` themselves and share this
+    scatter; ``assign_padded`` is the intersect-and-assign composition.
+    """
+    n, kmax = hit.shape
     rank = jnp.cumsum(hit.astype(jnp.int32), axis=0) - 1      # (N, k)
     obj = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None], (n, kmax))
     part = jnp.broadcast_to(jnp.arange(kmax, dtype=jnp.int32)[None, :],

@@ -98,7 +98,8 @@ def round_robin_pack(costs: np.ndarray, n_devices: int):
     return assignment, float(loads.max()), mean
 
 
-def shard_tiles(costs: np.ndarray, n_devices: int
+def shard_tiles(costs: np.ndarray, n_devices: int,
+                prev_owner: np.ndarray | None = None
                 ) -> tuple[np.ndarray, np.ndarray, int, dict]:
     """Assign tiles to owner devices and local shard slots.
 
@@ -113,6 +114,12 @@ def shard_tiles(costs: np.ndarray, n_devices: int
     piles all zero-cost tiles onto one device).  Local slots are
     assigned in ascending global-tile order per device, so the
     global → (owner, local) map is deterministic.
+
+    ``prev_owner`` (the map being replaced, on a streaming re-balance)
+    is reporting-only: ``stats['moved']`` counts tiles whose owner
+    changed — the data-movement cost of the re-balance — without
+    biasing the placement itself (the memory cap, not placement
+    stickiness, is the guarantee re-staging relies on).
     """
     t = costs.shape[0]
     d = max(1, n_devices)
@@ -124,4 +131,6 @@ def shard_tiles(costs: np.ndarray, n_devices: int
         local[mine] = np.arange(mine.size, dtype=np.int32)
     stats = dict(t_local=t_local, makespan=makespan, mean_load=mean,
                  skew=makespan / max(mean, 1e-9))
+    if prev_owner is not None and prev_owner.shape[0] == t:
+        stats["moved"] = int(np.sum(owner != prev_owner))
     return owner.astype(np.int32), local, t_local, stats

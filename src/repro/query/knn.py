@@ -26,7 +26,10 @@ final refinement radius reaches the nearest *excluded* tile, the query
 is flagged instead of silently answered, and the server widens the
 frontier and retries.  Exactness is checkable, never assumed.
 
-Under tile sharding (``repro.serve.exchange``) each owner device runs
+Like ``query.range``, these are pure functions of staged arrays —
+the ``TileLayout`` placements (``repro.serve.layout``) call them
+without the executors knowing which placement is running.  Under tile
+sharding (``repro.serve.exchange``) each owner device runs
 ``knn_partial`` — deepening counts and a local top-k over its shard —
 and the home device reduces with ``merge_knn_partials``: a k-way merge
 keyed by the same ``(distance, id)`` tie-break (``_refine_topk`` is the
@@ -79,7 +82,7 @@ def _qboxes(pts: jax.Array, r: jax.Array) -> jax.Array:
     return jnp.concatenate([pts - rr, pts + rr], axis=-1)
 
 
-def initial_radius(diag, k: int, n_slots: int):
+def initial_radius(diag, k: int, n_slots):
     """Density-based first deepening radius: the L∞ half-width at which
     a box is expected to hold ~k of ``n_slots`` uniformly spread
     objects, floored at diag·1e-6.  Shared by the executors and the
@@ -91,9 +94,13 @@ def initial_radius(diag, k: int, n_slots: int):
     slots hold nothing, so counting them biases the density high, the
     radius low, and every high-padding layout burns extra deepening
     rounds doubling back up (the ``n_live`` parameter of the executors
-    exists for exactly this).
+    exists for exactly this).  Accepts a python int or a traced scalar
+    — the executors take ``n_live`` as a *dynamic* argument so a
+    streaming append (which changes ``n`` every batch) never forces a
+    re-trace.
     """
-    r = diag * 0.5 * jnp.sqrt(k / jnp.float32(max(n_slots, 1)))
+    n = jnp.maximum(jnp.asarray(n_slots, jnp.float32), 1.0)
+    r = diag * 0.5 * jnp.sqrt(k / n)
     return jnp.maximum(r, diag * 1e-6)
 
 
@@ -120,12 +127,11 @@ def _refine_topk(k: int, pt: jax.Array, hit: jax.Array,
     return jnp.where(d2[order] < _INF, cid[order], -1), d2[order]
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand",
-                                             "n_live"))
+@functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand"))
 def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
                 ids: jax.Array, uni: jax.Array, r0: float | None = None,
                 max_rounds: int = 32, max_cand: int = 1024,
-                n_live: int | None = None):
+                n_live=None):
     """Exact batched kNN against a staged layout.
 
     pts: (Q, 2) query points; canon_tiles/ids: staging from
@@ -192,13 +198,12 @@ def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     return nn_ids, nn_d2, r, n_cand > max_cand, rounds
 
 
-@functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand",
-                                             "n_live"))
+@functools.partial(jax.jit, static_argnames=("k", "max_rounds", "max_cand"))
 def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
                ids: jax.Array, uni: jax.Array, cand: jax.Array,
                excluded: jax.Array, r0: float | None = None,
                max_rounds: int = 32, max_cand: int = 1024,
-               n_live: int | None = None,
+               n_live=None,
                chunk_boxes: jax.Array | None = None):
     """Exact batched kNN probing only each query's candidate tiles.
 
@@ -210,7 +215,8 @@ def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     the nearest tile *not* in the frontier (+inf when the frontier
     holds every tile).  ``chunk_boxes`` (T, C, 4), when given, runs
     deepening counts and refinement through the chunk-skipping kernels
-    (``local_index=True`` staging) — same bits, dead chunks skipped.
+    (indexed staging, ``local_index="x"``/``"hilbert"``) — same bits,
+    dead chunks skipped.
 
     Returns ``(nn_ids[Q, k] int32, nn_d2[Q, k] f32, radius[Q] f32,
     overflow[Q] bool, rounds[Q] int32)``.  ``overflow`` flags a query

@@ -2,9 +2,12 @@
 
 A range query is a box; its answer is the set of dataset objects whose
 MBR intersects it (closed-box ``st_intersects``, matching the join
-path).  Queries run against the ``repro.serve.engine`` staging format:
-``(T, cap, 4)`` member-box tiles built once per dataset by MASJ
-assignment.
+path).  Queries run against the ``repro.serve.layout`` staging format
+(``stage_tiles``): ``(T, cap, 4)`` member-box tiles built by MASJ
+assignment — once per dataset, then kept current by the streaming
+append path (which only ever grows canonical membership and the boxes
+that summarise it, so everything here stays exact on a moving
+dataset).
 
 Replication makes dedup the correctness crux (same problem as the join,
 §2.2), solved two ways, mirroring the join engine:
@@ -35,9 +38,12 @@ metric for selection workloads.  Three pruned executors exploit it:
   reference-point ownership over the *full* tiles — exact for
   non-overlapping covering layouts without any canonical marking.
 
-When tiles are *sharded* across devices (``repro.serve.exchange``),
-each owner runs the pruned executors above on its local shard only and
-the home device reduces the partials: ``merge_owner_counts`` (plain
+These executors are placement-agnostic — pure functions of staged
+arrays, consumed through the ``TileLayout`` protocol
+(``repro.serve.layout``) by both data placements.  When tiles are
+*sharded* across devices (``repro.serve.exchange``), each owner runs
+the pruned executors above on its local shard only and the home device
+reduces the partials: ``merge_owner_counts`` (plain
 integer sum — canonical copies make hits owner-disjoint) and
 ``merge_owner_ids`` (duplicate-free union by one ascending sort).
 Merged answers are bit-identical to the single-device dense sweep.
@@ -120,9 +126,9 @@ def pruned_range_counts(qboxes: jax.Array, canon_tiles: jax.Array,
     qboxes: (Q, 4); canon_tiles: (T, cap, 4) canonical-copy member
     boxes; cand: (Q, F) int32 from ``serve.router.candidate_range``
     over the layout's canonical probe boxes (-1 = padding slot)
-    -> (Q,) int32.  ``chunk_boxes`` (T, C, 4), when given (staging with
-    ``local_index=True``), switches to the chunk-skipping kernel —
-    same bits, dead 128-member chunks skipped.
+    -> (Q,) int32.  ``chunk_boxes`` (T, C, 4), when given (indexed
+    staging, ``local_index="x"``/``"hilbert"``), switches to the
+    chunk-skipping kernel — same bits, dead 128-member chunks skipped.
 
     Exactness: every canonical copy an un-pruned sweep would hit lives
     in a tile whose probe box the query overlaps, so a candidate list

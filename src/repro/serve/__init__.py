@@ -1,34 +1,48 @@
 """Batched spatial query serving over partitioned layouts.
 
+- ``config``: ``ServeConfig`` — the one frozen description of how a
+  server serves (placement, probe mode, local-index mode, chunk
+  granularity, capacity/slack policy).
 - ``router``: the global index — jit-compatible query→partition
   routing and fixed-width ``(Q, F)`` candidate-tile emission (box
   overlap for range, L∞-MINDIST frontier for kNN) plus the per-query
   partition fan-out metric, and the host-side owner translation
   (``owner_split``) that re-expresses candidate lists in sharded
   ``(owner device, local tile)`` coordinates.
-- ``engine``: stage a dataset once under any ``Partitioning`` (MASJ
-  tiles + canonical marks + canonical probe boxes + the intra-tile
-  local index: x-sorted members and per-128-slot chunk boxes,
-  ``local_index=True``), then answer streams of range/kNN batches with
-  an SPMD ``shard_map`` step: fan-out-weighted LPT query packing and
-  pruned candidate-tile probing with chunk-skipping kernels (dense
-  all-tile sweep kept as the oracle, ``pruned=False``; unindexed
-  staging via ``local_index=False``).
-  ``sharded=True`` shards the tiles themselves across devices
-  (``stage_sharded`` — capped-LPT placement, O(total/D) per-device
-  memory) and serves through the exchange layer.
+- ``layout``: the ``TileLayout`` protocol and its two placements —
+  ``ReplicatedTiles`` (full staging everywhere, queries shard) and
+  ``ShardedTiles`` (tiles shard across owners, queries travel through
+  the exchange) — plus ``stage_tiles`` (MASJ tiles + canonical marks +
+  canonical probe boxes + the configurable intra-tile local index) and
+  the streaming append lifecycle (slack inserts, incremental probe/
+  chunk-box refresh, overflow re-stage with owner re-balancing).
+- ``engine``: ``SpatialServer`` — routing, LPT query packing, the kNN
+  widen-and-retry exactness ladder, and the adaptive ``WidthPolicy``,
+  written once against the protocol; plus the deprecated PR-4 shims
+  (``stage``, ``stage_sharded``, boolean kwargs — one release,
+  ``LegacyServeWarning``).
 - ``exchange``: the owner-routed ``all_to_all`` serving step — scatter
   queries to candidate-tile owners, probe local shards, merge partials
   deterministically; runs under a mesh or in vmap simulation.
 
-See ``docs/ARCHITECTURE.md`` for the full pipeline.
+See ``docs/ARCHITECTURE.md`` for the full pipeline and the old→new
+API migration table.
 """
-from . import engine, exchange, router  # noqa: F401
+from . import config, engine, exchange, layout, router  # noqa: F401
+from .config import LegacyServeWarning, ServeConfig  # noqa: F401
 from .engine import (  # noqa: F401
-    ShardedLayout,
     SpatialServer,
-    StagedLayout,
     WidthPolicy,
     stage,
     stage_sharded,
+)
+from .layout import (  # noqa: F401
+    ReplicatedTiles,
+    ShardedLayout,
+    ShardedTiles,
+    StagedLayout,
+    TileLayout,
+    build_tiles,
+    shard_staged,
+    stage_tiles,
 )

@@ -1,0 +1,143 @@
+"""`ServeConfig`: the one frozen description of how a server serves.
+
+PR 1–4 grew the serving surface one boolean at a time —
+``pruned=``/``sharded=``/``shards=``/``local_index=``/``capacity=`` on
+the ``SpatialServer`` constructor, mirrored by two parallel staging
+entry points (``stage`` vs ``stage_sharded``).  Every new feature had
+to be wired through both placements and both flag spellings.  This
+module replaces the flag sprawl with a single frozen dataclass that
+names each axis of the design space once:
+
+- ``placement`` — where the staged tiles live: ``"replicated"`` (full
+  staging on every device, queries shard) or ``"sharded"`` (tiles shard
+  across owner devices, queries travel through the all_to_all
+  exchange).
+- ``probe`` — the default executor: ``"pruned"`` (routed candidate
+  tiles only) or ``"dense"`` (the all-tile oracle sweep).  Per-call
+  ``pruned=`` overrides remain for validation.
+- ``local_index`` — the intra-tile index: ``"off"`` (unindexed oracle
+  staging), ``"x"`` (canonical-first sort by ascending xmin), or
+  ``"hilbert"`` (canonical-first sort by the Hilbert key of each
+  member's MBR centre — square-ish chunk boxes instead of x-strips).
+- ``chunk`` — chunk-box granularity in member slots, a multiple of the
+  kernels' native 128; coarser boxes (e.g. 256) are broadcast down to
+  the 128-slot kernel grid, trading skip precision for summary size.
+- ``capacity`` / ``slack`` — per-tile member slots.  ``capacity=None``
+  sizes from the staged data's max tile count; ``slack`` reserves that
+  many extra free slots per tile for ``SpatialServer.append`` before a
+  tile overflow forces a re-stage.
+- ``shards`` — owner count under ``placement="sharded"`` with no mesh
+  (in-process exchange simulation); with a mesh it must equal the mesh
+  axis size and may be left ``None``.
+- ``axis`` — the mesh axis name serving shards over.
+
+The config is frozen and hashable, so a server's serving behaviour is
+one immutable value — loggable, comparable, and usable as a cache key.
+``ServeConfig.from_legacy`` translates the PR-4 boolean kwargs; the
+deprecated shims in ``repro.serve.engine`` emit ``LegacyServeWarning``
+(a ``DeprecationWarning``) through it, and CI runs the suite with that
+warning escalated to an error so internal code can never quietly fall
+back to the old surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..kernels.range_probe import ops as rops
+
+PLACEMENTS = ("replicated", "sharded")
+PROBES = ("pruned", "dense")
+LOCAL_INDEXES = ("off", "x", "hilbert")
+
+
+class LegacyServeWarning(DeprecationWarning):
+    """Emitted by the deprecated PR-4 serving entry points (``stage``,
+    ``stage_sharded``, the boolean ``SpatialServer`` kwargs).  A
+    ``DeprecationWarning`` subclass so generic tooling sees it, but
+    precisely filterable: CI escalates exactly this class to an error
+    (``-W error::repro.serve.LegacyServeWarning``) without tripping on
+    third-party deprecations."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Frozen serving configuration (see module docstring for axes)."""
+
+    placement: str = "replicated"
+    probe: str = "pruned"
+    local_index: str = "x"
+    chunk: int = rops.CHUNK
+    capacity: int | None = None
+    slack: int = 0
+    shards: int | None = None
+    axis: str = "d"
+
+    def __post_init__(self):
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"placement must be one of {PLACEMENTS}, "
+                             f"got {self.placement!r}")
+        if self.probe not in PROBES:
+            raise ValueError(f"probe must be one of {PROBES}, "
+                             f"got {self.probe!r}")
+        if self.local_index not in LOCAL_INDEXES:
+            raise ValueError(f"local_index must be one of {LOCAL_INDEXES}, "
+                             f"got {self.local_index!r}")
+        if self.chunk <= 0 or self.chunk % rops.CHUNK:
+            raise ValueError(f"chunk must be a positive multiple of the "
+                             f"kernel chunk {rops.CHUNK}, got {self.chunk}")
+        if self.capacity is not None and self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+        if self.slack < 0:
+            raise ValueError(f"slack must be >= 0, got {self.slack}")
+        if self.shards is not None and self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {self.shards}")
+        if self.shards is not None and self.placement != "sharded":
+            raise ValueError("shards is only meaningful with "
+                             "placement='sharded'")
+
+    @property
+    def indexed(self) -> bool:
+        """Whether staging builds the intra-tile local index."""
+        return self.local_index != "off"
+
+    def replace(self, **changes) -> "ServeConfig":
+        """A copy with ``changes`` applied (``dataclasses.replace``)."""
+        return dataclasses.replace(self, **changes)
+
+    @classmethod
+    def from_legacy(cls, base: "ServeConfig | None" = None, *,
+                    pruned: bool | None = None, sharded: bool | None = None,
+                    shards: int | None = None,
+                    local_index: bool | str | None = None,
+                    capacity: int | None = None,
+                    axis: str | None = None) -> "ServeConfig":
+        """Translate the PR-4 boolean kwargs into a ``ServeConfig``.
+
+        ``local_index`` accepts the legacy booleans (``True`` → ``"x"``,
+        ``False`` → ``"off"``) as well as the new mode strings.  Callers
+        (the deprecated shims) own the warning; this is pure
+        translation.
+        """
+        cfg = base if base is not None else cls()
+        changes: dict = {}
+        if pruned is not None:
+            changes["probe"] = "pruned" if pruned else "dense"
+        if sharded is not None:
+            changes["placement"] = "sharded" if sharded else "replicated"
+        if shards is not None:
+            changes["shards"] = int(shards)
+        if local_index is not None:
+            if isinstance(local_index, bool):
+                changes["local_index"] = "x" if local_index else "off"
+            else:
+                changes["local_index"] = local_index
+        if capacity is not None:
+            changes["capacity"] = int(capacity)
+        if axis is not None:
+            changes["axis"] = axis
+        if changes.get("placement", cfg.placement) != "sharded":
+            # legacy servers accepted shards= alongside sharded=False and
+            # ignored it; the frozen config rejects that combination —
+            # clear it whether it came from the kwargs or the base config
+            changes["shards"] = None
+        return dataclasses.replace(cfg, **changes)

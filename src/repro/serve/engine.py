@@ -1,11 +1,10 @@
-"""The batched spatial query server (stage once, serve forever).
+"""The batched spatial query server (stage once, serve a moving dataset).
 
-LocationSpark's architecture in SPMD form: a dataset is staged **once**
-under any of the six layouts — MASJ assignment into padded
-``(T, cap, 4)`` member tiles (reusing ``assign.assign_padded``) plus a
-canonical-copy mark so selection queries dedup for free (see
-``query.range``) — then streams of query batches are answered by a
-jitted ``shard_map`` step:
+LocationSpark's architecture in SPMD form: a dataset is staged under
+any of the six layouts — MASJ assignment into padded ``(T, cap, 4)``
+member tiles plus a canonical-copy mark so selection queries dedup for
+free (see ``query.range``) — then streams of query batches are
+answered by a jitted step:
 
   route   — the global index maps the batch to partitions, yielding the
             per-query fan-out metric *and* a fixed-width ``(Q, F)``
@@ -15,28 +14,29 @@ jitted ``shard_map`` step:
             the cost (the join engine's straggler story, applied to the
             query side: a batch of hotspot queries must not serialise
             on one device),
-  probe   — each device probes its query shard's candidate tiles only,
-            via the gathered ``range_probe`` Pallas kernel — O(Q·F·cap)
-            work, and inside each candidate tile the **local index**
-            (``local_index=True``: x-sorted members + per-128-slot
-            chunk boxes) lets the chunk-skipping kernel variants drop
-            dead chunks; the dense all-tile sweep is kept as the
-            oracle path (``pruned=False``),
+  probe   — the ``TileLayout`` executes the batch against its
+            placement: candidate tiles only via the gathered
+            ``range_probe`` Pallas kernel, with the intra-tile local
+            index predicating dead chunks away,
   gather  — results come back query-sharded and are unpermuted.
 
-Two placements of the *data* are supported:
+How the server serves is one frozen value, ``ServeConfig``
+(``serve.config``): data placement (``replicated`` | ``sharded``),
+default probe (``pruned`` | the ``dense`` all-tile oracle), local-index
+mode (``off`` | ``x`` | ``hilbert``), chunk granularity, and the
+capacity/slack policy.  The server itself is written once against the
+``TileLayout`` protocol (``serve.layout``) — there is no placement
+branch anywhere in the query paths; ``ReplicatedTiles`` and
+``ShardedTiles`` implement the same contract (the latter through the
+owner-routed ``all_to_all`` exchange, ``serve.exchange``).
 
-- **replicated** (``sharded=False``): every device holds the full
-  staged layout; only queries are sharded.  Simple, but caps the
-  dataset at one device's memory.
-- **sharded** (``sharded=True``): tiles are placed on owner devices
-  (``stage_sharded`` → capped-LPT ``core.placement.shard_tiles``, per
-  device at most ``ceil(T/D)`` tiles — O(total/D) memory) and each
-  batch runs the owner-routed ``all_to_all`` exchange step
-  (``serve.exchange``): queries travel to the owners of their
-  candidate tiles, owners probe locally, partials merge back at home.
-  Answers are bit-identical to the dense single-device oracle, which
-  stays available per call (``pruned=False``, host-staged on demand).
+The dataset *moves*: ``append(mbrs)`` streams new objects into the
+slack slots staging reserved (``config.slack``), refreshing probe and
+chunk boxes incrementally; a tile overflow re-stages the layout at a
+grown capacity (re-balancing owners under sharding) and resets the
+``WidthPolicy``.  Answers after any append sequence are bit-identical
+to re-staging from scratch — and to the dense oracle — because every
+answer is a function of the canonical membership sets alone.
 
 Exactness of the pruned path is never assumed: range candidate lists
 are sized from the batch's true max fan-out, and kNN flags any query
@@ -47,315 +47,45 @@ are remembered per query kind (``WidthPolicy``), so steady query
 streams pay recompiles and kNN widening ladders once.
 
 Single-process use passes ``mesh=None`` and gets the same jitted maths
-without the collective plumbing (sharded mode then runs the exchange
-in vmap simulation — same answers, one device).
+without the collective plumbing (sharded placement then runs the
+exchange in vmap simulation — same answers, one device).
+
+**Deprecated surface** (one release): ``stage`` / ``stage_sharded`` and
+the boolean constructor kwargs (``pruned=``, ``sharded=``, ``shards=``,
+``local_index=``, ``capacity=``) are thin shims over the config path
+and emit ``LegacyServeWarning``; CI runs the suite with that warning
+escalated to an error so internal code never calls them.
 """
 from __future__ import annotations
 
-import dataclasses
 import logging
-from functools import partial
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from ..core import geometry, placement
-from ..core.compat import shard_map
-from ..core.partition import api, assign
+from ..core.partition import api
 from ..core.partition.assign import round_up
 from ..kernels.range_probe import ops as rops
-from ..query import knn as knn_mod, range as range_mod
-from . import exchange, router
-
-_SENTINEL = np.array(geometry.SENTINEL_BOX, np.float32)
+from ..query import knn as knn_mod
+from . import layout as layout_mod
+from . import router
+from .config import LegacyServeWarning, ServeConfig
+from .layout import (  # noqa: F401  (re-exports: the staging surface)
+    ReplicatedTiles,
+    ShardedLayout,
+    ShardedTiles,
+    StagedLayout,
+    TileLayout,
+    build_tiles,
+    pack_queries,
+    shard_staged,
+    stage_tiles,
+)
 
 log = logging.getLogger(__name__)
-
-
-@partial(jax.tree_util.register_dataclass,
-         data_fields=("tiles", "ids", "canon_tiles", "tile_boxes",
-                      "probe_boxes", "chunk_boxes", "uni"),
-         meta_fields=())
-@dataclasses.dataclass(frozen=True)
-class StagedLayout:
-    """Device-resident staging of one partitioned dataset.
-
-    tiles       : (T, cap, 4) member MBRs, sentinel-padded (all copies)
-    ids         : (T, cap) int32 member ids, -1 in padding slots
-    canon_tiles : (T, cap, 4) canonical copies only (others sentineled)
-    tile_boxes  : (T, 4) partition regions (sentinel for invalid rows)
-    probe_boxes : (T, 4) tight MBR over each tile's *canonical* member
-                  MBRs (sentinel where a tile holds none) — the box set
-                  the pruned executor routes on; covers every canonical
-                  hit on all six layouts
-    chunk_boxes : (T, C, 4) the **local index** (``local_index=True``
-                  staging, else None): slots are sorted canonical-first
-                  by ascending xmin, and chunk c's box is the tight MBR
-                  over canonical members in slots [c·128, (c+1)·128) —
-                  sentinel where a chunk holds none, so the ``*_skip``
-                  probe kernels skip it outright
-    uni         : (4,) dataset universe
-    """
-
-    tiles: jax.Array
-    ids: jax.Array
-    canon_tiles: jax.Array
-    tile_boxes: jax.Array
-    probe_boxes: jax.Array
-    chunk_boxes: jax.Array | None
-    uni: jax.Array
-
-
-def _chunk_summary(canon_tiles: jax.Array) -> jax.Array:
-    """(T, cap, 4) canonical tiles -> (T, ceil(cap/CHUNK), 4) chunk
-    boxes: per 128-member slot group, the tight MBR over its canonical
-    member MBRs (sentinel slots are min/max-neutral; an all-sentinel
-    chunk collapses to the sentinel box and is always skipped)."""
-    t, cap, _ = canon_tiles.shape
-    c = -(-cap // rops.CHUNK)
-    pad = c * rops.CHUNK - cap
-    if pad:
-        canon_tiles = jnp.concatenate(
-            [canon_tiles,
-             jnp.broadcast_to(jnp.asarray(_SENTINEL), (t, pad, 4))], axis=1)
-    g = canon_tiles.reshape(t, c, rops.CHUNK, 4)
-    return jnp.concatenate(
-        [jnp.min(g[..., :2], axis=2), jnp.max(g[..., 2:], axis=2)], axis=-1)
-
-
-def stage(parts: api.Partitioning, mbrs: jax.Array,
-          capacity: int | None = None, local_index: bool = True
-          ) -> tuple[StagedLayout, dict]:
-    """MASJ-stage ``mbrs`` under ``parts``; 128-aligned, overflow-checked.
-
-    mbrs: (N, 4) f32 -> ``(StagedLayout, stats)``; raises on capacity
-    overflow (never silently drops members).  ``stats['replication']``
-    is the paper's λ.
-
-    ``local_index=True`` (default) additionally builds the intra-tile
-    local index: each tile's slots are permuted so canonical members
-    come first in ascending xmin order (non-canonical copies and
-    padding sink to the tail, their relative order preserved), and a
-    per-128-slot chunk-box summary is carried in ``chunk_boxes`` for
-    the chunk-skipping probe kernels.  The permutation is applied to
-    ``tiles``/``ids``/``canon_tiles`` consistently, so canonical
-    marking — and therefore every query answer — is unchanged;
-    ``local_index=False`` staging is the unindexed oracle.
-    """
-    n = mbrs.shape[0]
-    counts, copies = assign.partition_counts(mbrs, parts)
-    if capacity is None:
-        capacity = round_up(max(int(jnp.max(counts)), 1), 128)
-    members, mask, overflow = assign.assign_padded(mbrs, parts, capacity)
-    if int(jnp.sum(overflow)) > 0:
-        over = np.asarray(counts) - capacity
-        raise ValueError(
-            f"staging overflow: capacity {capacity} < max tile count "
-            f"{int(jnp.max(counts))} ({int((over > 0).sum())} of "
-            f"{int(parts.k())} tiles overflow, worst by "
-            f"{int(over.max())} members — raise capacity or payload)")
-
-    sentinel = jnp.asarray(_SENTINEL)
-    tiles = jnp.where(mask[..., None], mbrs[members], sentinel)
-    ids = jnp.where(mask, members, -1).astype(jnp.int32)
-
-    # canonical mark: first copy of each id in tile-major order wins,
-    # so every object has exactly one canonical slot
-    flat = ids.reshape(-1)
-    order = jnp.argsort(flat, stable=True)
-    s = flat[order]
-    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
-    canon = jnp.zeros_like(flat, bool).at[order].set(first & (s >= 0))
-    canon = canon.reshape(ids.shape)
-    canon_tiles = jnp.where(canon[..., None], tiles, sentinel)
-
-    chunk_boxes = None
-    if local_index:
-        # intra-tile sort: canonical xmin ascending (sentinel 9e9 sinks
-        # non-canonical copies and padding to the tail, stably)
-        slot_order = jnp.argsort(canon_tiles[..., 0], axis=1, stable=True)
-
-        def permute(a):
-            idx = slot_order if a.ndim == 2 else slot_order[..., None]
-            return jnp.take_along_axis(a, jnp.broadcast_to(idx, a.shape),
-                                       axis=1)
-
-        tiles, ids, canon_tiles = (permute(tiles), permute(ids),
-                                   permute(canon_tiles))
-        chunk_boxes = _chunk_summary(canon_tiles)
-
-    # canonical probe boxes: sentinel slots are min/max-neutral, and an
-    # all-sentinel tile collapses back to the sentinel box
-    probe_boxes = jnp.concatenate(
-        [jnp.min(canon_tiles[..., :2], axis=1),
-         jnp.max(canon_tiles[..., 2:], axis=1)], axis=-1)
-
-    tile_boxes = jnp.where(parts.valid[:, None], parts.boxes, sentinel)
-    layout = StagedLayout(tiles=tiles, ids=ids, canon_tiles=canon_tiles,
-                          tile_boxes=tile_boxes, probe_boxes=probe_boxes,
-                          chunk_boxes=chunk_boxes,
-                          uni=geometry.universe(mbrs))
-    stats = dict(
-        n=n, t=int(parts.k()), cap=capacity,
-        # tiles holding >= 1 canonical member: the widest candidate list
-        # the pruned executor can ever need (<= t, since padding rows and
-        # canonically-empty tiles probe as sentinel)
-        t_live=int(jnp.sum(probe_boxes[:, 0] <= probe_boxes[:, 2])),
-        chunks=0 if chunk_boxes is None else int(chunk_boxes.shape[1]),
-        replication=float(jnp.sum(counts)) / n - 1.0,
-    )
-    return layout, stats
-
-
-@dataclasses.dataclass(frozen=True)
-class ShardedLayout:
-    """Owner-sharded staging: per-device tile shards + the routing maps.
-
-    canon_shards : (D, T_local, cap, 4) canonical member MBRs, one tile
-                   shard per device (sentinel-padded rows past a
-                   device's tile count) — device-sharded when a mesh is
-                   given, so per-device memory is O(total/D)
-    id_shards    : (D, T_local, cap) int32 member ids (-1 padding)
-    chunk_shards : (D, T_local, C, 4) per-shard local index (chunk
-                   boxes in owner-local tile rows; None when staged
-                   with ``local_index=False``)
-    probe_boxes  : (T, 4) *global* canonical probe boxes — routing is a
-                   host-side O(Q·T) scan, so the (small) index stays
-                   replicated while the (large) member data shards
-    chunk_boxes  : (T, C, 4) *global* chunk boxes (None when unindexed)
-                   — like the probe boxes, a small replicated index;
-                   used for host-side skip-rate reporting
-    uni          : (4,) dataset universe
-    owner        : (T,) int32 host map, global tile -> owner device
-    local        : (T,) int32 host map, global tile -> row in the
-                   owner's shard
-    """
-
-    canon_shards: jax.Array
-    id_shards: jax.Array
-    chunk_shards: jax.Array | None
-    probe_boxes: jax.Array
-    chunk_boxes: jax.Array | None
-    uni: jax.Array
-    owner: np.ndarray
-    local: np.ndarray
-
-
-def stage_sharded(parts: api.Partitioning, mbrs: jax.Array, n_shards: int,
-                  capacity: int | None = None, mesh: Mesh | None = None,
-                  axis: str = "d", local_index: bool = True
-                  ) -> tuple[ShardedLayout, tuple, dict]:
-    """Stage ``mbrs`` and shard the tiles across ``n_shards`` owners.
-
-    Placement is cost-balanced capped LPT on per-tile member counts
-    (``core.placement.shard_tiles``): probe cost spreads like the
-    member mass while no device holds more than ``ceil(T/D)`` tiles, so
-    per-device shard memory is at most one tile over an even split.
-    With a mesh the shards are ``device_put`` sharded over ``axis``.
-    ``local_index=True`` staging (see ``stage``) also shards the chunk
-    boxes, owner-local, so owners probe their shards chunk-skipping.
-
-    Returns ``(ShardedLayout, (canon_np, ids_np), stats)`` — the numpy
-    pair is the host-side copy of the *unsharded* canonical staging,
-    kept off-device for the ``pruned=False`` oracle path.
-    """
-    layout, stats = stage(parts, mbrs, capacity, local_index=local_index)
-    canon_np = np.asarray(layout.canon_tiles)
-    ids_np = np.asarray(layout.ids)
-    t, cap = ids_np.shape
-    d = max(1, int(n_shards))
-    member_counts = (ids_np >= 0).sum(axis=1).astype(np.float64)
-    owner, local, t_local, pstats = placement.shard_tiles(member_counts, d)
-
-    canon_sh = np.broadcast_to(_SENTINEL, (d, t_local, cap, 4)).copy()
-    ids_sh = np.full((d, t_local, cap), -1, np.int32)
-    canon_sh[owner, local] = canon_np
-    ids_sh[owner, local] = ids_np
-    cb_sh = None
-    if layout.chunk_boxes is not None:
-        c = layout.chunk_boxes.shape[1]
-        cb_sh = np.broadcast_to(_SENTINEL, (d, t_local, c, 4)).copy()
-        cb_sh[owner, local] = np.asarray(layout.chunk_boxes)
-    if mesh is not None:
-        # device_put straight from host numpy: no transient full-size
-        # single-device copy — peak per-device memory stays O(total/D)
-        sharding = NamedSharding(mesh, P(axis))
-        canon_shards = jax.device_put(canon_sh, sharding)
-        id_shards = jax.device_put(ids_sh, sharding)
-        chunk_shards = (None if cb_sh is None
-                        else jax.device_put(cb_sh, sharding))
-    else:
-        canon_shards, id_shards = jnp.asarray(canon_sh), jnp.asarray(ids_sh)
-        chunk_shards = None if cb_sh is None else jnp.asarray(cb_sh)
-
-    slayout = ShardedLayout(canon_shards=canon_shards, id_shards=id_shards,
-                            chunk_shards=chunk_shards,
-                            probe_boxes=layout.probe_boxes,
-                            chunk_boxes=layout.chunk_boxes, uni=layout.uni,
-                            owner=owner, local=local)
-    stats = dict(stats, shards=d, t_local=t_local,
-                 shard_bytes=(canon_shards.nbytes + id_shards.nbytes) // d,
-                 placement_skew=pstats["skew"])
-    return slayout, (canon_np, ids_np), stats
-
-
-# --------------------------------------------------------------------------
-# query packing (host): fan-out-weighted LPT onto devices
-# --------------------------------------------------------------------------
-
-def pack_queries(costs: np.ndarray, n_devices: int
-                 ) -> tuple[np.ndarray, dict]:
-    """LPT-pack queries onto devices by per-query cost.
-
-    costs: (Q,) — routed fan-out on the pruned path, so hotspot queries
-    spread across devices instead of serialising one of them.  Returns
-    ``(slots[D, Qpd] int32 query indices, stats)``; -1 slots are
-    padding.  Qpd is the max per-device group size, so one straggler
-    hotspot group bounds the step — exactly what LPT minimises.
-
-    A degenerate all-zero cost vector falls back to uniform costs (LPT
-    with equal weights round-robins), so queries still spread across
-    devices instead of piling onto device 0.
-    """
-    d = max(1, n_devices)
-    costs = costs.astype(np.float64)
-    if costs.size and not np.any(costs > 0):
-        costs = np.ones_like(costs)
-    dev, makespan, mean_load = placement.lpt_pack(costs, d)
-    groups = [np.flatnonzero(dev == i) for i in range(d)]
-    qpd = max(1, max(len(g) for g in groups))
-    slots = np.full((d, qpd), -1, np.int32)
-    for i, g in enumerate(groups):
-        slots[i, :len(g)] = g
-    stats = dict(makespan=makespan, mean_load=mean_load,
-                 skew=makespan / max(mean_load, 1e-9), qpd=qpd)
-    return slots, stats
-
-
-def _pack_rows(arr: np.ndarray, slots: np.ndarray, pad) -> np.ndarray:
-    """Scatter per-query rows into the packed (D, Qpd, ...) slot grid,
-    filling -1 slots with ``pad`` (the single definition shared by the
-    replicated and sharded executors)."""
-    a = np.asarray(arr)
-    pad = np.asarray(pad, a.dtype)
-    out = np.broadcast_to(pad, slots.shape + pad.shape).copy()
-    live = slots >= 0
-    out[live] = a[slots[live]]
-    return out
-
-
-def _unpack_rows(x, slots: np.ndarray, n_queries: int) -> np.ndarray:
-    """Invert ``_pack_rows``: (D, Qpd, ...) step output -> per-query
-    rows in original batch order.  (Steps that emit a flat
-    (D·Qpd, ...) leading axis reshape before calling.)"""
-    x = np.asarray(x)
-    x = x.reshape((slots.size,) + x.shape[2:])
-    live = slots >= 0
-    res = np.zeros((n_queries,) + x.shape[1:], x.dtype)
-    res[slots[live]] = x[live.ravel()]
-    return res
 
 
 def _f_width(fanout_max: int, t: int) -> int:
@@ -385,8 +115,9 @@ class WidthPolicy:
     ``t_live`` — no candidate list can usefully exceed the live tile
     count), so one pathological batch can never inflate later batches'
     gather width and memory past the layout itself; ``reset()`` drops
-    the cache entirely when a stream's width profile changes (e.g.
-    after a burst of worst-case boxes).
+    the cache entirely when a stream's width profile changes — the
+    server hooks it on every streaming re-stage, where the layout the
+    widths converged against no longer exists.
 
     ``hits``/``misses`` count cache effectiveness; ``seed`` force-sets
     a width unclamped (tests use it to exercise the widen-and-retry
@@ -431,95 +162,130 @@ class WidthPolicy:
 
 
 class SpatialServer:
-    """Stage once, then serve batched range / kNN queries.
+    """Stage once, then serve batched range / kNN queries — and keep
+    serving as the dataset grows.
 
-    ``pruned=True`` (default) routes every batch through the global
-    index and probes only candidate tiles — exact on all six layouts,
-    answers identical to ``pruned=False`` (the dense all-tile oracle
-    sweep).  ``mesh=None`` serves in-process; with a mesh, every batch
-    runs as a query-sharded SPMD step over ``mesh[axis]``.  Per-call
-    ``pruned=`` overrides the default.
+    ``config`` (a frozen ``ServeConfig``) picks the placement
+    (``replicated`` | ``sharded``), the default probe (``pruned``
+    routed candidates | the ``dense`` all-tile oracle — also a per-call
+    ``pruned=`` override), the intra-tile local index (``off`` | ``x``
+    | ``hilbert``), chunk granularity, and the capacity/slack policy
+    for streaming ``append``.  ``mesh=None`` serves in-process; with a
+    mesh every batch runs as an SPMD step over ``mesh[config.axis]``.
 
-    ``sharded=False`` replicates the staged layout on every device
-    (queries are the only sharded axis); ``sharded=True`` shards the
-    *tiles* across devices too and serves through the owner-routed
-    ``all_to_all`` exchange (``serve.exchange``) — per-device staged
-    memory drops to O(total/D) and answers stay bit-identical to the
-    oracle.  In-process (``mesh=None``) sharded serving simulates the
-    exchange over ``shards`` virtual owners (default 1) — same maths,
-    one device; useful for validation and for sizing shard counts.
-
-    ``local_index=True`` (default) stages the intra-tile local index
-    (sorted members + per-128-slot chunk boxes, see ``stage``) and
-    probes candidate tiles with the chunk-skipping kernel variants —
-    LocationSpark's second index layer, cutting the constant factor
-    *inside* each candidate tile.  Answers are bit-identical to
-    ``local_index=False`` (the unindexed oracle staging);
-    ``chunk_skip_rate(qboxes)`` reports the realised skip fraction.
+    The server is placement-agnostic: it routes, packs, and enforces
+    exactness (the kNN widen-and-retry ladder), delegating execution to
+    its ``TileLayout`` (``self.tiles``).  Answers are bit-identical
+    across placements, probe modes, and local-index modes on all six
+    layouts (tested), including after any sequence of ``append`` calls.
     """
 
     def __init__(self, parts: api.Partitioning, mbrs: jax.Array,
-                 mesh: Mesh | None = None, axis: str = "d",
-                 capacity: int | None = None, method: str | None = None,
-                 pruned: bool = True, sharded: bool = False,
-                 shards: int | None = None, local_index: bool = True):
+                 config: ServeConfig | None = None, *,
+                 mesh: Mesh | None = None, method: str | None = None,
+                 **legacy):
+        if isinstance(config, Mesh):           # legacy positional mesh
+            warnings.warn(
+                "passing mesh positionally to SpatialServer is "
+                "deprecated; use SpatialServer(parts, mbrs, config, "
+                "mesh=...)", LegacyServeWarning, stacklevel=2)
+            mesh, config = config, None
+        if legacy:
+            known = {"pruned", "sharded", "shards", "local_index",
+                     "capacity", "axis"}
+            bad = set(legacy) - known
+            if bad:
+                raise TypeError(
+                    f"unknown SpatialServer kwargs: {sorted(bad)}")
+            warnings.warn(
+                "SpatialServer's boolean kwargs "
+                f"({sorted(legacy)}) are deprecated; pass "
+                "config=ServeConfig(...) instead",
+                LegacyServeWarning, stacklevel=2)
+            config = ServeConfig.from_legacy(config, **legacy)
+        self.config = config = config if config is not None else ServeConfig()
         self.parts = parts
-        self.mesh, self.axis = mesh, axis
-        self.pruned = pruned
-        self.sharded = sharded
-        self.local_index = local_index
-        self.n_devices = int(mesh.shape[axis]) if mesh is not None else 1
-        if sharded:
-            self.shards = int(shards) if shards else self.n_devices
-            if mesh is not None and self.shards != self.n_devices:
-                raise ValueError(
-                    "sharded serving places exactly one tile shard per "
-                    f"mesh device ({self.n_devices}), got shards="
-                    f"{self.shards}")
-            self.slayout, self._oracle_np, self.stats = stage_sharded(
-                parts, mbrs, self.shards, capacity, mesh=mesh, axis=axis,
-                local_index=local_index)
-            self.layout = None
-            self._oracle_jax = None
-        else:
-            self.shards = 1
-            self.layout, self.stats = stage(parts, mbrs, capacity,
-                                            local_index=local_index)
-        self.stats["method"] = method
-        self.stats["local_index"] = local_index
-        self._steps: dict = {}
+        self.mesh = mesh
+        self.tiles: TileLayout = build_tiles(parts, mbrs, config, mesh)
+        self.stats = self.tiles.stats      # one dict, shared — appends
+        self.stats["method"] = method      # mutate it in place
         self.widths = WidthPolicy(cap=self.stats["t_live"])
 
     @classmethod
     def from_method(cls, method: str, mbrs: jax.Array, payload: int,
-                    mesh: Mesh | None = None, axis: str = "d",
-                    **kw) -> "SpatialServer":
+                    config: ServeConfig | None = None, *,
+                    mesh: Mesh | None = None, **legacy) -> "SpatialServer":
+        """Partition ``mbrs`` with ``method`` at ``payload`` and serve.
+
+        Everything after ``payload`` — ``config`` included — reaches
+        the constructor verbatim, so staging knobs like
+        ``ServeConfig.capacity`` are honoured here exactly as on the
+        direct path (legacy boolean kwargs pass through the same
+        deprecation shim).
+        """
         parts = api.partition(method, mbrs, payload)
-        return cls(parts, mbrs, mesh=mesh, axis=axis, method=method, **kw)
+        return cls(parts, mbrs, config, mesh=mesh, method=method, **legacy)
 
     # -- shared accessors -------------------------------------------------
 
     @property
     def probe_boxes(self) -> jax.Array:
-        lay = self.slayout if self.sharded else self.layout
-        return lay.probe_boxes
+        return self.tiles.probe_boxes
 
     @property
     def uni(self) -> jax.Array:
-        lay = self.slayout if self.sharded else self.layout
-        return lay.uni
+        return self.tiles.uni
 
     @property
     def chunk_boxes(self) -> jax.Array | None:
         """The (T, C, 4) global local index (None when unindexed)."""
-        lay = self.slayout if self.sharded else self.layout
-        return lay.chunk_boxes
+        return self.tiles.chunk_boxes
+
+    @property
+    def layout(self) -> StagedLayout | None:
+        """The replicated staging (None under ``placement='sharded'``)."""
+        return getattr(self.tiles, "staged", None)
+
+    @property
+    def slayout(self) -> ShardedLayout | None:
+        """The sharded staging (None under ``placement='replicated'``)."""
+        return getattr(self.tiles, "slayout", None)
+
+    @property
+    def shards(self) -> int:
+        return self.tiles.shards
+
+    # legacy attribute views (one release, like the shims): PR-4 set
+    # these as instance attributes; they now derive from the config
+    @property
+    def sharded(self) -> bool:
+        return self.config.placement == "sharded"
+
+    @property
+    def pruned(self) -> bool:
+        return self.config.probe == "pruned"
+
+    @property
+    def local_index(self) -> bool:
+        return self.config.indexed
+
+    @property
+    def axis(self) -> str:
+        return self.config.axis
+
+    @property
+    def n_devices(self) -> int:
+        return self.tiles.n_devices
+
+    @property
+    def _oracle_np(self):
+        return self.tiles.oracle_np
 
     def chunk_skip_rate(self, qboxes: jax.Array) -> float:
         """Measured local-index effectiveness for one batch: the
         fraction of per-candidate 128-member chunks whose box the query
         misses (work the ``*_skip`` kernels drop).  0.0 when staged
-        with ``local_index=False``.  Pure measurement — does not touch
+        with ``local_index="off"``.  Pure measurement — does not touch
         the width cache."""
         if self.chunk_boxes is None:
             return 0.0
@@ -530,96 +296,36 @@ class SpatialServer:
         return float(rops.chunk_skip_rate(qboxes, self.chunk_boxes, cand))
 
     def resident_tile_bytes(self) -> int:
-        """Per-device bytes of device-resident staged member data.
+        """Per-device bytes of device-resident staged member data —
+        the O(N) (replicated) vs O(N/D) (sharded) axis the benchmarks
+        report."""
+        return self.tiles.resident_tile_bytes()
 
-        Replicated serving holds the full staging (member tiles +
-        canonical tiles + ids) on every device; sharded serving holds
-        1/D of the canonical tiles + ids (the (T, 4) probe boxes stay
-        replicated but are negligible).  This is the O(N) vs O(N/D)
-        axis the benchmarks report.
+    # -- streaming --------------------------------------------------------
+
+    def append(self, mbrs) -> dict:
+        """Stream new objects into the served layout.
+
+        mbrs: (M, 4) f32 MBRs; ids continue the running numbering.
+        Inserts into each tile's reserved slack (probe/chunk boxes
+        refresh incrementally, compiled steps stay warm); a tile
+        overflow re-stages the layout at a grown capacity — owners
+        re-balance under sharding — and resets the width cache, whose
+        converged widths described the old staging.  Returns the append
+        report (``appended``, ``restaged``, ``n``, ``cap``,
+        ``free_slots_min``).  Answers after any append sequence are
+        bit-identical to a from-scratch staging of the full dataset.
         """
-        if self.sharded:
-            s = self.slayout
-            return int(s.canon_shards.nbytes + s.id_shards.nbytes) \
-                // self.shards
-        lay = self.layout
-        return int(lay.tiles.nbytes + lay.canon_tiles.nbytes
-                   + lay.ids.nbytes)
-
-    def _oracle(self) -> tuple[jax.Array, jax.Array]:
-        """Dense single-device staging for the ``pruned=False`` oracle
-        in sharded mode — staged to the default device on first use
-        (debug/validation path; the sharded server never needs it)."""
-        if self._oracle_jax is None:
-            canon_np, ids_np = self._oracle_np
-            self._oracle_jax = (jnp.asarray(canon_np), jnp.asarray(ids_np))
-        return self._oracle_jax
-
-    # -- SPMD plumbing ----------------------------------------------------
-
-    def _sharded_call(self, name: str, fn, qarrays: tuple,
-                      costs: np.ndarray, pads: tuple):
-        """Run ``fn(*per_query_arrays) -> pytree`` query-sharded
-        (replicated layout).
-
-        Every array in ``qarrays`` is leading-axis (Q, ...); ``pads``
-        gives the matching padding element for the slots LPT leaves
-        empty.  The jitted step is cached under ``name`` (callers embed
-        shape-determining params such as the candidate width).
-        """
-        if self.mesh is None:
-            return fn(*qarrays), dict(skew=1.0)
-        slots, pstats = pack_queries(costs, self.n_devices)
-        packed = [_pack_rows(a, slots, p) for a, p in zip(qarrays, pads)]
-
-        step = self._steps.get(name)
-        if step is None:
-            spec = P(self.axis)
-
-            def spmd(*qs):
-                return fn(*(x[0] for x in qs))
-
-            step = jax.jit(shard_map(
-                spmd, mesh=self.mesh, in_specs=(spec,) * len(qarrays),
-                out_specs=spec, check_vma=False))
-            self._steps[name] = step
-
-        sharding = NamedSharding(self.mesh, P(self.axis))
-        out = step(*(jax.device_put(jnp.asarray(p), sharding)
-                     for p in packed))
-        n_q = qarrays[0].shape[0]
-        # step outputs concatenate per-device (Qpd, ...) blocks into a
-        # flat (D·Qpd, ...) leading axis; restore the (D, Qpd) grid
-        return jax.tree.map(
-            lambda x: _unpack_rows(
-                np.asarray(x).reshape(slots.shape + np.asarray(x).shape[1:]),
-                slots, n_q),
-            out), pstats
-
-    def _exchange_plan(self, cand, costs: np.ndarray):
-        """Host-side plan for one sharded batch: LPT query packing +
-        owner-local candidate translation (``router.owner_split``)."""
-        slots, pstats = pack_queries(costs, self.shards)
-        send_slot, send_cand, xstats = router.owner_split(
-            np.asarray(cand), slots, self.slayout.owner, self.slayout.local)
-        return slots, send_slot, send_cand, {**pstats, **xstats}
-
-    def _put(self, arr):
-        a = jnp.asarray(arr)
-        if self.mesh is not None:
-            a = jax.device_put(a, NamedSharding(self.mesh, P(self.axis)))
-        return a
-
-    def _exchange_step(self, key: tuple, orch, n_sharded: int,
-                       n_replicated: int = 0, **static):
-        step = self._steps.get(key)
-        if step is None:
-            step = exchange.build_step(orch, self.mesh, self.axis,
-                                       n_sharded, n_replicated, **static)
-            self._steps[key] = step
-        return step
+        report = self.tiles.append(mbrs)
+        self.widths.cap = self.stats["t_live"]
+        if report["restaged"]:
+            self.widths.reset()
+        return report
 
     # -- routing helpers (host side, per batch) ---------------------------
+
+    def _use_pruned(self, pruned: bool | None) -> bool:
+        return (self.config.probe == "pruned") if pruned is None else pruned
 
     def _route_batch(self, qboxes: jax.Array):
         """Candidate-tile index for one range batch.  ``f_max`` covers
@@ -643,125 +349,6 @@ class SpatialServer:
         return dict(fanout_mean=float(fanout_np.mean()),
                     fanout_max=int(fanout_np.max()))
 
-    # -- sharded executors (owner-routed all_to_all exchange) -------------
-
-    def _sharded_range_counts(self, qboxes: jax.Array):
-        cand, costs, f = self._route_batch(qboxes)
-        slots, ss, sc, xstats = self._exchange_plan(cand, costs)
-        qp = _pack_rows(np.asarray(qboxes, np.float32), slots, _SENTINEL)
-        li = self.local_index
-        extra = (self.slayout.chunk_shards,) if li else ()
-        step = self._exchange_step(
-            ("s_range_counts", qp.shape[1], ss.shape[2], sc.shape[3], li),
-            exchange.serve_range_counts, n_sharded=4 + len(extra))
-        out = step(self._put(qp), self._put(ss), self._put(sc),
-                   self.slayout.canon_shards, *extra)
-        counts = _unpack_rows(out, slots, qboxes.shape[0])
-        return jnp.asarray(counts), dict(f_max=f, **xstats)
-
-    def _sharded_range_ids(self, qboxes: jax.Array, max_hits: int):
-        cand, costs, f = self._route_batch(qboxes)
-        slots, ss, sc, xstats = self._exchange_plan(cand, costs)
-        qp = _pack_rows(np.asarray(qboxes, np.float32), slots, _SENTINEL)
-        cap = int(self.slayout.id_shards.shape[-1])
-        mh_local = min(max_hits, sc.shape[3] * cap)
-        li = self.local_index
-        extra = (self.slayout.chunk_shards,) if li else ()
-        step = self._exchange_step(
-            ("s_range_ids", qp.shape[1], ss.shape[2], sc.shape[3],
-             max_hits, li),
-            exchange.serve_range_ids, n_sharded=5 + len(extra),
-            max_hits=max_hits, mh_local=mh_local)
-        out = step(self._put(qp), self._put(ss), self._put(sc),
-                   self.slayout.canon_shards, self.slayout.id_shards,
-                   *extra)
-        n_q = qboxes.shape[0]
-        hit_ids, counts, overflow = (
-            _unpack_rows(x, slots, n_q) for x in out)
-        return (jnp.asarray(hit_ids), jnp.asarray(counts),
-                jnp.asarray(overflow), dict(f_max=f, **xstats))
-
-    def _knn_cost_proxy(self, dist, k: int) -> np.ndarray:
-        """LPT packing weight: tiles the first deepening box would
-        touch (matches the radius the kernel actually starts from —
-        density over the ``n`` live canonical members, not the padded
-        slot count)."""
-        uni = self.uni
-        diag = float(np.linalg.norm(np.asarray(uni[2:] - uni[:2])))
-        r0 = float(knn_mod.initial_radius(
-            jnp.float32(diag), k, self.stats["n"]))
-        return (1.0 + np.sum(np.asarray(dist) <= r0, axis=1)
-                ).astype(np.float64)
-
-    def _knn_retry_loop(self, pts: jax.Array, k: int, max_cand: int,
-                        run_batch):
-        """The exactness-critical widen-and-retry ladder, shared by the
-        replicated and sharded executors.
-
-        ``run_batch(f)`` answers the batch with frontier width ``f``
-        and returns ``(nn_ids, nn_d2, radius, overflow, excluded,
-        xstats)``.  Any query whose √2-inflated refinement radius
-        reaches its nearest excluded tile may have missed a true
-        neighbour, so the frontier doubles (logged) until no query can
-        miss or the frontier holds every live tile.  Converged widths
-        feed the width cache so a steady stream pays the ladder once.
-        """
-        t_live, n = self.stats["t_live"], self.stats["n"]
-        wkey = ("knn", k, max_cand)
-        f = self.widths.start(
-            wkey, _f_width(4 * k * t_live // max(n, 1) + 3, t_live))
-        retries = 0
-        while True:
-            nn_ids, nn_d2, radius, overflow, excl, xstats = run_batch(f)
-            miss = np.asarray(excl) <= np.asarray(radius) * np.sqrt(2.0)
-            if not miss.any() or f >= t_live:
-                break
-            new_f = _f_width(2 * f, t_live)
-            log.info("kNN frontier miss on %d/%d queries: widening "
-                     "f_max %d -> %d (retry %d)",
-                     int(miss.sum()), pts.shape[0], f, new_f, retries + 1)
-            f = new_f
-            retries += 1
-        self.widths.observe(wkey, f)
-        overflow = np.asarray(overflow) | miss
-        return nn_ids, nn_d2, overflow, dict(f_max=f, retries=retries,
-                                             **xstats)
-
-    def _sharded_knn(self, pts: jax.Array, k: int, max_cand: int):
-        n_live = self.stats["n"]
-        uni = self.uni
-        pad_pt = np.asarray((uni[:2] + uni[2:]) * 0.5)
-        n_q = pts.shape[0]
-        li = self.local_index
-
-        def run_batch(f):
-            cand, dist, excl = router.candidate_knn(
-                self.slayout.probe_boxes, pts, f)
-            slots, ss, sc, xstats = self._exchange_plan(
-                cand, self._knn_cost_proxy(dist, k))
-            pp = _pack_rows(np.asarray(pts, np.float32), slots, pad_pt)
-            dead = slots < 0
-            orch = (exchange.serve_knn if li
-                    else exchange.serve_knn_unindexed)
-            extra = (self.slayout.chunk_shards,) if li else ()
-            step = self._exchange_step(
-                ("s_knn", k, max_cand, pp.shape[1], ss.shape[2],
-                 sc.shape[3], li),
-                orch, n_sharded=6 + len(extra), n_replicated=1,
-                k=k, max_cand=max_cand, n_live=n_live)
-            out = step(self._put(pp), self._put(ss), self._put(sc),
-                       self._put(dead), self.slayout.canon_shards,
-                       self.slayout.id_shards, *extra, uni)
-            nn_ids, nn_d2, radius, overflow, rounds = (
-                _unpack_rows(x, slots, n_q) for x in out)
-            xstats = dict(xstats, rounds=int(rounds.max(initial=0)))
-            return nn_ids, nn_d2, radius, overflow, excl, xstats
-
-        nn_ids, nn_d2, overflow, stats = self._knn_retry_loop(
-            pts, k, max_cand, run_batch)
-        return (jnp.asarray(nn_ids), jnp.asarray(nn_d2),
-                jnp.asarray(overflow), stats)
-
     # -- queries ----------------------------------------------------------
 
     def range_counts(self, qboxes: jax.Array, pruned: bool | None = None):
@@ -771,34 +358,13 @@ class SpatialServer:
         ``mode``/``f_max`` describing the executor that ran.
         """
         stats = self._fanout_stats(qboxes)
-        use_pruned = self.pruned if pruned is None else pruned
-        if self.sharded:
-            if not use_pruned:
-                canon, _ = self._oracle()
-                counts = range_mod.range_counts(qboxes, canon)
-                stats.update(mode="dense")
-                return counts, stats
-            counts, xstats = self._sharded_range_counts(qboxes)
-            stats.update(mode="sharded", shards=self.shards, **xstats)
-            return counts, stats
-        layout = self.layout
-        if use_pruned:
+        if self._use_pruned(pruned):
             cand, costs, f = self._route_batch(qboxes)
-            cb = layout.chunk_boxes if self.local_index else None
-            counts, pstats = self._sharded_call(
-                f"range_counts_pruned_{f}_{self.local_index}",
-                lambda qs, cd: range_mod.pruned_range_counts(
-                    qs, layout.canon_tiles, cd, chunk_boxes=cb),
-                (qboxes, cand), costs,
-                (_SENTINEL, np.full((f,), -1, np.int32)))
-            stats.update(mode="pruned", f_max=f, **pstats)
+            counts, xstats = self.tiles.range_counts(qboxes, cand, costs)
+            stats.update(mode=self.tiles.mode, f_max=f, **xstats)
         else:
-            counts, pstats = self._sharded_call(
-                "range_counts",
-                lambda qs: range_mod.range_counts(qs, layout.canon_tiles),
-                (qboxes,), np.ones(qboxes.shape[0], np.float64),
-                (_SENTINEL,))
-            stats.update(mode="dense", **pstats)
+            counts, xstats = self.tiles.dense_range_counts(qboxes)
+            stats.update(mode="dense", **xstats)
         return counts, stats
 
     def range_ids(self, qboxes: jax.Array, max_hits: int = 1024,
@@ -806,38 +372,15 @@ class SpatialServer:
         """Exact unique hit-id sets (ascending, -1 padded) + overflow
         -> ``(hit_ids[Q, max_hits], counts[Q], overflow[Q], stats)``."""
         stats = self._fanout_stats(qboxes)
-        use_pruned = self.pruned if pruned is None else pruned
-        if self.sharded:
-            if not use_pruned:
-                canon, ids = self._oracle()
-                hit_ids, counts, overflow = range_mod.range_ids(
-                    qboxes, canon, ids, max_hits)
-                stats.update(mode="dense")
-                return hit_ids, counts, overflow, stats
-            hit_ids, counts, overflow, xstats = self._sharded_range_ids(
-                qboxes, max_hits)
-            stats.update(mode="sharded", shards=self.shards, **xstats)
-            return hit_ids, counts, overflow, stats
-        layout = self.layout
-        if use_pruned:
+        if self._use_pruned(pruned):
             cand, costs, f = self._route_batch(qboxes)
-            cb = layout.chunk_boxes if self.local_index else None
-            (hit_ids, counts, overflow), pstats = self._sharded_call(
-                f"range_ids_pruned_{f}_{max_hits}_{self.local_index}",
-                lambda qs, cd: range_mod.pruned_range_ids(
-                    qs, layout.canon_tiles, layout.ids, cd, max_hits,
-                    chunk_boxes=cb),
-                (qboxes, cand), costs,
-                (_SENTINEL, np.full((f,), -1, np.int32)))
-            stats.update(mode="pruned", f_max=f, **pstats)
+            hit_ids, counts, overflow, xstats = self.tiles.range_ids(
+                qboxes, cand, costs, max_hits)
+            stats.update(mode=self.tiles.mode, f_max=f, **xstats)
         else:
-            (hit_ids, counts, overflow), pstats = self._sharded_call(
-                f"range_ids_{max_hits}",
-                lambda qs: range_mod.range_ids(qs, layout.canon_tiles,
-                                               layout.ids, max_hits),
-                (qboxes,), np.ones(qboxes.shape[0], np.float64),
-                (_SENTINEL,))
-            stats.update(mode="dense", **pstats)
+            hit_ids, counts, overflow, xstats = self.tiles.dense_range_ids(
+                qboxes, max_hits)
+            stats.update(mode="dense", **xstats)
         return hit_ids, counts, overflow, stats
 
     def knn(self, pts: jax.Array, k: int, max_cand: int = 1024,
@@ -852,24 +395,14 @@ class SpatialServer:
         — logged and counted in ``stats['retries']`` — so returned
         answers match the dense oracle exactly.
         """
-        use_pruned = self.pruned if pruned is None else pruned
-        if self.sharded:
-            if not use_pruned:
-                canon, ids = self._oracle()
-                nn_ids, nn_d2, _, overflow, rounds = knn_mod.batched_knn(
-                    pts, k, canon, ids, self.uni, max_cand=max_cand,
-                    n_live=self.stats["n"])
-                mode_stats = dict(
-                    mode="dense",
-                    rounds=int(np.asarray(rounds).max(initial=0)))
-            else:
-                nn_ids, nn_d2, overflow, xstats = self._sharded_knn(
-                    pts, k, max_cand)
-                mode_stats = dict(mode="sharded", shards=self.shards,
-                                  **xstats)
+        if self._use_pruned(pruned):
+            nn_ids, nn_d2, overflow, mode_stats = self._knn_retry_loop(
+                pts, k, max_cand)
+            mode_stats = dict(mode=self.tiles.mode, **mode_stats)
         else:
-            nn_ids, nn_d2, overflow, mode_stats = self._replicated_knn(
-                pts, k, max_cand, use_pruned)
+            nn_ids, nn_d2, overflow, xstats = self.tiles.dense_knn(
+                pts, k, max_cand)
+            mode_stats = dict(mode="dense", **xstats)
         fanout = knn_mod.knn_fanout(jnp.asarray(pts),
                                     jnp.asarray(nn_d2[:, -1]),
                                     self.parts.boxes, self.parts.valid)
@@ -877,43 +410,86 @@ class SpatialServer:
                      fanout_max=int(jnp.max(fanout)), **mode_stats)
         return nn_ids, nn_d2, overflow, stats
 
-    def _replicated_knn(self, pts: jax.Array, k: int, max_cand: int,
-                        use_pruned: bool):
-        layout = self.layout
-        n_live = self.stats["n"]
-        pad_pt = np.asarray((layout.uni[:2] + layout.uni[2:]) * 0.5)
-        if not use_pruned:
-            (nn_ids, nn_d2, radius, overflow, rounds), pstats = \
-                self._sharded_call(
-                    f"knn_{k}_{max_cand}",
-                    lambda qs: knn_mod.batched_knn(
-                        qs, k, layout.canon_tiles, layout.ids, layout.uni,
-                        max_cand=max_cand, n_live=n_live),
-                    (pts,), np.ones(pts.shape[0], np.float64), (pad_pt,))
-            return nn_ids, nn_d2, overflow, dict(
-                mode="dense", rounds=int(np.asarray(rounds).max(initial=0)),
-                **pstats)
+    def _knn_retry_loop(self, pts: jax.Array, k: int, max_cand: int):
+        """The exactness-critical widen-and-retry ladder, written once
+        against the protocol.
 
-        cb = layout.chunk_boxes if self.local_index else None
+        ``tiles.knn_attempt(pts, k, max_cand, f)`` answers the batch
+        with frontier width ``f``.  Any query whose √2-inflated
+        refinement radius reaches its nearest excluded tile may have
+        missed a true neighbour, so the frontier doubles (logged) until
+        no query can miss or the frontier holds every live tile.
+        Converged widths feed the width cache so a steady stream pays
+        the ladder once.
+        """
+        t_live, n = self.stats["t_live"], self.stats["n"]
+        wkey = ("knn", k, max_cand)
+        f = self.widths.start(
+            wkey, _f_width(4 * k * t_live // max(n, 1) + 3, t_live))
+        retries = 0
+        while True:
+            nn_ids, nn_d2, radius, overflow, excl, xstats = \
+                self.tiles.knn_attempt(pts, k, max_cand, f)
+            miss = np.asarray(excl) <= np.asarray(radius) * np.sqrt(2.0)
+            if not miss.any() or f >= t_live:
+                break
+            new_f = _f_width(2 * f, t_live)
+            log.info("kNN frontier miss on %d/%d queries: widening "
+                     "f_max %d -> %d (retry %d)",
+                     int(miss.sum()), pts.shape[0], f, new_f, retries + 1)
+            f = new_f
+            retries += 1
+        self.widths.observe(wkey, f)
+        overflow = np.asarray(overflow) | miss
+        return (jnp.asarray(nn_ids), jnp.asarray(nn_d2),
+                jnp.asarray(overflow),
+                dict(f_max=f, retries=retries, **xstats))
 
-        def run_batch(f):
-            cand, dist, excl = router.candidate_knn(
-                layout.probe_boxes, pts, f)
-            (nn_ids, nn_d2, radius, overflow, rounds), pstats = \
-                self._sharded_call(
-                    f"knn_pruned_{k}_{max_cand}_{f}_{self.local_index}",
-                    lambda qs, cd, ex: knn_mod.pruned_knn(
-                        qs, k, layout.canon_tiles, layout.ids,
-                        layout.uni, cd, ex, max_cand=max_cand,
-                        n_live=n_live, chunk_boxes=cb),
-                    (pts, cand, excl),
-                    self._knn_cost_proxy(dist, k),
-                    (pad_pt, np.full((f,), -1, np.int32),
-                     np.float32(np.inf)))
-            pstats = dict(pstats,
-                          rounds=int(np.asarray(rounds).max(initial=0)))
-            return nn_ids, nn_d2, radius, overflow, excl, pstats
 
-        nn_ids, nn_d2, overflow, stats = self._knn_retry_loop(
-            pts, k, max_cand, run_batch)
-        return nn_ids, nn_d2, overflow, dict(mode="pruned", **stats)
+# --------------------------------------------------------------------------
+# deprecated shims (one release): the PR-4 staging entry points
+# --------------------------------------------------------------------------
+
+def stage(parts: api.Partitioning, mbrs: jax.Array,
+          capacity: int | None = None, local_index: bool = True
+          ) -> tuple[StagedLayout, dict]:
+    """Deprecated: use ``stage_tiles(parts, mbrs, ServeConfig(...))``.
+
+    The boolean ``local_index`` maps to the config modes ``"x"`` /
+    ``"off"``; behaviour (capacity sizing, sort, chunk boxes, stats) is
+    the config path's.  One deliberate semantic change rides along: an
+    object intersecting *no* partition region — possible on the
+    non-covering hc/str layouts — was silently dropped by the PR-4
+    ``stage`` (absent from every answer); ``stage_tiles`` adopts it
+    into the nearest valid tile instead, so it is served (see
+    ``layout.membership``).  Data staged under a layout built from the
+    same data is unaffected.
+    """
+    warnings.warn(
+        "repro.serve.engine.stage is deprecated; use "
+        "repro.serve.stage_tiles(parts, mbrs, ServeConfig(...))",
+        LegacyServeWarning, stacklevel=2)
+    return stage_tiles(parts, mbrs, ServeConfig.from_legacy(
+        local_index=local_index, capacity=capacity))
+
+
+def stage_sharded(parts: api.Partitioning, mbrs: jax.Array, n_shards: int,
+                  capacity: int | None = None, mesh: Mesh | None = None,
+                  axis: str = "d", local_index: bool = True
+                  ) -> tuple[ShardedLayout, tuple, dict]:
+    """Deprecated: use ``stage_tiles`` + ``shard_staged`` (or simply a
+    ``placement="sharded"`` server, which manages both)."""
+    warnings.warn(
+        "repro.serve.engine.stage_sharded is deprecated; use "
+        "repro.serve.stage_tiles + repro.serve.shard_staged, or a "
+        "SpatialServer with ServeConfig(placement='sharded')",
+        LegacyServeWarning, stacklevel=2)
+    lay, stats = stage_tiles(parts, mbrs, ServeConfig.from_legacy(
+        local_index=local_index, capacity=capacity, axis=axis))
+    return shard_staged(lay, stats, n_shards, mesh=mesh, axis=axis)
+
+
+# keep the historical private helpers importable for one release (the
+# packing grid movers live in serve.layout now)
+_pack_rows = layout_mod._pack_rows
+_unpack_rows = layout_mod._unpack_rows

@@ -1,9 +1,13 @@
 """Owner-routed query exchange over sharded tile layouts.
 
-The distributed serving step.  Tiles are placed on owner devices
-(``core.placement.shard_tiles``); queries are LPT-packed onto *home*
-devices exactly as in the replicated path; and every batch runs as one
-SPMD step built from three moves:
+The distributed serving step — the machinery behind
+``serve.layout.ShardedTiles``, the sharded implementation of the
+``TileLayout`` protocol (callers never build these steps directly; the
+server reaches them through the protocol).  Tiles are placed on owner
+devices (``core.placement.shard_tiles``, re-balanced on streaming
+re-stages); queries are LPT-packed onto *home* devices exactly as in
+the replicated path; and every batch runs as one SPMD step built from
+three moves:
 
   scatter — each home gathers, per owner, the queries whose candidate
             lists touch that owner's tiles (``router.owner_split``
@@ -155,8 +159,8 @@ def serve_range_ids(comm: _Comm, q: jax.Array, sl: jax.Array, sc: jax.Array,
 
 def serve_knn(comm: _Comm, pts: jax.Array, sl: jax.Array, sc: jax.Array,
               dead: jax.Array, tiles: jax.Array, ids: jax.Array,
-              cboxes: jax.Array | None, uni: jax.Array, *, k: int,
-              max_cand: int, n_live: int, max_rounds: int = 32
+              cboxes: jax.Array | None, uni: jax.Array, n_live: jax.Array,
+              *, k: int, max_cand: int, max_rounds: int = 32
               ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                          jax.Array]:
     """Sharded exact kNN: lock-step deepening + top-k frontier merge.
@@ -168,7 +172,9 @@ def serve_knn(comm: _Comm, pts: jax.Array, sl: jax.Array, sc: jax.Array,
     is the oracle arg-order wrapper), uni the (replicated) dataset
     universe; ``n_live`` is the *global* live canonical member count
     (the dataset size) so the density-based initial radius matches the
-    single-device paths -> ``(nn_ids[Qpd, k], nn_d2[Qpd, k],
+    single-device paths — a replicated traced scalar, not a baked-in
+    static, so streaming appends (which change ``n`` every batch) keep
+    the compiled step warm -> ``(nn_ids[Qpd, k], nn_d2[Qpd, k],
     radius[Qpd], overflow[Qpd], rounds[Qpd])``.
 
     The radius state lives at home.  Each deepening round exchanges
@@ -252,12 +258,13 @@ def serve_knn(comm: _Comm, pts: jax.Array, sl: jax.Array, sc: jax.Array,
 
 def serve_knn_unindexed(comm: _Comm, pts: jax.Array, sl: jax.Array,
                         sc: jax.Array, dead: jax.Array, tiles: jax.Array,
-                        ids: jax.Array, uni: jax.Array, **static):
+                        ids: jax.Array, uni: jax.Array, n_live: jax.Array,
+                        **static):
     """``serve_knn`` without the local-index chunk shards — the oracle
-    arg order (no ``cboxes`` slot), so the ``local_index=False`` server
+    arg order (no ``cboxes`` slot), so the ``local_index="off"`` server
     can build the step with one fewer sharded input."""
     return serve_knn(comm, pts, sl, sc, dead, tiles, ids, None, uni,
-                     **static)
+                     n_live, **static)
 
 
 # --------------------------------------------------------------------------

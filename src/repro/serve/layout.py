@@ -1,0 +1,1106 @@
+"""The `TileLayout` protocol: one staging + serving contract, two
+placements, and the streaming append lifecycle.
+
+PR 1–4 grew two parallel serving stacks — a replicated one
+(``stage`` → ``StagedLayout`` → query-sharded ``shard_map`` steps) and
+a sharded one (``stage_sharded`` → ``ShardedLayout`` → the owner-routed
+``all_to_all`` exchange) — and ``SpatialServer`` forked on
+``self.sharded`` at every query entry point.  This module collapses the
+fork: both placements implement one protocol —
+
+- ``ReplicatedTiles`` — the full staging lives on every device; only
+  queries shard.  Executors are the gathered ``query.range`` /
+  ``query.knn`` paths under a query-sharded ``shard_map`` step (staging
+  arrays ride along as replicated step *arguments*, never baked-in
+  closures, so streaming appends refresh data without recompiles).
+- ``ShardedTiles`` — tiles shard across owner devices
+  (``core.placement.shard_tiles``) and every batch runs the
+  ``serve.exchange`` orchestrations.  The replicated full staging is
+  kept host-side only, as the ``probe="dense"`` oracle.
+
+``SpatialServer`` (``serve.engine``) is written once against the
+protocol: route → pack → ``tiles.range_counts(...)`` — no placement
+branches.  Staging itself (``stage_tiles``) is configured by one frozen
+``ServeConfig``: local-index mode ``off``/``x``/``hilbert`` (ascending
+xmin vs Hilbert-key member order inside each tile — Hilbert makes chunk
+boxes square-ish instead of x-strips), chunk-box granularity, and the
+capacity/slack policy.
+
+**Streaming appends** (the ROADMAP's moving-dataset item): staging
+reserves ``config.slack`` free slots per tile past the observed max
+tile count, and ``append(mbrs)`` inserts new objects into that slack —
+host-side mirrors are updated incrementally (probe boxes and chunk
+boxes union the new member MBRs, so routing and chunk skipping stay
+exact) and pushed to the device without re-tracing any serving step.
+The device refresh re-uploads the full mirrors (O(T·cap) per append —
+the shapes compiled steps already expect); a device-side ``.at[]``
+scatter of only the touched slots would cut that to O(M) and is the
+known follow-up, but the host mirrors stay the source of truth either
+way.
+A tile overflow triggers a **re-stage**: the layout is rebuilt from the
+accumulated dataset at a grown capacity (same ``Partitioning``, fresh
+sort + chunk boxes), owners re-balance under sharding
+(``shard_tiles`` on the new member counts — the ``ceil(T/D)``
+per-device memory bound is re-established, move counts reported), and
+the server's ``WidthPolicy`` resets.  Because answers are functions of
+the canonical membership *sets* — counts are sums, id lists are sorted
+ascending, kNN ties break on ``(distance, id)`` — append-then-query is
+bit-identical to re-staging from scratch, which the streaming tests
+assert on all six layouts.
+
+Membership for appends (and, identically, for re-stages) extends MASJ
+assignment with **nearest-tile adoption**: an object intersecting no
+partition region — possible on the non-covering hc/str layouts once
+data moves — is assigned to the nearest valid tile.  Pruned routing
+stays exact because probe boxes are unions of canonical *member* MBRs:
+wherever an object lands, the probe box of that tile grows to cover
+it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import geometry, placement
+from ..core.compat import shard_map
+from ..core.partition import api, assign
+from ..core.partition.assign import round_up
+from ..kernels.hilbert import ops as hilbert_ops
+from ..kernels.range_probe import ops as rops
+from ..query import knn as knn_mod, range as range_mod
+from . import exchange, router
+from .config import ServeConfig
+
+_SENTINEL = np.array(geometry.SENTINEL_BOX, np.float32)
+
+log = logging.getLogger(__name__)
+
+
+# --------------------------------------------------------------------------
+# staged-array containers (unchanged pytree formats from PR 1–4)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StagedLayout:
+    """Device-resident staging of one partitioned dataset.
+
+    tiles       : (T, cap, 4) member MBRs, sentinel-padded (all copies)
+    ids         : (T, cap) int32 member ids, -1 in padding slots
+    canon_tiles : (T, cap, 4) canonical copies only (others sentineled)
+    tile_boxes  : (T, 4) partition regions (sentinel for invalid rows)
+    probe_boxes : (T, 4) tight MBR over each tile's *canonical* member
+                  MBRs (sentinel where a tile holds none) — the box set
+                  the pruned executor routes on; covers every canonical
+                  hit on all six layouts
+    chunk_boxes : (T, C, 4) the **local index** (``None`` when staged
+                  with ``local_index="off"``): slots are sorted
+                  canonical-first by the configured key (ascending xmin
+                  or Hilbert), and chunk c's box bounds the canonical
+                  members in slots [c·128, (c+1)·128) — sentinel where
+                  a chunk holds none, so the ``*_skip`` probe kernels
+                  skip it outright
+    uni         : (4,) dataset universe
+    """
+
+    tiles: jax.Array
+    ids: jax.Array
+    canon_tiles: jax.Array
+    tile_boxes: jax.Array
+    probe_boxes: jax.Array
+    chunk_boxes: jax.Array | None
+    uni: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    StagedLayout,
+    data_fields=("tiles", "ids", "canon_tiles", "tile_boxes",
+                 "probe_boxes", "chunk_boxes", "uni"),
+    meta_fields=())
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedLayout:
+    """Owner-sharded staging: per-device tile shards + the routing maps.
+
+    canon_shards : (D, T_local, cap, 4) canonical member MBRs, one tile
+                   shard per device (sentinel-padded rows past a
+                   device's tile count) — device-sharded when a mesh is
+                   given, so per-device memory is O(total/D)
+    id_shards    : (D, T_local, cap) int32 member ids (-1 padding)
+    chunk_shards : (D, T_local, C, 4) per-shard local index (chunk
+                   boxes in owner-local tile rows; None when staged
+                   with ``local_index="off"``)
+    probe_boxes  : (T, 4) *global* canonical probe boxes — routing is a
+                   host-side O(Q·T) scan, so the (small) index stays
+                   replicated while the (large) member data shards
+    chunk_boxes  : (T, C, 4) *global* chunk boxes (None when unindexed)
+                   — like the probe boxes, a small replicated index;
+                   used for host-side skip-rate reporting
+    uni          : (4,) dataset universe
+    owner        : (T,) int32 host map, global tile -> owner device
+    local        : (T,) int32 host map, global tile -> row in the
+                   owner's shard
+    """
+
+    canon_shards: jax.Array
+    id_shards: jax.Array
+    chunk_shards: jax.Array | None
+    probe_boxes: jax.Array
+    chunk_boxes: jax.Array | None
+    uni: jax.Array
+    owner: np.ndarray
+    local: np.ndarray
+
+
+# --------------------------------------------------------------------------
+# staging (stage once; the append path shares membership + marking rules)
+# --------------------------------------------------------------------------
+
+def membership(parts: api.Partitioning, mbrs: jax.Array) -> jax.Array:
+    """(N, kmax) bool MASJ membership with nearest-tile adoption.
+
+    Geometric membership is box intersection against every valid
+    partition region (the paper's multi-assignment).  An object
+    intersecting *no* region — possible for appends on the
+    non-covering hc/str layouts — is adopted by the nearest valid tile
+    (squared box-to-box distance, ties to the lowest tile index via
+    ``argmin``), so staging is total: every object always holds at
+    least one (hence exactly one canonical) slot.  For objects the
+    regions do cover, adoption never fires and membership equals plain
+    MASJ assignment.
+    """
+    b = parts.boxes
+    hit = geometry.intersect_matrix(mbrs, b) & parts.valid[None, :]
+    none = ~jnp.any(hit, axis=1)
+    if not bool(none.any()):       # host-called, eager: the covering /
+        return hit                 # in-universe common case pays nothing
+    dx = jnp.maximum(jnp.maximum(b[None, :, 0] - mbrs[:, None, 2],
+                                 mbrs[:, None, 0] - b[None, :, 2]), 0.0)
+    dy = jnp.maximum(jnp.maximum(b[None, :, 1] - mbrs[:, None, 3],
+                                 mbrs[:, None, 1] - b[None, :, 3]), 0.0)
+    d2 = jnp.where(parts.valid[None, :], dx * dx + dy * dy, jnp.inf)
+    nearest = jnp.argmin(d2, axis=1)
+    adopt = none[:, None] & (jnp.arange(parts.kmax)[None, :]
+                             == nearest[:, None])
+    return hit | adopt
+
+
+def _chunk_summary(canon_tiles: jax.Array, chunk: int) -> jax.Array:
+    """(T, cap, 4) canonical tiles -> (T, ceil(cap/128), 4) chunk boxes
+    at ``chunk``-slot granularity.
+
+    Boxes are computed per ``chunk``-member slot group (the tight MBR
+    over its canonical member MBRs; sentinel slots are min/max-neutral
+    and an all-sentinel group collapses to the sentinel box) and then
+    broadcast down to the kernels' native 128-slot grid — a ``chunk``
+    of 256 stores each box twice, trading skip precision for summary
+    size without touching the kernels.
+    """
+    t, cap, _ = canon_tiles.shape
+    g = -(-cap // chunk)
+    pad = g * chunk - cap
+    if pad:
+        canon_tiles = jnp.concatenate(
+            [canon_tiles,
+             jnp.broadcast_to(jnp.asarray(_SENTINEL), (t, pad, 4))], axis=1)
+    grp = canon_tiles.reshape(t, g, chunk, 4)
+    boxes = jnp.concatenate(
+        [jnp.min(grp[..., :2], axis=2), jnp.max(grp[..., 2:], axis=2)],
+        axis=-1)
+    c128 = -(-cap // rops.CHUNK)
+    return jnp.repeat(boxes, chunk // rops.CHUNK, axis=1)[:, :c128]
+
+
+def _local_sort_order(canon_tiles: jax.Array, ids: jax.Array, mode: str,
+                      uni: jax.Array) -> jax.Array:
+    """Per-tile slot permutation for the local index.
+
+    ``"x"``: stable argsort on canonical xmin — non-canonical copies
+    and padding carry the sentinel 9e9 and sink to the tail in their
+    original (live-before-padding) order.  ``"hilbert"``: canonical
+    slots lead in ascending Hilbert key of their MBR centre
+    (``kernels.hilbert`` over the dataset universe), with a three-tier
+    primary key (canonical < non-canonical live < padding) so live
+    slots stay a prefix — the invariant the append path's free-slot
+    tracking relies on.
+    """
+    if mode == "x":
+        return jnp.argsort(canon_tiles[..., 0], axis=1, stable=True)
+    t, cap, _ = canon_tiles.shape
+    canon = canon_tiles[..., 0] < 1e9
+    centers = (canon_tiles[..., :2] + canon_tiles[..., 2:]) * 0.5
+    keys = hilbert_ops.hilbert_keys(centers.reshape(-1, 2),
+                                    uni).reshape(t, cap)
+    tier = jnp.where(canon, 0, jnp.where(ids >= 0, 1, 2)).astype(jnp.int32)
+    o1 = jnp.argsort(keys, axis=1, stable=True)
+    o2 = jnp.argsort(jnp.take_along_axis(tier, o1, axis=1), axis=1,
+                     stable=True)
+    return jnp.take_along_axis(o1, o2, axis=1)
+
+
+def stage_tiles(parts: api.Partitioning, mbrs: jax.Array,
+                config: ServeConfig | None = None
+                ) -> tuple[StagedLayout, dict]:
+    """MASJ-stage ``mbrs`` under ``parts`` per ``config``.
+
+    mbrs: (N, 4) f32 -> ``(StagedLayout, stats)``; raises on capacity
+    overflow (never silently drops members).  ``stats['replication']``
+    is the paper's λ.  ``config.capacity=None`` sizes capacity from the
+    staged data's max tile count plus ``config.slack`` reserved append
+    slots, 128-aligned; an explicit capacity is used as given (its
+    headroom over the max count *is* the slack).
+
+    ``config.local_index`` other than ``"off"`` builds the intra-tile
+    local index: each tile's slots are permuted canonical-first by the
+    configured sort key (``_local_sort_order``) and a per-128-slot
+    chunk-box summary at ``config.chunk`` granularity is carried in
+    ``chunk_boxes`` for the chunk-skipping probe kernels.  The
+    permutation is applied to ``tiles``/``ids``/``canon_tiles``
+    consistently, so canonical marking — and therefore every query
+    answer — is unchanged; ``local_index="off"`` staging is the
+    unindexed oracle.
+    """
+    config = config or ServeConfig()
+    n = mbrs.shape[0]
+    hit = membership(parts, mbrs)
+    counts = jnp.sum(hit, axis=0, dtype=jnp.int32)
+    if config.capacity is None:
+        capacity = round_up(max(int(jnp.max(counts)) + config.slack, 1), 128)
+    else:
+        capacity = config.capacity
+    members, mask, overflow = assign.assign_from_hit(hit, capacity)
+    if int(jnp.sum(overflow)) > 0:
+        over = np.asarray(counts) - capacity
+        raise ValueError(
+            f"staging overflow: capacity {capacity} < max tile count "
+            f"{int(jnp.max(counts))} ({int((over > 0).sum())} of "
+            f"{int(parts.k())} tiles overflow, worst by "
+            f"{int(over.max())} members — raise capacity or payload)")
+
+    sentinel = jnp.asarray(_SENTINEL)
+    tiles = jnp.where(mask[..., None], mbrs[members], sentinel)
+    ids = jnp.where(mask, members, -1).astype(jnp.int32)
+
+    # canonical mark: first copy of each id in tile-major order wins,
+    # so every object has exactly one canonical slot
+    flat = ids.reshape(-1)
+    order = jnp.argsort(flat, stable=True)
+    s = flat[order]
+    first = jnp.concatenate([jnp.ones((1,), bool), s[1:] != s[:-1]])
+    canon = jnp.zeros_like(flat, bool).at[order].set(first & (s >= 0))
+    canon = canon.reshape(ids.shape)
+    canon_tiles = jnp.where(canon[..., None], tiles, sentinel)
+
+    uni = geometry.universe(mbrs)
+    chunk_boxes = None
+    if config.indexed:
+        slot_order = _local_sort_order(canon_tiles, ids, config.local_index,
+                                       uni)
+
+        def permute(a):
+            idx = slot_order if a.ndim == 2 else slot_order[..., None]
+            return jnp.take_along_axis(a, jnp.broadcast_to(idx, a.shape),
+                                       axis=1)
+
+        tiles, ids, canon_tiles = (permute(tiles), permute(ids),
+                                   permute(canon_tiles))
+        chunk_boxes = _chunk_summary(canon_tiles, config.chunk)
+
+    # canonical probe boxes: sentinel slots are min/max-neutral, and an
+    # all-sentinel tile collapses back to the sentinel box
+    probe_boxes = jnp.concatenate(
+        [jnp.min(canon_tiles[..., :2], axis=1),
+         jnp.max(canon_tiles[..., 2:], axis=1)], axis=-1)
+
+    tile_boxes = jnp.where(parts.valid[:, None], parts.boxes, sentinel)
+    layout = StagedLayout(tiles=tiles, ids=ids, canon_tiles=canon_tiles,
+                          tile_boxes=tile_boxes, probe_boxes=probe_boxes,
+                          chunk_boxes=chunk_boxes, uni=uni)
+    stats = dict(
+        n=n, t=int(parts.k()), cap=capacity,
+        # tiles holding >= 1 canonical member: the widest candidate list
+        # the pruned executor can ever need (<= t, since padding rows and
+        # canonically-empty tiles probe as sentinel)
+        t_live=int(jnp.sum(probe_boxes[:, 0] <= probe_boxes[:, 2])),
+        chunks=0 if chunk_boxes is None else int(chunk_boxes.shape[1]),
+        replication=float(jnp.sum(counts)) / n - 1.0,
+        local_index=config.local_index, chunk=config.chunk,
+        slack=config.slack,
+    )
+    return layout, stats
+
+
+def _scatter_shards(canon_np: np.ndarray, ids_np: np.ndarray,
+                    chunk_np: np.ndarray | None, owner: np.ndarray,
+                    local: np.ndarray, t_local: int, d: int,
+                    mesh: Mesh | None, axis: str):
+    """Host scatter of the global staging into (D, T_local, ...) shard
+    arrays, device_put-sharded over ``axis`` when a mesh is given (no
+    transient full-size single-device copy — peak per-device memory
+    stays O(total/D))."""
+    cap = ids_np.shape[1]
+    canon_sh = np.broadcast_to(_SENTINEL, (d, t_local, cap, 4)).copy()
+    ids_sh = np.full((d, t_local, cap), -1, np.int32)
+    canon_sh[owner, local] = canon_np
+    ids_sh[owner, local] = ids_np
+    cb_sh = None
+    if chunk_np is not None:
+        c = chunk_np.shape[1]
+        cb_sh = np.broadcast_to(_SENTINEL, (d, t_local, c, 4)).copy()
+        cb_sh[owner, local] = chunk_np
+    if mesh is not None:
+        sharding = NamedSharding(mesh, P(axis))
+        return (jax.device_put(canon_sh, sharding),
+                jax.device_put(ids_sh, sharding),
+                None if cb_sh is None else jax.device_put(cb_sh, sharding))
+    return (jnp.asarray(canon_sh), jnp.asarray(ids_sh),
+            None if cb_sh is None else jnp.asarray(cb_sh))
+
+
+def shard_staged(layout: StagedLayout, stats: dict, n_shards: int,
+                 mesh: Mesh | None = None, axis: str = "d",
+                 prev_owner: np.ndarray | None = None
+                 ) -> tuple[ShardedLayout, tuple, dict]:
+    """Shard a staged layout's tiles across ``n_shards`` owner devices.
+
+    Placement is cost-balanced capped LPT on per-tile member counts
+    (``core.placement.shard_tiles``): probe cost spreads like the
+    member mass while no device holds more than ``ceil(T/D)`` tiles, so
+    per-device shard memory is at most one tile over an even split.
+    ``prev_owner`` (a streaming re-balance) adds the moved-tile count
+    to the stats.
+
+    Returns ``(ShardedLayout, (canon_np, ids_np), stats)`` — the numpy
+    pair is the host-side copy of the *unsharded* canonical staging,
+    kept off-device for the ``probe="dense"`` oracle path.
+    """
+    canon_np = np.asarray(layout.canon_tiles)
+    ids_np = np.asarray(layout.ids)
+    chunk_np = (None if layout.chunk_boxes is None
+                else np.asarray(layout.chunk_boxes))
+    d = max(1, int(n_shards))
+    member_counts = (ids_np >= 0).sum(axis=1).astype(np.float64)
+    owner, local, t_local, pstats = placement.shard_tiles(
+        member_counts, d, prev_owner=prev_owner)
+    canon_shards, id_shards, chunk_shards = _scatter_shards(
+        canon_np, ids_np, chunk_np, owner, local, t_local, d, mesh, axis)
+    slayout = ShardedLayout(canon_shards=canon_shards, id_shards=id_shards,
+                            chunk_shards=chunk_shards,
+                            probe_boxes=layout.probe_boxes,
+                            chunk_boxes=layout.chunk_boxes, uni=layout.uni,
+                            owner=owner, local=local)
+    stats = dict(stats, shards=d, t_local=t_local,
+                 shard_bytes=(canon_shards.nbytes + id_shards.nbytes) // d,
+                 placement_skew=pstats["skew"])
+    if "moved" in pstats:
+        stats["moved_tiles"] = pstats["moved"]
+    return slayout, (canon_np, ids_np), stats
+
+
+# --------------------------------------------------------------------------
+# query packing (host): fan-out-weighted LPT onto devices
+# --------------------------------------------------------------------------
+
+def pack_queries(costs: np.ndarray, n_devices: int
+                 ) -> tuple[np.ndarray, dict]:
+    """LPT-pack queries onto devices by per-query cost.
+
+    costs: (Q,) — routed fan-out on the pruned path, so hotspot queries
+    spread across devices instead of serialising one of them.  Returns
+    ``(slots[D, Qpd] int32 query indices, stats)``; -1 slots are
+    padding.  Qpd is the max per-device group size, so one straggler
+    hotspot group bounds the step — exactly what LPT minimises.
+
+    A degenerate all-zero cost vector falls back to uniform costs (LPT
+    with equal weights round-robins), so queries still spread across
+    devices instead of piling onto device 0.
+    """
+    d = max(1, n_devices)
+    costs = costs.astype(np.float64)
+    if costs.size and not np.any(costs > 0):
+        costs = np.ones_like(costs)
+    dev, makespan, mean_load = placement.lpt_pack(costs, d)
+    groups = [np.flatnonzero(dev == i) for i in range(d)]
+    qpd = max(1, max(len(g) for g in groups))
+    slots = np.full((d, qpd), -1, np.int32)
+    for i, g in enumerate(groups):
+        slots[i, :len(g)] = g
+    stats = dict(makespan=makespan, mean_load=mean_load,
+                 skew=makespan / max(mean_load, 1e-9), qpd=qpd)
+    return slots, stats
+
+
+def _pack_rows(arr: np.ndarray, slots: np.ndarray, pad) -> np.ndarray:
+    """Scatter per-query rows into the packed (D, Qpd, ...) slot grid,
+    filling -1 slots with ``pad`` (the single definition shared by the
+    replicated and sharded executors)."""
+    a = np.asarray(arr)
+    pad = np.asarray(pad, a.dtype)
+    out = np.broadcast_to(pad, slots.shape + pad.shape).copy()
+    live = slots >= 0
+    out[live] = a[slots[live]]
+    return out
+
+
+def _unpack_rows(x, slots: np.ndarray, n_queries: int) -> np.ndarray:
+    """Invert ``_pack_rows``: (D, Qpd, ...) step output -> per-query
+    rows in original batch order.  (Steps that emit a flat
+    (D·Qpd, ...) leading axis reshape before calling.)"""
+    x = np.asarray(x)
+    x = x.reshape((slots.size,) + x.shape[2:])
+    live = slots >= 0
+    res = np.zeros((n_queries,) + x.shape[1:], x.dtype)
+    res[slots[live]] = x[live.ravel()]
+    return res
+
+
+def _knn_cost_proxy(uni_np: np.ndarray, n: int, dist, k: int) -> np.ndarray:
+    """LPT packing weight for a kNN batch: tiles the first deepening box
+    would touch (matches the radius the kernel actually starts from —
+    density over the ``n`` live canonical members, not the padded slot
+    count)."""
+    diag = float(np.linalg.norm(uni_np[2:] - uni_np[:2]))
+    r0 = float(knn_mod.initial_radius(jnp.float32(diag), k, n))
+    return (1.0 + np.sum(np.asarray(dist) <= r0, axis=1)
+            ).astype(np.float64)
+
+
+# --------------------------------------------------------------------------
+# the protocol
+# --------------------------------------------------------------------------
+
+@runtime_checkable
+class TileLayout(Protocol):
+    """What ``SpatialServer`` serves against — one contract, two
+    placements.
+
+    ``mode`` names the routed executor in answer stats (``"pruned"``
+    replicated, ``"sharded"`` owner-routed).  The routed executors take
+    the server's already-routed ``(Q, F)`` candidate lists + LPT cost
+    vector; ``knn_attempt`` routes its own MINDIST frontier at width
+    ``f`` (one rung of the server's widen-and-retry ladder) and returns
+    the excluded distance the exactness check needs.  The ``dense_*``
+    trio is the all-tile oracle.  ``append`` is the streaming
+    lifecycle: insert into slack, refresh probe/chunk boxes, re-stage
+    (re-balancing owners under sharding) on tile overflow — mutating
+    ``stats`` in place (``SpatialServer`` shares the dict).
+    """
+
+    parts: api.Partitioning
+    config: ServeConfig
+    stats: dict
+    mode: str
+    shards: int
+
+    @property
+    def probe_boxes(self) -> jax.Array: ...
+
+    @property
+    def chunk_boxes(self) -> jax.Array | None: ...
+
+    @property
+    def uni(self) -> jax.Array: ...
+
+    def resident_tile_bytes(self) -> int: ...
+
+    def append(self, mbrs) -> dict: ...
+
+    def range_counts(self, qboxes, cand, costs): ...
+
+    def range_ids(self, qboxes, cand, costs, max_hits: int): ...
+
+    def knn_attempt(self, pts, k: int, max_cand: int, f: int): ...
+
+    def dense_range_counts(self, qboxes): ...
+
+    def dense_range_ids(self, qboxes, max_hits: int): ...
+
+    def dense_knn(self, pts, k: int, max_cand: int): ...
+
+
+class _TilesBase:
+    """Shared staging mirrors + the streaming append lifecycle.
+
+    Subclasses implement ``_install(layout)`` (full install: build the
+    device-resident arrays from a fresh ``StagedLayout``) and
+    ``_install_incremental()`` (refresh device arrays from the mutated
+    host mirrors after a slack insert — same shapes, no re-trace).
+    """
+
+    mode = "base"
+    shards = 1
+
+    def __init__(self, parts: api.Partitioning, mbrs: jax.Array,
+                 config: ServeConfig, mesh: Mesh | None):
+        self.parts = parts
+        self.config = config
+        self.mesh = mesh
+        self.axis = config.axis
+        self.n_devices = (int(mesh.shape[config.axis])
+                          if mesh is not None else 1)
+        self._steps: dict = {}
+        # accumulated dataset = staged base + pending append batches;
+        # concatenated lazily at re-stage so appends stay O(M) per call
+        self._base_np = np.asarray(mbrs, np.float32).reshape(-1, 4)
+        self._pending: list[np.ndarray] = []
+        layout, stats = stage_tiles(parts, mbrs, config)
+        self.stats = dict(stats, placement=config.placement,
+                          probe=config.probe, restages=0)
+        self._mirror(layout)
+        self._install(layout)
+
+    # -- host mirrors (the append path's source of truth) ---------------
+
+    _keep_full_tiles = True              # sharded staging drops them
+
+    def _mirror(self, layout: StagedLayout) -> None:
+        # np.array (not asarray): jax buffers surface as read-only
+        # views, and the append path mutates these in place
+        self._canon_np = np.array(layout.canon_tiles)
+        self._ids_np = np.array(layout.ids)
+        self._tiles_np = (np.array(layout.tiles)
+                          if self._keep_full_tiles else None)
+        self._tb_np = np.array(layout.tile_boxes)
+        self._probe_np = np.array(layout.probe_boxes)
+        self._chunk_np = (None if layout.chunk_boxes is None
+                          else np.array(layout.chunk_boxes))
+        self._uni_np = np.array(layout.uni)
+        self._fill = (self._ids_np >= 0).sum(axis=1).astype(np.int64)
+        # the slack a re-stage must re-reserve: the configured value, or
+        # the headroom an explicit capacity carried (its excess over the
+        # hottest tile IS the user's slack policy — a re-stage must not
+        # collapse it to minimal auto-sizing and then thrash)
+        self._eff_slack = max(self.config.slack,
+                              int(self.stats["cap"] - self._fill.max()))
+
+    # -- streaming lifecycle --------------------------------------------
+
+    def append(self, mbrs) -> dict:
+        """Insert new objects into the staged layout (see module doc).
+
+        mbrs: (M, 4) f32 new object MBRs; ids continue the running
+        numbering (the first appended object is id ``n``).  Returns an
+        append report: ``appended``, ``restaged`` (a tile overflowed
+        and the layout was rebuilt at a grown capacity), the new ``n``
+        and ``cap``, and ``free_slots_min`` (the tightest tile's
+        remaining slack).  Mutates ``stats`` in place.
+        """
+        new = np.asarray(mbrs, np.float32).reshape(-1, 4)
+        m = new.shape[0]
+        if m == 0:
+            return dict(appended=0, restaged=False, n=self.stats["n"],
+                        cap=self.stats["cap"],
+                        free_slots_min=int(self.stats["cap"]
+                                           - self._fill.max()))
+        start_n = self.stats["n"]
+        hit = np.asarray(membership(self.parts, jnp.asarray(new)))
+        self._pending.append(new)
+        need = self._fill + hit.sum(axis=0)
+        restaged = bool(need.max() > self.stats["cap"])
+        if restaged:
+            over = int((need > self.stats["cap"]).sum())
+            log.info("append overflow: %d tile(s) past capacity %d — "
+                     "re-staging %d objects", over, self.stats["cap"],
+                     start_n + m)
+            self._restage()
+        else:
+            self._insert(new, hit, start_n)
+            self._install_incremental()
+        self.stats["n"] = start_n + m
+        self.stats["t_live"] = int(
+            (self._probe_np[:, 0] <= self._probe_np[:, 2]).sum())
+        self.stats["replication"] = (float(self._fill.sum())
+                                     / self.stats["n"] - 1.0)
+        return dict(appended=m, restaged=restaged, n=self.stats["n"],
+                    cap=self.stats["cap"],
+                    free_slots_min=int(self.stats["cap"]
+                                       - self._fill.max()))
+
+    def _insert(self, new: np.ndarray, hit: np.ndarray,
+                start_n: int) -> None:
+        """Slack-slot insert (host mirrors): each new object lands in
+        every member tile's next free slot — live slots stay a prefix
+        (a staging invariant of every sort mode) — with its canonical
+        copy in the lowest member tile, matching ``stage_tiles``'s
+        tile-major first-copy rule so a later re-stage reproduces the
+        same canonical assignment.  Probe and chunk boxes union the new
+        canonical MBRs (sentinel boxes are min/max-neutral), so routing
+        and chunk skipping stay exact without a re-sort.
+
+        Fully vectorised: slot targets are a per-tile rank cumsum over
+        the hit matrix offset by the current fill (the same rank trick
+        as ``assign_from_hit``), and the box unions are ``ufunc.at``
+        scatter-reductions — a bulk append costs numpy passes, not
+        M·(1+λ) interpreter iterations.
+        """
+        rank = np.cumsum(hit, axis=0) - 1                   # (M, T)
+        oi, ti = np.nonzero(hit)                            # row-major:
+        s = (self._fill[ti] + rank[oi, ti]).astype(np.int64)  # oi sorted
+        self._ids_np[ti, s] = start_n + oi
+        if self._tiles_np is not None:
+            self._tiles_np[ti, s] = new[oi]
+        first = np.r_[True, oi[1:] != oi[:-1]]     # lowest member tile
+        self._canon_np[ti, s] = np.where(first[:, None], new[oi],
+                                         _SENTINEL[None, :])
+        tc, sc, boxes = ti[first], s[first], new[oi[first]]
+        np.minimum.at(self._probe_np[:, 0], tc, boxes[:, 0])
+        np.minimum.at(self._probe_np[:, 1], tc, boxes[:, 1])
+        np.maximum.at(self._probe_np[:, 2], tc, boxes[:, 2])
+        np.maximum.at(self._probe_np[:, 3], tc, boxes[:, 3])
+        if self._chunk_np is not None:
+            cc = sc // rops.CHUNK
+            np.minimum.at(self._chunk_np[:, :, 0], (tc, cc), boxes[:, 0])
+            np.minimum.at(self._chunk_np[:, :, 1], (tc, cc), boxes[:, 1])
+            np.maximum.at(self._chunk_np[:, :, 2], (tc, cc), boxes[:, 2])
+            np.maximum.at(self._chunk_np[:, :, 3], (tc, cc), boxes[:, 3])
+        self._fill += hit.sum(axis=0)
+        self._uni_np = np.concatenate(
+            [np.minimum(self._uni_np[:2], new[:, :2].min(axis=0)),
+             np.maximum(self._uni_np[2:], new[:, 2:].max(axis=0))]
+        ).astype(np.float32)
+
+    def _restage(self) -> None:
+        """Rebuild the staging from the accumulated dataset at a grown
+        capacity (``capacity=None`` re-sizes from the new max tile
+        count + slack), refresh mirrors and device arrays, and bump the
+        step generation so no cached executor can serve stale shapes.
+        Subclass ``_install`` re-balances owners under sharding."""
+        self._base_np = np.concatenate([self._base_np, *self._pending],
+                                       axis=0)
+        self._pending = []
+        layout, stats = stage_tiles(
+            self.parts, jnp.asarray(self._base_np),
+            self.config.replace(capacity=None, slack=self._eff_slack))
+        for key in ("n", "t", "cap", "t_live", "chunks", "replication"):
+            self.stats[key] = stats[key]
+        self.stats["restages"] += 1
+        self._steps.clear()     # shapes changed: no stale executor survives
+        self._mirror(layout)
+        self._install(layout)
+
+    # -- shared accessors ------------------------------------------------
+
+    @property
+    def uni(self) -> jax.Array:
+        return jnp.asarray(self._uni_np)
+
+# --------------------------------------------------------------------------
+# replicated placement
+# --------------------------------------------------------------------------
+
+class ReplicatedTiles(_TilesBase):
+    """Full staging on every device; only queries shard.
+
+    The routed executors are the gathered ``query.range`` /
+    ``query.knn`` paths; with a mesh each batch runs as one
+    query-sharded ``shard_map`` step.  Staging arrays are passed to the
+    step as *replicated arguments* (``P()`` specs) rather than closure
+    captures, so streaming appends refresh the served data without
+    invalidating compiled steps — shapes are unchanged until a
+    re-stage, which bumps the step generation.
+    """
+
+    mode = "pruned"
+    shards = 1
+
+    def _install(self, layout: StagedLayout) -> None:
+        # under a mesh, place the staging replicated ONCE per install:
+        # the arrays then enter every step as already-resident P()
+        # inputs instead of re-broadcasting O(T·cap) bytes per batch
+        if self.mesh is not None:
+            rep = NamedSharding(self.mesh, P())
+            layout = jax.tree.map(lambda a: jax.device_put(a, rep), layout)
+        self.staged = layout
+
+    def _install_incremental(self) -> None:
+        self._install(StagedLayout(
+            tiles=jnp.asarray(self._tiles_np),
+            ids=jnp.asarray(self._ids_np),
+            canon_tiles=jnp.asarray(self._canon_np),
+            tile_boxes=jnp.asarray(self._tb_np),
+            probe_boxes=jnp.asarray(self._probe_np),
+            chunk_boxes=(None if self._chunk_np is None
+                         else jnp.asarray(self._chunk_np)),
+            uni=jnp.asarray(self._uni_np)))
+
+    # -- accessors -------------------------------------------------------
+
+    @property
+    def probe_boxes(self) -> jax.Array:
+        return self.staged.probe_boxes
+
+    @property
+    def chunk_boxes(self) -> jax.Array | None:
+        return self.staged.chunk_boxes
+
+    def resident_tile_bytes(self) -> int:
+        lay = self.staged
+        return int(lay.tiles.nbytes + lay.canon_tiles.nbytes
+                   + lay.ids.nbytes)
+
+    # -- SPMD plumbing ---------------------------------------------------
+
+    def _call(self, key: tuple, fn, qarrays: tuple, costs: np.ndarray,
+              pads: tuple, consts: tuple = ()):
+        """Run ``fn(*per_query_arrays, *consts) -> pytree``
+        query-sharded.
+
+        Every array in ``qarrays`` is leading-axis (Q, ...); ``pads``
+        gives the matching padding element for the slots LPT leaves
+        empty; ``consts`` (the staging arrays) replicate to every
+        device as step arguments.  The jitted step is cached under
+        ``key``, which must carry every non-array static baked into
+        ``fn``'s code (shapes re-trace via jit on their own; re-stages
+        clear the cache).
+        """
+        if self.mesh is None:
+            return fn(*qarrays, *consts), dict(skew=1.0)
+        slots, pstats = pack_queries(costs, self.n_devices)
+        packed = [_pack_rows(a, slots, p) for a, p in zip(qarrays, pads)]
+        nq = len(qarrays)
+        step = self._steps.get(key)
+        if step is None:
+            spec = P(self.axis)
+
+            def spmd(*args):
+                return fn(*(x[0] for x in args[:nq]), *args[nq:])
+
+            step = jax.jit(shard_map(
+                spmd, mesh=self.mesh,
+                in_specs=(spec,) * nq + (P(),) * len(consts),
+                out_specs=spec, check_vma=False))
+            self._steps[key] = step
+
+        sharding = NamedSharding(self.mesh, P(self.axis))
+        out = step(*(jax.device_put(jnp.asarray(p), sharding)
+                     for p in packed), *consts)
+        n_q = qarrays[0].shape[0]
+        # step outputs concatenate per-device (Qpd, ...) blocks into a
+        # flat (D·Qpd, ...) leading axis; restore the (D, Qpd) grid
+        return jax.tree.map(
+            lambda x: _unpack_rows(
+                np.asarray(x).reshape(slots.shape + np.asarray(x).shape[1:]),
+                slots, n_q),
+            out), pstats
+
+    # -- routed executors ------------------------------------------------
+
+    def range_counts(self, qboxes, cand, costs):
+        lay = self.staged
+        cb = lay.chunk_boxes
+        f = cand.shape[1]
+        consts = (lay.canon_tiles,) + (() if cb is None else (cb,))
+        if cb is None:
+            fn = lambda qs, cd, ct: range_mod.pruned_range_counts(qs, ct, cd)
+        else:
+            fn = lambda qs, cd, ct, cbx: range_mod.pruned_range_counts(
+                qs, ct, cd, chunk_boxes=cbx)
+        counts, pstats = self._call(
+            ("range_counts_pruned", cb is not None), fn,
+            (qboxes, cand), costs,
+            (_SENTINEL, np.full((f,), -1, np.int32)), consts)
+        return jnp.asarray(counts), pstats
+
+    def range_ids(self, qboxes, cand, costs, max_hits: int):
+        lay = self.staged
+        cb = lay.chunk_boxes
+        f = cand.shape[1]
+        consts = (lay.canon_tiles, lay.ids) + (() if cb is None else (cb,))
+        if cb is None:
+            fn = lambda qs, cd, ct, ii: range_mod.pruned_range_ids(
+                qs, ct, ii, cd, max_hits)
+        else:
+            fn = lambda qs, cd, ct, ii, cbx: range_mod.pruned_range_ids(
+                qs, ct, ii, cd, max_hits, chunk_boxes=cbx)
+        (hit_ids, counts, overflow), pstats = self._call(
+            ("range_ids_pruned", max_hits, cb is not None), fn,
+            (qboxes, cand), costs,
+            (_SENTINEL, np.full((f,), -1, np.int32)), consts)
+        return (jnp.asarray(hit_ids), jnp.asarray(counts),
+                jnp.asarray(overflow), pstats)
+
+    def knn_attempt(self, pts, k: int, max_cand: int, f: int):
+        lay = self.staged
+        n_live = self.stats["n"]
+        cb = lay.chunk_boxes
+        pad_pt = np.asarray((self._uni_np[:2] + self._uni_np[2:]) * 0.5)
+        cand, dist, excl = router.candidate_knn(lay.probe_boxes, pts, f)
+        # n_live rides along as a traced scalar, NOT a static baked into
+        # the step: appends change n every batch and must not re-trace
+        consts = (lay.canon_tiles, lay.ids, lay.uni,
+                  jnp.int32(n_live)) + (() if cb is None else (cb,))
+        if cb is None:
+            fn = lambda qs, cd, ex, ct, ii, un, nl: knn_mod.pruned_knn(
+                qs, k, ct, ii, un, cd, ex, max_cand=max_cand,
+                n_live=nl)
+        else:
+            fn = lambda qs, cd, ex, ct, ii, un, nl, cbx: knn_mod.pruned_knn(
+                qs, k, ct, ii, un, cd, ex, max_cand=max_cand,
+                n_live=nl, chunk_boxes=cbx)
+        (nn_ids, nn_d2, radius, overflow, rounds), pstats = self._call(
+            ("knn_pruned", k, max_cand, cb is not None), fn,
+            (pts, cand, excl),
+            _knn_cost_proxy(self._uni_np, n_live, dist, k),
+            (pad_pt, np.full((f,), -1, np.int32), np.float32(np.inf)),
+            consts)
+        pstats = dict(pstats,
+                      rounds=int(np.asarray(rounds).max(initial=0)))
+        return nn_ids, nn_d2, radius, overflow, excl, pstats
+
+    # -- dense oracle ----------------------------------------------------
+
+    def dense_range_counts(self, qboxes):
+        lay = self.staged
+        counts, pstats = self._call(
+            ("range_counts_dense",),
+            lambda qs, ct: range_mod.range_counts(qs, ct),
+            (qboxes,), np.ones(qboxes.shape[0], np.float64),
+            (_SENTINEL,), (lay.canon_tiles,))
+        return jnp.asarray(counts), pstats
+
+    def dense_range_ids(self, qboxes, max_hits: int):
+        lay = self.staged
+        (hit_ids, counts, overflow), pstats = self._call(
+            ("range_ids_dense", max_hits),
+            lambda qs, ct, ii: range_mod.range_ids(qs, ct, ii, max_hits),
+            (qboxes,), np.ones(qboxes.shape[0], np.float64),
+            (_SENTINEL,), (lay.canon_tiles, lay.ids))
+        return (jnp.asarray(hit_ids), jnp.asarray(counts),
+                jnp.asarray(overflow), pstats)
+
+    def dense_knn(self, pts, k: int, max_cand: int):
+        lay = self.staged
+        n_live = self.stats["n"]
+        pad_pt = np.asarray((self._uni_np[:2] + self._uni_np[2:]) * 0.5)
+        (nn_ids, nn_d2, radius, overflow, rounds), pstats = self._call(
+            ("knn_dense", k, max_cand),
+            lambda qs, ct, ii, un, nl: knn_mod.batched_knn(
+                qs, k, ct, ii, un, max_cand=max_cand, n_live=nl),
+            (pts,), np.ones(pts.shape[0], np.float64), (pad_pt,),
+            (lay.canon_tiles, lay.ids, lay.uni, jnp.int32(n_live)))
+        return nn_ids, nn_d2, overflow, dict(
+            rounds=int(np.asarray(rounds).max(initial=0)), **pstats)
+
+
+# --------------------------------------------------------------------------
+# sharded placement (owner-routed all_to_all exchange)
+# --------------------------------------------------------------------------
+
+class ShardedTiles(_TilesBase):
+    """Tiles shard across owner devices; queries travel to them.
+
+    Staging shards via capped-LPT placement (``shard_staged``) and
+    every batch runs the ``serve.exchange`` orchestrations — under a
+    mesh as a real ``all_to_all`` step, in-process as the vmap
+    simulation over ``config.shards`` virtual owners.  The host keeps
+    the full canonical staging as mirrors: the append path mutates
+    them, and the ``probe="dense"`` oracle stages them to one device on
+    first use.  A streaming re-stage re-balances owners on the fresh
+    member counts (``stats['moved_tiles']`` reports the data movement)
+    and re-establishes the ``ceil(T/D)`` per-device memory bound.
+    """
+
+    mode = "sharded"
+    _keep_full_tiles = False
+
+    def __init__(self, parts, mbrs, config: ServeConfig,
+                 mesh: Mesh | None):
+        self.shards = 0        # set in _install, called by the base ctor
+        self._owner = None
+        super().__init__(parts, mbrs, config, mesh)
+
+    def _install(self, layout: StagedLayout) -> None:
+        cfg = self.config
+        if not self.shards:
+            self.shards = (int(cfg.shards) if cfg.shards
+                           else self.n_devices)
+            if self.mesh is not None and self.shards != self.n_devices:
+                raise ValueError(
+                    "sharded serving places exactly one tile shard per "
+                    f"mesh device ({self.n_devices}), got shards="
+                    f"{self.shards}")
+        slayout, _, stats = shard_staged(
+            layout, self.stats, self.shards, mesh=self.mesh,
+            axis=self.axis, prev_owner=self._owner)
+        self.slayout = slayout
+        self._owner = slayout.owner       # prev_owner for the next
+        # re-balance; everything else reads the maps off self.slayout
+        for key in ("shards", "t_local", "shard_bytes", "placement_skew",
+                    "moved_tiles"):
+            if key in stats:
+                self.stats[key] = stats[key]
+        self._oracle_jax = None
+
+    def _install_incremental(self) -> None:
+        """Re-scatter the mutated host mirrors into the existing
+        owner/local placement (slack inserts never move tiles)."""
+        s = self.slayout
+        canon_shards, id_shards, chunk_shards = _scatter_shards(
+            self._canon_np, self._ids_np, self._chunk_np, s.owner,
+            s.local, int(self.stats["t_local"]), self.shards, self.mesh,
+            self.axis)
+        self.slayout = ShardedLayout(
+            canon_shards=canon_shards, id_shards=id_shards,
+            chunk_shards=chunk_shards,
+            probe_boxes=jnp.asarray(self._probe_np),
+            chunk_boxes=(None if self._chunk_np is None
+                         else jnp.asarray(self._chunk_np)),
+            uni=jnp.asarray(self._uni_np), owner=s.owner, local=s.local)
+        self._oracle_jax = None
+
+    # -- accessors -------------------------------------------------------
+
+    @property
+    def probe_boxes(self) -> jax.Array:
+        return self.slayout.probe_boxes
+
+    @property
+    def chunk_boxes(self) -> jax.Array | None:
+        return self.slayout.chunk_boxes
+
+    @property
+    def oracle_np(self) -> tuple[np.ndarray, np.ndarray]:
+        """Host copies of the unsharded canonical staging (the
+        ``probe="dense"`` oracle's input, also the append mirrors)."""
+        return self._canon_np, self._ids_np
+
+    def resident_tile_bytes(self) -> int:
+        s = self.slayout
+        return int(s.canon_shards.nbytes + s.id_shards.nbytes) \
+            // self.shards
+
+    def _oracle(self) -> tuple[jax.Array, jax.Array]:
+        """Dense single-device staging for the ``probe="dense"`` oracle
+        — staged to the default device on first use (debug/validation
+        path; the sharded executors never need it)."""
+        if self._oracle_jax is None:
+            self._oracle_jax = (jnp.asarray(self._canon_np),
+                                jnp.asarray(self._ids_np))
+        return self._oracle_jax
+
+    # -- exchange plumbing -----------------------------------------------
+
+    def _exchange_plan(self, cand, costs: np.ndarray):
+        """Host-side plan for one sharded batch: LPT query packing +
+        owner-local candidate translation (``router.owner_split``)."""
+        slots, pstats = pack_queries(costs, self.shards)
+        send_slot, send_cand, xstats = router.owner_split(
+            np.asarray(cand), slots, self.slayout.owner,
+            self.slayout.local)
+        return slots, send_slot, send_cand, {**pstats, **xstats}
+
+    def _put(self, arr):
+        a = jnp.asarray(arr)
+        if self.mesh is not None:
+            a = jax.device_put(a, NamedSharding(self.mesh, P(self.axis)))
+        return a
+
+    def _exchange_step(self, key: tuple, orch, n_sharded: int,
+                       n_replicated: int = 0, **static):
+        step = self._steps.get(key)
+        if step is None:
+            step = exchange.build_step(orch, self.mesh, self.axis,
+                                       n_sharded, n_replicated, **static)
+            self._steps[key] = step
+        return step
+
+    # -- routed executors ------------------------------------------------
+
+    def range_counts(self, qboxes, cand, costs):
+        slots, ss, sc, xstats = self._exchange_plan(cand, costs)
+        qp = _pack_rows(np.asarray(qboxes, np.float32), slots, _SENTINEL)
+        li = self.config.indexed
+        extra = (self.slayout.chunk_shards,) if li else ()
+        step = self._exchange_step(
+            ("s_range_counts", qp.shape[1], ss.shape[2], sc.shape[3], li),
+            exchange.serve_range_counts, n_sharded=4 + len(extra))
+        out = step(self._put(qp), self._put(ss), self._put(sc),
+                   self.slayout.canon_shards, *extra)
+        counts = _unpack_rows(out, slots, qboxes.shape[0])
+        return jnp.asarray(counts), dict(shards=self.shards, **xstats)
+
+    def range_ids(self, qboxes, cand, costs, max_hits: int):
+        slots, ss, sc, xstats = self._exchange_plan(cand, costs)
+        qp = _pack_rows(np.asarray(qboxes, np.float32), slots, _SENTINEL)
+        cap = int(self.slayout.id_shards.shape[-1])
+        mh_local = min(max_hits, sc.shape[3] * cap)
+        li = self.config.indexed
+        extra = (self.slayout.chunk_shards,) if li else ()
+        step = self._exchange_step(
+            ("s_range_ids", qp.shape[1], ss.shape[2], sc.shape[3],
+             max_hits, mh_local, li),
+            exchange.serve_range_ids, n_sharded=5 + len(extra),
+            max_hits=max_hits, mh_local=mh_local)
+        out = step(self._put(qp), self._put(ss), self._put(sc),
+                   self.slayout.canon_shards, self.slayout.id_shards,
+                   *extra)
+        n_q = qboxes.shape[0]
+        hit_ids, counts, overflow = (
+            _unpack_rows(x, slots, n_q) for x in out)
+        return (jnp.asarray(hit_ids), jnp.asarray(counts),
+                jnp.asarray(overflow), dict(shards=self.shards, **xstats))
+
+    def knn_attempt(self, pts, k: int, max_cand: int, f: int):
+        n_live = self.stats["n"]
+        pad_pt = np.asarray((self._uni_np[:2] + self._uni_np[2:]) * 0.5)
+        n_q = pts.shape[0]
+        li = self.config.indexed
+        cand, dist, excl = router.candidate_knn(
+            self.slayout.probe_boxes, pts, f)
+        slots, ss, sc, xstats = self._exchange_plan(
+            cand, _knn_cost_proxy(self._uni_np, n_live, dist, k))
+        pp = _pack_rows(np.asarray(pts, np.float32), slots, pad_pt)
+        dead = slots < 0
+        orch = exchange.serve_knn if li else exchange.serve_knn_unindexed
+        extra = (self.slayout.chunk_shards,) if li else ()
+        # n_live is a replicated traced scalar, not a static: appends
+        # change n every batch and must not re-trace the exchange step
+        step = self._exchange_step(
+            ("s_knn", k, max_cand, pp.shape[1], ss.shape[2],
+             sc.shape[3], li),
+            orch, n_sharded=6 + len(extra), n_replicated=2,
+            k=k, max_cand=max_cand)
+        out = step(self._put(pp), self._put(ss), self._put(sc),
+                   self._put(dead), self.slayout.canon_shards,
+                   self.slayout.id_shards, *extra, self.slayout.uni,
+                   jnp.int32(n_live))
+        nn_ids, nn_d2, radius, overflow, rounds = (
+            _unpack_rows(x, slots, n_q) for x in out)
+        xstats = dict(xstats, shards=self.shards,
+                      rounds=int(rounds.max(initial=0)))
+        return nn_ids, nn_d2, radius, overflow, excl, xstats
+
+    # -- dense oracle ----------------------------------------------------
+
+    def dense_range_counts(self, qboxes):
+        canon, _ = self._oracle()
+        return range_mod.range_counts(qboxes, canon), {}
+
+    def dense_range_ids(self, qboxes, max_hits: int):
+        canon, ids = self._oracle()
+        hit_ids, counts, overflow = range_mod.range_ids(
+            qboxes, canon, ids, max_hits)
+        return hit_ids, counts, overflow, {}
+
+    def dense_knn(self, pts, k: int, max_cand: int):
+        canon, ids = self._oracle()
+        nn_ids, nn_d2, _, overflow, rounds = knn_mod.batched_knn(
+            pts, k, canon, ids, jnp.asarray(self._uni_np),
+            max_cand=max_cand, n_live=self.stats["n"])
+        return nn_ids, nn_d2, overflow, dict(
+            rounds=int(np.asarray(rounds).max(initial=0)))
+
+
+def build_tiles(parts: api.Partitioning, mbrs: jax.Array,
+                config: ServeConfig, mesh: Mesh | None = None
+                ) -> TileLayout:
+    """Construct the placement ``config`` names (the one place the
+    placement string is dispatched)."""
+    cls = ShardedTiles if config.placement == "sharded" else ReplicatedTiles
+    return cls(parts, mbrs, config, mesh)

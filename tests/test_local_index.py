@@ -1,10 +1,11 @@
 """The intra-tile local index (chunk-skipping probe layer): the staged
 sort is a pure per-tile permutation that preserves canonical marking,
 chunk boxes bound their chunks' canonical members, and range/kNN
-answers with ``local_index=True`` are bit-identical to the unindexed
-oracle staging across ALL SIX layouts on skewed (osm) and uniform (pi)
-data — replicated and sharded (vmap simulation here; the 8-device SPMD
-job runs the mesh test below whenever ≥ 8 devices are visible)."""
+answers with ``local_index="x"`` or ``"hilbert"`` are bit-identical to
+the unindexed (``"off"``) oracle staging across ALL SIX layouts on
+skewed (osm) and uniform (pi) data — replicated and sharded (vmap
+simulation here; the 8-device SPMD job runs the mesh test below
+whenever ≥ 8 devices are visible)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,7 +15,7 @@ from repro.core.partition import api
 from repro.data import spatial_gen
 from repro.kernels.range_probe import ops as rops
 from repro.query import knn as knn_mod, range as range_mod
-from repro.serve import SpatialServer, engine as serve_engine
+from repro.serve import ServeConfig, SpatialServer, stage_tiles
 
 LAYOUTS = ["hc", "str", "fg", "bsp", "slc", "bos"]
 DATASETS = ["osm", "pi"]
@@ -41,8 +42,8 @@ def staged_pairs(data):
     out = {}
     for m in LAYOUTS:
         parts = api.partition(m, mbrs, 120)
-        indexed, _ = serve_engine.stage(parts, mbrs, local_index=True)
-        plain, _ = serve_engine.stage(parts, mbrs, local_index=False)
+        indexed, _ = stage_tiles(parts, mbrs, ServeConfig(local_index="x"))
+        plain, _ = stage_tiles(parts, mbrs, ServeConfig(local_index="off"))
         out[m] = (indexed, plain, parts)
     return out
 
@@ -114,17 +115,19 @@ def test_chunk_boxes_bound_canonical_members(data, staged_pairs, method):
 def servers(data):
     mbrs, _ = data
     return {m: (SpatialServer.from_method(m, mbrs, 120),
-                SpatialServer.from_method(m, mbrs, 120, local_index=False))
+                SpatialServer.from_method(
+                    m, mbrs, 120, ServeConfig(local_index="off")))
             for m in LAYOUTS}
 
 
 @pytest.mark.parametrize("method", LAYOUTS)
 def test_local_index_range_bit_identical_to_oracle(data, servers, method):
-    """local_index=True answers == local_index=False answers == brute
+    """local_index="x" answers == local_index="off" answers == brute
     force, replicated pruned path."""
     _, mbrs_np = data
     srv, osrv = servers[method]
-    assert srv.stats["local_index"] and not osrv.stats["local_index"]
+    assert srv.stats["local_index"] == "x"
+    assert osrv.stats["local_index"] == "off"
     qb = _qboxes(jax.random.PRNGKey(1), NQ)
     ref = range_mod.range_query_ref(mbrs_np, np.asarray(qb))
 
@@ -162,8 +165,9 @@ def test_local_index_sharded_bit_identical(data, method):
     """Sharded serving (vmap-simulated exchange) with chunk shards ==
     the dense oracle == brute force."""
     mbrs, mbrs_np = data
-    srv = SpatialServer.from_method(method, mbrs, 120, sharded=True,
-                                    shards=SHARDS)
+    srv = SpatialServer.from_method(
+        method, mbrs, 120,
+        ServeConfig(placement="sharded", shards=SHARDS))
     assert srv.slayout.chunk_shards is not None
     qb = _qboxes(jax.random.PRNGKey(3), NQ)
     pts = jax.random.uniform(jax.random.PRNGKey(4), (NQ, 2))
@@ -186,7 +190,8 @@ def test_chunk_skip_rate_positive_on_multichunk_layout(data):
     the measured rate is in (0, 1] and 0.0 for unindexed staging."""
     mbrs, _ = data
     srv = SpatialServer.from_method("fg", mbrs, 120)
-    osrv = SpatialServer.from_method("fg", mbrs, 120, local_index=False)
+    osrv = SpatialServer.from_method(
+        "fg", mbrs, 120, ServeConfig(local_index="off"))
     qb = _qboxes(jax.random.PRNGKey(5), NQ, scale=0.03)
     if srv.stats["chunks"] < 2:
         pytest.skip("fixture capacity fits one chunk")
@@ -209,8 +214,9 @@ def test_local_index_spmd_mesh_bit_identical():
     want_ids, _ = knn_mod.knn_ref(np.asarray(mbrs), np.asarray(pts), 5)
     for m in ["bsp", "hc"]:
         for srv in [SpatialServer.from_method(m, mbrs, 150, mesh=mesh),
-                    SpatialServer.from_method(m, mbrs, 150, mesh=mesh,
-                                              sharded=True)]:
+                    SpatialServer.from_method(
+                        m, mbrs, 150,
+                        ServeConfig(placement="sharded"), mesh=mesh)]:
             counts, _ = srv.range_counts(qb)
             assert [int(c) for c in counts] == [len(r) for r in ref], m
             hit_ids, _, ovf, _ = srv.range_ids(qb, max_hits=2048)
@@ -221,3 +227,85 @@ def test_local_index_spmd_mesh_bit_identical():
             nn_ids, _, ovk, _ = srv.knn(pts, 5)
             assert not np.asarray(ovk).any()
             np.testing.assert_array_equal(np.asarray(nn_ids), want_ids)
+
+
+# --------------------------------------------------------------------------
+# Hilbert intra-tile order (local_index="hilbert")
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["bsp", "hc"])
+def test_hilbert_sort_contract_and_bit_identity(data, method):
+    """``local_index="hilbert"``: canonical members lead each tile in
+    ascending Hilbert key of their MBR centre (live slots stay a
+    prefix), chunk boxes still bound their members, and answers are
+    bit-identical to the x-sorted and unindexed stagings."""
+    from repro.kernels.hilbert import ops as hilbert_ops
+    mbrs, mbrs_np = data
+    parts = api.partition(method, mbrs, 120)
+    hil, _ = stage_tiles(parts, mbrs, ServeConfig(local_index="hilbert"))
+    ids = np.asarray(hil.ids)
+    canon = np.asarray(hil.canon_tiles[..., 0]) < 1e9
+    centers = np.asarray((hil.canon_tiles[..., :2]
+                          + hil.canon_tiles[..., 2:]) * 0.5)
+    keys = np.asarray(hilbert_ops.hilbert_keys(
+        jnp.asarray(centers.reshape(-1, 2)), hil.uni)
+    ).reshape(ids.shape)
+    for t in range(ids.shape[0]):
+        kc = canon[t].sum()
+        assert not canon[t][kc:].any()                # canonicals lead
+        assert np.all(np.diff(keys[t][:kc].astype(np.int64)) >= 0)
+        live = (ids[t] >= 0).sum()
+        assert (ids[t][:live] >= 0).all()             # live slots prefix
+    # same chunk-box bounding invariant as the x sort
+    cb = np.asarray(hil.chunk_boxes)
+    ct = np.asarray(hil.canon_tiles)
+    chunk = rops.CHUNK
+    for ti in range(ct.shape[0]):
+        for c in range(cb.shape[1]):
+            sl = slice(c * chunk, min((c + 1) * chunk, ct.shape[1]))
+            boxes = ct[ti, sl][ct[ti, sl, 0] < 1e9]
+            if boxes.size:
+                assert np.all(cb[ti, c, 0] <= boxes[:, 0] + 1e-7)
+                assert np.all(cb[ti, c, 3] >= boxes[:, 3] - 1e-7)
+    # bit-identical serving vs x-sorted and unindexed
+    hsrv = SpatialServer.from_method(
+        method, mbrs, 120, ServeConfig(local_index="hilbert"))
+    xsrv = SpatialServer.from_method(method, mbrs, 120)
+    qb = _qboxes(jax.random.PRNGKey(6), NQ)
+    pts = jax.random.uniform(jax.random.PRNGKey(7), (NQ, 2))
+    hc_, _ = hsrv.range_counts(qb)
+    xc_, _ = xsrv.range_counts(qb)
+    np.testing.assert_array_equal(np.asarray(hc_), np.asarray(xc_))
+    hids, _, hovf, _ = hsrv.range_ids(qb, max_hits=2048)
+    xids, _, _, _ = xsrv.range_ids(qb, max_hits=2048)
+    assert not np.asarray(hovf).any()
+    np.testing.assert_array_equal(np.asarray(hids), np.asarray(xids))
+    hnn, hd2, hko, _ = hsrv.knn(pts, K)
+    wnn, wd2 = knn_mod.knn_ref(mbrs_np, np.asarray(pts), K)
+    assert not np.asarray(hko).any()
+    np.testing.assert_array_equal(np.asarray(hnn), wnn)
+
+
+def test_hilbert_skip_rate_measured(data):
+    """The hilbert staging yields a real (0, 1] chunk-skip rate on a
+    multi-chunk layout — the quantity BENCH_serving.json compares
+    against the x sort."""
+    mbrs, _ = data
+    srv = SpatialServer.from_method(
+        "fg", mbrs, 120, ServeConfig(local_index="hilbert"))
+    if srv.stats["chunks"] < 2:
+        pytest.skip("fixture capacity fits one chunk")
+    qb = _qboxes(jax.random.PRNGKey(8), NQ, scale=0.03)
+    assert 0.0 < srv.chunk_skip_rate(qb) <= 1.0
+
+
+def test_chunk_granularity_256_same_bits(data):
+    """``chunk=256``: coarser chunk boxes are broadcast to the 128-slot
+    kernel grid — looser skips, identical answers."""
+    mbrs, mbrs_np = data
+    srv = SpatialServer.from_method("bsp", mbrs, 120,
+                                    ServeConfig(chunk=256))
+    qb = _qboxes(jax.random.PRNGKey(9), NQ)
+    counts, _ = srv.range_counts(qb)
+    ref = range_mod.range_query_ref(mbrs_np, np.asarray(qb))
+    assert [int(c) for c in counts] == [len(r) for r in ref]

@@ -114,7 +114,7 @@ import jax, jax.numpy as jnp, numpy as np, json
 from jax.sharding import Mesh
 from repro.data import spatial_gen
 from repro.query import knn as kq, range as rq
-from repro.serve import SpatialServer
+from repro.serve import ServeConfig, SpatialServer
 mbrs = spatial_gen.dataset('osm', jax.random.PRNGKey(0), 3000)
 mesh = Mesh(np.array(jax.devices()).reshape(8), ('d',))
 k1, k2 = jax.random.split(jax.random.PRNGKey(1))
@@ -125,7 +125,8 @@ ref = rq.range_query_ref(np.asarray(mbrs), np.asarray(qb))
 want_ids, _ = kq.knn_ref(np.asarray(mbrs), np.asarray(pts), 5)
 res = {}
 for m in ['bsp', 'hc']:
-    srv = SpatialServer.from_method(m, mbrs, 200, mesh=mesh, sharded=True)
+    srv = SpatialServer.from_method(m, mbrs, 200,
+                                    ServeConfig(placement='sharded'), mesh=mesh)
     counts, stats = srv.range_counts(qb)
     hit_ids, _, ovf, _ = srv.range_ids(qb, max_hits=2048)
     d_ids, _, _, _ = srv.range_ids(qb, max_hits=2048, pruned=False)

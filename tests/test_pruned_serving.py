@@ -11,7 +11,7 @@ import pytest
 from repro.core.partition import api
 from repro.data import spatial_gen
 from repro.query import knn as knn_mod, range as range_mod
-from repro.serve import SpatialServer, engine as serve_engine, router
+from repro.serve import SpatialServer, router, stage_tiles
 
 LAYOUTS = ["hc", "str", "fg", "bsp", "slc", "bos"]
 DATASETS = ["osm", "pi"]
@@ -97,7 +97,7 @@ def test_candidate_range_truncation_is_flagged(data):
     """Undersized f_max must flag overflow per query, never silently."""
     mbrs, _ = data
     parts = api.partition("fg", mbrs, 120)
-    layout, _ = serve_engine.stage(parts, mbrs)
+    layout, _ = stage_tiles(parts, mbrs)
     qb = _qboxes(jax.random.PRNGKey(4), 16, scale=0.2)
     full_fan = np.asarray(router.probe_fanout(layout.probe_boxes, qb))
     if full_fan.max() <= 1:
@@ -114,7 +114,7 @@ def test_candidate_knn_frontier_contract(data):
     distance lower-bounds every tile left out."""
     mbrs, _ = data
     parts = api.partition("bsp", mbrs, 120)
-    layout, _ = serve_engine.stage(parts, mbrs)
+    layout, _ = stage_tiles(parts, mbrs)
     pts = jax.random.uniform(jax.random.PRNGKey(5), (10, 2))
     t = layout.probe_boxes.shape[0]
     f = min(4, t)
@@ -136,7 +136,7 @@ def test_probe_boxes_cover_canonical_members(data):
     mbrs, _ = data
     for m in LAYOUTS:
         parts = api.partition(m, mbrs, 120)
-        layout, _ = serve_engine.stage(parts, mbrs)
+        layout, _ = stage_tiles(parts, mbrs)
         ct = np.asarray(layout.canon_tiles)
         pb = np.asarray(layout.probe_boxes)
         live = ct[..., 0] <= ct[..., 2]                  # non-sentinel

@@ -10,7 +10,7 @@ import pytest
 from repro.core.partition import api
 from repro.data import spatial_gen
 from repro.query import knn as knn_mod, range as range_mod
-from repro.serve import engine as serve_engine, router
+from repro.serve import router, stage_tiles
 
 LAYOUTS = ["hc", "str", "fg", "bsp"]
 DATASETS = ["osm", "pi"]
@@ -35,7 +35,7 @@ def staged(data):
     out = {}
     for m in LAYOUTS:
         parts = api.partition(m, mbrs, 150)
-        out[m] = (parts,) + serve_engine.stage(parts, mbrs)
+        out[m] = (parts,) + stage_tiles(parts, mbrs)
     return out
 
 
@@ -119,7 +119,7 @@ def test_knn_tie_break_by_id():
     """Coincident objects: the k reported neighbours are the lowest ids."""
     mbrs = jnp.broadcast_to(jnp.array([0.5, 0.5, 0.6, 0.6]), (8, 4))
     parts = api.partition("fg", mbrs, 4)
-    layout, _ = serve_engine.stage(parts, mbrs)
+    layout, _ = stage_tiles(parts, mbrs)
     pts = jnp.array([[0.1, 0.1]])
     nn_ids, _, _, _, _ = knn_mod.batched_knn(pts, 3, layout.canon_tiles,
                                              layout.ids, layout.uni)
@@ -134,7 +134,7 @@ def test_knn_initial_radius_from_live_count_saves_rounds():
     mbrs = spatial_gen.dataset("osm", jax.random.PRNGKey(0), 400)
     mbrs_np = np.asarray(mbrs)
     parts = api.partition("hc", mbrs, 30)        # small payload, cap
-    layout, stats = serve_engine.stage(parts, mbrs)   # rounds up to 128
+    layout, stats = stage_tiles(parts, mbrs)   # rounds up to 128
     n_slots = stats["t"] * stats["cap"]
     assert n_slots > 4 * stats["n"]              # genuinely padded
     pts = jax.random.uniform(jax.random.PRNGKey(9), (20, 2))

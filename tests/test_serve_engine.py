@@ -8,7 +8,8 @@ from jax.sharding import Mesh
 
 from repro.data import spatial_gen
 from repro.query import knn as knn_mod, range as range_mod
-from repro.serve import SpatialServer, engine as serve_engine
+from repro.serve import (ServeConfig, SpatialServer,
+                         engine as serve_engine, stage_tiles)
 
 
 def _mesh():
@@ -32,7 +33,7 @@ def test_staging_canonical_is_a_partition_of_ids(mbrs):
     """Every object has exactly one canonical slot; ids/masks agree."""
     from repro.core.partition import api
     parts = api.partition("hc", mbrs, 100)   # overlapping, replicated
-    layout, stats = serve_engine.stage(parts, mbrs)
+    layout, stats = stage_tiles(parts, mbrs)
     ids = np.asarray(layout.ids)
     canon = np.asarray(layout.canon_tiles[..., 0] < 1e9)  # non-sentinel
     n = mbrs.shape[0]
@@ -83,7 +84,7 @@ def test_server_rejects_overflowing_capacity(mbrs):
     from repro.core.partition import api
     parts = api.partition("fg", mbrs, 200)
     with pytest.raises(ValueError, match="overflow"):
-        serve_engine.stage(parts, mbrs, capacity=1)
+        stage_tiles(parts, mbrs, ServeConfig(capacity=1))
 
 
 def test_overflow_error_is_actionable(mbrs):
@@ -95,7 +96,7 @@ def test_overflow_error_is_actionable(mbrs):
     max_count = int(np.asarray(counts).max())
     n_over = int((np.asarray(counts) > 1).sum())
     with pytest.raises(ValueError) as ei:
-        serve_engine.stage(parts, mbrs, capacity=1)
+        stage_tiles(parts, mbrs, ServeConfig(capacity=1))
     msg = str(ei.value)
     assert f"max tile count {max_count}" in msg
     assert f"{n_over} of {int(parts.k())} tiles overflow" in msg
@@ -159,3 +160,27 @@ def test_knn_width_cache_starts_from_converged_width(mbrs):
     _, _, _, s2 = srv.knn(pts, 3)
     assert srv.widths.misses == misses_before          # pure cache hit
     assert s2["f_max"] == s1["f_max"] and s2["retries"] == 0
+
+
+def test_from_method_passes_capacity_through(mbrs):
+    """Regression: staging knobs given to ``from_method`` must reach
+    the config path — ``capacity`` used to be silently swallowed."""
+    srv = SpatialServer.from_method("bsp", mbrs, 150,
+                                    ServeConfig(capacity=512))
+    assert srv.stats["cap"] == 512
+    # the deprecated boolean spelling lands in the same place
+    with pytest.deprecated_call():
+        legacy = SpatialServer.from_method("bsp", mbrs, 150, capacity=512)
+    assert legacy.stats["cap"] == 512
+
+
+def test_slack_reserves_free_slots(mbrs):
+    """``ServeConfig.slack`` raises auto-sized capacity so every tile
+    keeps at least that many free append slots."""
+    from repro.core.partition import api
+    parts = api.partition("bsp", mbrs, 150)
+    base, _ = stage_tiles(parts, mbrs)
+    slacked, st = stage_tiles(parts, mbrs, ServeConfig(slack=256))
+    assert st["cap"] >= base.ids.shape[1] + 256 - 127   # 128-aligned
+    fill = (np.asarray(slacked.ids) >= 0).sum(axis=1)
+    assert (st["cap"] - fill).min() >= 256

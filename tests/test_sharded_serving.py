@@ -16,7 +16,8 @@ import pytest
 from repro.core import placement
 from repro.data import spatial_gen
 from repro.query import knn as knn_mod, range as range_mod
-from repro.serve import SpatialServer, engine as serve_engine, router
+from repro.serve import (ServeConfig, SpatialServer,
+                         engine as serve_engine, router)
 
 LAYOUTS = ["hc", "str", "fg", "bsp", "slc", "bos"]
 DATASETS = ["osm", "pi"]
@@ -39,8 +40,9 @@ def data(request):
 @pytest.fixture(scope="module")
 def servers(data):
     mbrs, _ = data
-    return {m: SpatialServer.from_method(m, mbrs, 120, sharded=True,
-                                         shards=SHARDS) for m in LAYOUTS}
+    cfg = ServeConfig(placement="sharded", shards=SHARDS)
+    return {m: SpatialServer.from_method(m, mbrs, 120, cfg)
+            for m in LAYOUTS}
 
 
 @pytest.mark.parametrize("method", LAYOUTS)
@@ -92,8 +94,8 @@ def test_per_device_memory_bound(data):
     claim, asserted, for every layout."""
     mbrs, _ = data
     for m in LAYOUTS:
-        srv = SpatialServer.from_method(m, mbrs, 120, sharded=True,
-                                        shards=5)
+        srv = SpatialServer.from_method(
+            m, mbrs, 120, ServeConfig(placement="sharded", shards=5))
         t, cap = srv.stats["t"], srv.stats["cap"]
         t_local = srv.stats["t_local"]
         assert t_local == -(-t // 5)                    # ceil(T/D)
@@ -115,8 +117,8 @@ def test_owner_split_translation_contract(data):
     whose local tiles map back to exactly the query's candidates owned
     there."""
     mbrs, _ = data
-    srv = SpatialServer.from_method("bsp", mbrs, 120, sharded=True,
-                                    shards=SHARDS)
+    srv = SpatialServer.from_method(
+        "bsp", mbrs, 120, ServeConfig(placement="sharded", shards=SHARDS))
     qb = _qboxes(jax.random.PRNGKey(3), 17, scale=0.1)
     cand, costs, _ = srv._route_batch(qb)
     cand = np.asarray(cand)
@@ -155,8 +157,8 @@ def test_sharded_knn_widen_retry_is_logged_once(data, caplog):
     check, widened exactly once (the doubled width hits the live-tile
     cap), logged once, and still answer exactly."""
     mbrs, mbrs_np = data
-    srv = SpatialServer.from_method("bsp", mbrs, 80, sharded=True,
-                                    shards=3)
+    srv = SpatialServer.from_method(
+        "bsp", mbrs, 80, ServeConfig(placement="sharded", shards=3))
     t_live = srv.stats["t_live"]
     if t_live < 10:
         pytest.skip("fixture layout too small to under-size a frontier")
@@ -208,8 +210,8 @@ def test_sharded_spmd_mesh_bit_identical():
     ref = range_mod.range_query_ref(np.asarray(mbrs), np.asarray(qb))
     want_ids, _ = knn_mod.knn_ref(np.asarray(mbrs), np.asarray(pts), 5)
     for m in ["bsp", "hc"]:
-        srv = SpatialServer.from_method(m, mbrs, 150, mesh=mesh,
-                                        sharded=True)
+        srv = SpatialServer.from_method(
+            m, mbrs, 150, ServeConfig(placement="sharded"), mesh=mesh)
         counts, _ = srv.range_counts(qb)
         assert [int(c) for c in counts] == [len(r) for r in ref]
         hit_ids, _, ovf, _ = srv.range_ids(qb, max_hits=2048)

@@ -1,0 +1,308 @@
+"""The streaming append lifecycle: append-then-query answers are
+bit-identical to re-staging from scratch (and to the brute force) on
+ALL SIX layouts, including sequences that force a tile-overflow
+re-stage; overflow re-stages preserve the staging invariants (one
+canonical slot per object, chunk boxes bound their members) and
+re-establish the sharded ceil(T/D) per-device memory bound via owner
+re-balancing; incremental probe/chunk-box refresh keeps routing exact
+without a re-sort.  ``mesh=None`` here (sharded mode runs the exchange
+in vmap simulation); the 8-device SPMD test runs under the CI
+virtual-device job."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.partition import api
+from repro.data import spatial_gen
+from repro.kernels.range_probe import ops as rops
+from repro.query import knn as knn_mod, range as range_mod
+from repro.serve import ServeConfig, SpatialServer
+
+LAYOUTS = ["hc", "str", "fg", "bsp", "slc", "bos"]
+N, N_BASE, NQ, K = 1500, 1000, 20, 4
+
+
+def _qboxes(key, q, scale=0.06):
+    k1, k2 = jax.random.split(key)
+    c = jax.random.uniform(k1, (q, 2))
+    s = jax.random.uniform(k2, (q, 2)) * scale
+    return jnp.concatenate([c - s, c + s], axis=-1)
+
+
+@pytest.fixture(scope="module", params=["osm", "pi"])
+def data(request):
+    full = spatial_gen.dataset(request.param, jax.random.PRNGKey(0), N)
+    return full, np.asarray(full)
+
+
+def _assert_same_answers(srv, osrv, mbrs_np, qb, pts):
+    """srv (appended-to) and osrv (staged from scratch on the full
+    data) must answer bit-identically, and match the brute force."""
+    ref = range_mod.range_query_ref(mbrs_np, np.asarray(qb))
+    counts, _ = srv.range_counts(qb)
+    ocounts, _ = osrv.range_counts(qb)
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(ocounts))
+    assert [int(c) for c in counts] == [len(r) for r in ref]
+    hid, _, ovf, _ = srv.range_ids(qb, max_hits=2048)
+    ohid, _, oovf, _ = osrv.range_ids(qb, max_hits=2048)
+    assert not np.asarray(ovf).any() and not np.asarray(oovf).any()
+    np.testing.assert_array_equal(np.asarray(hid), np.asarray(ohid))
+    # max_cand sized for the coincident-object bursts the overflow
+    # tests inject (a refinement box can legitimately swallow them all)
+    nn, d2, ovk, _ = srv.knn(pts, K, max_cand=4096)
+    onn, od2, oovk, _ = osrv.knn(pts, K, max_cand=4096)
+    assert not np.asarray(ovk).any()
+    np.testing.assert_array_equal(np.asarray(ovk), np.asarray(oovk))
+    np.testing.assert_array_equal(np.asarray(nn), np.asarray(onn))
+    np.testing.assert_array_equal(np.asarray(d2), np.asarray(od2))
+    want_ids, _ = knn_mod.knn_ref(mbrs_np, np.asarray(pts), K)
+    np.testing.assert_array_equal(np.asarray(nn), want_ids)
+    # the dense oracle on the appended server agrees with its pruned path
+    dn, dd2, _, _ = srv.knn(pts, K, max_cand=4096, pruned=False)
+    np.testing.assert_array_equal(np.asarray(nn), np.asarray(dn))
+
+
+@pytest.mark.parametrize("method", LAYOUTS)
+def test_append_bit_identical_to_restage(data, method):
+    """Slack appends (no overflow): answers == from-scratch staging of
+    the full dataset, on every layout."""
+    full, mbrs_np = data
+    base, extra = full[:N_BASE], full[N_BASE:]
+    parts = api.partition(method, base, 120)
+    cfg = ServeConfig(slack=600)
+    srv = SpatialServer(parts, base, cfg)
+    for i in range(0, N - N_BASE, 125):
+        rep = srv.append(extra[i:i + 125])
+        assert not rep["restaged"]          # slack absorbs everything
+    assert srv.stats["n"] == N
+    osrv = SpatialServer(parts, full, cfg)
+    _assert_same_answers(srv, osrv, mbrs_np, _qboxes(jax.random.PRNGKey(1), NQ),
+                         jax.random.uniform(jax.random.PRNGKey(2), (NQ, 2)))
+
+
+@pytest.mark.parametrize("method", ["bsp", "hc", "fg"])
+def test_overflow_restage_bit_identical(data, method):
+    """A forced tile overflow re-stages at a grown capacity; answers
+    stay bit-identical to the from-scratch staging and the width cache
+    resets."""
+    full, mbrs_np = data
+    base, extra = full[:N_BASE], full[N_BASE:]
+    parts = api.partition(method, base, 120)
+    srv = SpatialServer(parts, base)            # slack=0
+    qb = _qboxes(jax.random.PRNGKey(3), NQ)
+    srv.range_counts(qb)                         # warm the width cache
+    assert srv.widths._w
+    # cap+1 copies into one tile guarantee the overflow path fires
+    cap = srv.stats["cap"]
+    tb = np.asarray(parts.boxes)[0]
+    ctr = [(tb[0] + tb[2]) / 2, (tb[1] + tb[3]) / 2]
+    burst = np.tile(np.asarray(ctr + ctr, np.float32), (cap + 1, 1))
+    rep = srv.append(burst)
+    assert rep["restaged"] and srv.stats["restages"] == 1
+    assert srv.stats["cap"] > cap
+    assert not srv.widths._w                     # reset on re-stage
+    srv.append(extra)                            # keep growing after
+    every = np.concatenate([np.asarray(base), burst, np.asarray(extra)])
+    osrv = SpatialServer(parts, jnp.asarray(every))
+    _assert_same_answers(srv, osrv, every, qb,
+                         jax.random.uniform(jax.random.PRNGKey(4), (NQ, 2)))
+
+
+@pytest.mark.parametrize("method", ["bsp", "str"])
+def test_restage_preserves_staging_invariants(data, method):
+    """After an overflow re-stage: exactly one canonical slot per
+    object, chunk boxes bound their chunks' canonical members, probe
+    boxes bound every canonical member."""
+    full, _ = data
+    base = full[:N_BASE]
+    parts = api.partition(method, base, 120)
+    srv = SpatialServer(parts, base)
+    cap = srv.stats["cap"]
+    tb = np.asarray(parts.boxes)[0]
+    ctr = [(tb[0] + tb[2]) / 2, (tb[1] + tb[3]) / 2]
+    srv.append(np.tile(np.asarray(ctr + ctr, np.float32), (cap + 1, 1)))
+    assert srv.stats["restages"] == 1
+    lay = srv.layout
+    ids = np.asarray(lay.ids)
+    canon = np.asarray(lay.canon_tiles[..., 0]) < 1e9
+    n = srv.stats["n"]
+    counts = np.bincount(ids[canon].ravel(), minlength=n)
+    np.testing.assert_array_equal(counts, np.ones(n))
+    ct = np.asarray(lay.canon_tiles)
+    cb = np.asarray(lay.chunk_boxes)
+    pb = np.asarray(lay.probe_boxes)
+    chunk = rops.CHUNK
+    for t in range(ct.shape[0]):
+        live = ct[t, :, 0] < 1e9
+        if live.any():
+            assert np.all(pb[t, 0] <= ct[t][live][:, 0] + 1e-7)
+            assert np.all(pb[t, 3] >= ct[t][live][:, 3] - 1e-7)
+        for c in range(cb.shape[1]):
+            sl = slice(c * chunk, min((c + 1) * chunk, ct.shape[1]))
+            boxes = ct[t, sl][live[sl]]
+            if boxes.size == 0:
+                assert cb[t, c, 0] > cb[t, c, 2]
+                continue
+            assert np.all(cb[t, c, 0] <= boxes[:, 0] + 1e-7)
+            assert np.all(cb[t, c, 2] >= boxes[:, 2] - 1e-7)
+
+
+def test_incremental_boxes_bound_after_append(data):
+    """Non-overflow appends refresh probe and chunk boxes in place:
+    both still bound every canonical member they summarise."""
+    full, _ = data
+    base, extra = full[:N_BASE], full[N_BASE:]
+    parts = api.partition("bsp", base, 120)
+    srv = SpatialServer(parts, base, ServeConfig(slack=600))
+    rep = srv.append(extra)
+    assert not rep["restaged"]
+    lay = srv.layout
+    ct = np.asarray(lay.canon_tiles)
+    cb = np.asarray(lay.chunk_boxes)
+    pb = np.asarray(lay.probe_boxes)
+    live = ct[..., 0] < 1e9
+    chunk = rops.CHUNK
+    for t in range(ct.shape[0]):
+        if live[t].any():
+            assert np.all(pb[t, 0] <= ct[t][live[t]][:, 0] + 1e-7)
+            assert np.all(pb[t, 1] <= ct[t][live[t]][:, 1] + 1e-7)
+            assert np.all(pb[t, 2] >= ct[t][live[t]][:, 2] - 1e-7)
+            assert np.all(pb[t, 3] >= ct[t][live[t]][:, 3] - 1e-7)
+        for c in range(cb.shape[1]):
+            sl = slice(c * chunk, min((c + 1) * chunk, ct.shape[1]))
+            boxes = ct[t, sl][live[t, sl]]
+            if boxes.size:
+                assert np.all(cb[t, c, 0] <= boxes[:, 0] + 1e-7)
+                assert np.all(cb[t, c, 2] >= boxes[:, 2] - 1e-7)
+
+
+@pytest.mark.parametrize("method", ["bsp", "hc"])
+def test_sharded_append_and_rebalance_memory_bound(data, method):
+    """Sharded streaming: slack appends keep owners fixed; an overflow
+    re-stage re-balances owners on the new member counts and
+    re-establishes the ceil(T/D) per-device memory bound — answers
+    bit-identical throughout (vmap-simulated exchange)."""
+    full, mbrs_np = data
+    base, extra = full[:N_BASE], full[N_BASE:]
+    parts = api.partition(method, base, 120)
+    shards = 4
+    cfg = ServeConfig(placement="sharded", shards=shards, slack=0)
+    srv = SpatialServer(parts, base, cfg)
+    owner_before = srv.slayout.owner.copy()
+    cap0 = srv.stats["cap"]
+    tb = np.asarray(parts.boxes)[0]
+    ctr = [(tb[0] + tb[2]) / 2, (tb[1] + tb[3]) / 2]
+    burst = np.tile(np.asarray(ctr + ctr, np.float32), (cap0 + 1, 1))
+    rep = srv.append(burst)
+    assert rep["restaged"]
+    assert "moved_tiles" in srv.stats           # re-balance reported
+    srv.append(extra)
+    t = srv.stats["t"]
+    assert srv.stats["t_local"] == -(-t // shards)
+    cap = srv.stats["cap"]
+    tile_bytes = cap * 4 * 4 + cap * 4
+    assert srv.resident_tile_bytes() <= t * tile_bytes / shards + tile_bytes
+    # shards still partition the staging exactly
+    canon_np, ids_np = srv._oracle_np
+    s = srv.slayout
+    np.testing.assert_array_equal(
+        np.asarray(s.canon_shards)[s.owner, s.local], canon_np)
+    np.testing.assert_array_equal(
+        np.asarray(s.id_shards)[s.owner, s.local], ids_np)
+    every = np.concatenate([np.asarray(base), burst, np.asarray(extra)])
+    osrv = SpatialServer(parts, jnp.asarray(every), cfg)
+    _assert_same_answers(srv, osrv, every,
+                         _qboxes(jax.random.PRNGKey(5), NQ),
+                         jax.random.uniform(jax.random.PRNGKey(6), (NQ, 2)))
+    del owner_before   # placement may legitimately change on re-balance
+
+
+def test_append_ids_continue_numbering(data):
+    full, _ = data
+    base, extra = full[:N_BASE], full[N_BASE:]
+    parts = api.partition("fg", base, 120)
+    srv = SpatialServer(parts, base, ServeConfig(slack=600))
+    srv.append(extra[:100])
+    ids = np.asarray(srv.layout.ids)
+    assert ids.max() == N_BASE + 99
+    # querying a box equal to an appended object's MBR finds its id
+    target = np.asarray(extra[7]).reshape(1, 4)
+    hid, _, _, _ = srv.range_ids(jnp.asarray(target), max_hits=2048)
+    assert (N_BASE + 7) in set(np.asarray(hid[0]).tolist())
+
+
+def test_restage_preserves_capacity_headroom(data):
+    """An explicit capacity's headroom over the hottest tile is the
+    user's slack policy: a re-stage must re-reserve at least that much,
+    not collapse to minimal auto-sizing (which would thrash)."""
+    full, _ = data
+    base = full[:N_BASE]
+    parts = api.partition("bsp", base, 120)
+    srv = SpatialServer(parts, base, ServeConfig(capacity=1024))
+    fill_max = 1024 - srv.append(np.zeros((0, 4), np.float32))["free_slots_min"]
+    headroom = 1024 - fill_max
+    tb = np.asarray(parts.boxes)[0]
+    ctr = [(tb[0] + tb[2]) / 2, (tb[1] + tb[3]) / 2]
+    burst = np.tile(np.asarray(ctr + ctr, np.float32), (1025, 1))
+    assert srv.append(burst)["restaged"]
+    # hottest tile again has ~the configured headroom free (128-aligned)
+    assert srv.append(np.zeros((0, 4), np.float32))["free_slots_min"] \
+        >= headroom - 127
+
+
+def test_append_keeps_knn_steps_warm(data):
+    """n is a traced scalar in every kNN step, so appends (which change
+    n each batch) reuse the compiled steps — no re-trace, no dead cache
+    entries piling up."""
+    from jax.sharding import Mesh
+    full, _ = data
+    base, extra = full[:N_BASE], full[N_BASE:]
+    parts = api.partition("bsp", base, 120)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
+    pts = jax.random.uniform(jax.random.PRNGKey(7), (8, 2))
+    srv = SpatialServer(parts, base, ServeConfig(slack=600), mesh=mesh)
+    srv.knn(pts, K)
+    n_steps = len(srv.tiles._steps)
+    for i in range(0, 300, 100):
+        assert not srv.append(extra[i:i + 100])["restaged"]
+        srv.knn(pts, K)
+    assert len(srv.tiles._steps) == n_steps    # same compiled steps
+
+
+def test_empty_append_is_a_noop(data):
+    full, _ = data
+    parts = api.partition("bsp", full, 120)
+    srv = SpatialServer(parts, full)
+    before = dict(srv.stats)
+    rep = srv.append(np.zeros((0, 4), np.float32))
+    assert rep["appended"] == 0 and not rep["restaged"]
+    assert srv.stats["n"] == before["n"]
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 devices (CI virtual-device job)")
+def test_streaming_spmd_mesh_bit_identical():
+    """Appends (including an overflow re-stage) under a real 8-device
+    mesh: replicated and sharded answers == from-scratch staging ==
+    brute force."""
+    from jax.sharding import Mesh
+    full = spatial_gen.dataset("osm", jax.random.PRNGKey(0), 2000)
+    base, extra = full[:1400], full[1400:]
+    mesh = Mesh(np.array(jax.devices()[:8]), ("d",))
+    parts = api.partition("bsp", base, 150)
+    qb = _qboxes(jax.random.PRNGKey(1), 32, scale=0.05)
+    pts = jax.random.uniform(jax.random.PRNGKey(2), (32, 2))
+    for cfg in [ServeConfig(slack=600),
+                ServeConfig(placement="sharded", slack=600)]:
+        srv = SpatialServer(parts, base, cfg, mesh=mesh)
+        for i in range(0, 600, 200):
+            srv.append(extra[i:i + 200])
+        cap = srv.stats["cap"]
+        tb = np.asarray(parts.boxes)[0]
+        ctr = [(tb[0] + tb[2]) / 2, (tb[1] + tb[3]) / 2]
+        burst = np.tile(np.asarray(ctr + ctr, np.float32), (cap + 1, 1))
+        assert srv.append(burst)["restaged"]
+        every = np.concatenate([np.asarray(base), np.asarray(extra), burst])
+        osrv = SpatialServer(parts, jnp.asarray(every), cfg, mesh=mesh)
+        _assert_same_answers(srv, osrv, every, qb, pts)
