@@ -18,23 +18,24 @@
   chunk-box refresh, overflow re-stage with owner re-balancing).
 - ``engine``: ``SpatialServer`` — routing, LPT query packing, the kNN
   widen-and-retry exactness ladder, and the adaptive ``WidthPolicy``,
-  written once against the protocol; plus the deprecated PR-4 shims
-  (``stage``, ``stage_sharded``, boolean kwargs — one release,
-  ``LegacyServeWarning``).
+  written once against the protocol.
 - ``exchange``: the owner-routed ``all_to_all`` serving step — scatter
   queries to candidate-tile owners, probe local shards, merge partials
   deterministically; runs under a mesh or in vmap simulation.
+- ``frontend``: the async request plane — single-query requests in,
+  deadline-or-full padded batches out, with admission control,
+  per-tenant fairness, and tail-latency metrics (``ServeFrontend``,
+  ``FrontendConfig``, the sans-IO ``RequestPlane``, and the
+  deterministic open-loop simulator).
 
-See ``docs/ARCHITECTURE.md`` for the full pipeline and the old→new
-API migration table.
+See ``docs/ARCHITECTURE.md`` for the full pipeline.
 """
-from . import config, engine, exchange, layout, router  # noqa: F401
-from .config import LegacyServeWarning, ServeConfig  # noqa: F401
-from .engine import (  # noqa: F401
-    SpatialServer,
-    WidthPolicy,
-    stage,
-    stage_sharded,
+from . import config, engine, exchange, frontend, layout, router  # noqa: F401
+from .config import ServeConfig  # noqa: F401
+from .engine import SpatialServer, WidthPolicy  # noqa: F401
+from .frontend import (  # noqa: F401
+    FrontendConfig,
+    ServeFrontend,
 )
 from .layout import (  # noqa: F401
     ReplicatedTiles,

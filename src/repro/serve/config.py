@@ -33,11 +33,6 @@ names each axis of the design space once:
 
 The config is frozen and hashable, so a server's serving behaviour is
 one immutable value — loggable, comparable, and usable as a cache key.
-``ServeConfig.from_legacy`` translates the PR-4 boolean kwargs; the
-deprecated shims in ``repro.serve.engine`` emit ``LegacyServeWarning``
-(a ``DeprecationWarning``) through it, and CI runs the suite with that
-warning escalated to an error so internal code can never quietly fall
-back to the old surface.
 """
 from __future__ import annotations
 
@@ -48,15 +43,6 @@ from ..kernels.range_probe import ops as rops
 PLACEMENTS = ("replicated", "sharded")
 PROBES = ("pruned", "dense")
 LOCAL_INDEXES = ("off", "x", "hilbert")
-
-
-class LegacyServeWarning(DeprecationWarning):
-    """Emitted by the deprecated PR-4 serving entry points (``stage``,
-    ``stage_sharded``, the boolean ``SpatialServer`` kwargs).  A
-    ``DeprecationWarning`` subclass so generic tooling sees it, but
-    precisely filterable: CI escalates exactly this class to an error
-    (``-W error::repro.serve.LegacyServeWarning``) without tripping on
-    third-party deprecations."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,41 +89,3 @@ class ServeConfig:
     def replace(self, **changes) -> "ServeConfig":
         """A copy with ``changes`` applied (``dataclasses.replace``)."""
         return dataclasses.replace(self, **changes)
-
-    @classmethod
-    def from_legacy(cls, base: "ServeConfig | None" = None, *,
-                    pruned: bool | None = None, sharded: bool | None = None,
-                    shards: int | None = None,
-                    local_index: bool | str | None = None,
-                    capacity: int | None = None,
-                    axis: str | None = None) -> "ServeConfig":
-        """Translate the PR-4 boolean kwargs into a ``ServeConfig``.
-
-        ``local_index`` accepts the legacy booleans (``True`` → ``"x"``,
-        ``False`` → ``"off"``) as well as the new mode strings.  Callers
-        (the deprecated shims) own the warning; this is pure
-        translation.
-        """
-        cfg = base if base is not None else cls()
-        changes: dict = {}
-        if pruned is not None:
-            changes["probe"] = "pruned" if pruned else "dense"
-        if sharded is not None:
-            changes["placement"] = "sharded" if sharded else "replicated"
-        if shards is not None:
-            changes["shards"] = int(shards)
-        if local_index is not None:
-            if isinstance(local_index, bool):
-                changes["local_index"] = "x" if local_index else "off"
-            else:
-                changes["local_index"] = local_index
-        if capacity is not None:
-            changes["capacity"] = int(capacity)
-        if axis is not None:
-            changes["axis"] = axis
-        if changes.get("placement", cfg.placement) != "sharded":
-            # legacy servers accepted shards= alongside sharded=False and
-            # ignored it; the frozen config rejects that combination —
-            # clear it whether it came from the kwargs or the base config
-            changes["shards"] = None
-        return dataclasses.replace(cfg, **changes)

@@ -50,16 +50,14 @@ Single-process use passes ``mesh=None`` and gets the same jitted maths
 without the collective plumbing (sharded placement then runs the
 exchange in vmap simulation — same answers, one device).
 
-**Deprecated surface** (one release): ``stage`` / ``stage_sharded`` and
-the boolean constructor kwargs (``pruned=``, ``sharded=``, ``shards=``,
-``local_index=``, ``capacity=``) are thin shims over the config path
-and emit ``LegacyServeWarning``; CI runs the suite with that warning
-escalated to an error so internal code never calls them.
+For serving streams of *single* requests (an online workload rather
+than pre-formed batches), ``serve.frontend`` puts an async request
+plane in front of this server: admission control, per-tenant fairness,
+and deadline-or-full batch forming onto a fixed compiled-shape ladder.
 """
 from __future__ import annotations
 
 import logging
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -70,9 +68,8 @@ from ..core.partition import api
 from ..core.partition.assign import round_up
 from ..kernels.range_probe import ops as rops
 from ..query import knn as knn_mod
-from . import layout as layout_mod
 from . import router
-from .config import LegacyServeWarning, ServeConfig
+from .config import ServeConfig
 from .layout import (  # noqa: F401  (re-exports: the staging surface)
     ReplicatedTiles,
     ShardedLayout,
@@ -182,27 +179,7 @@ class SpatialServer:
 
     def __init__(self, parts: api.Partitioning, mbrs: jax.Array,
                  config: ServeConfig | None = None, *,
-                 mesh: Mesh | None = None, method: str | None = None,
-                 **legacy):
-        if isinstance(config, Mesh):           # legacy positional mesh
-            warnings.warn(
-                "passing mesh positionally to SpatialServer is "
-                "deprecated; use SpatialServer(parts, mbrs, config, "
-                "mesh=...)", LegacyServeWarning, stacklevel=2)
-            mesh, config = config, None
-        if legacy:
-            known = {"pruned", "sharded", "shards", "local_index",
-                     "capacity", "axis"}
-            bad = set(legacy) - known
-            if bad:
-                raise TypeError(
-                    f"unknown SpatialServer kwargs: {sorted(bad)}")
-            warnings.warn(
-                "SpatialServer's boolean kwargs "
-                f"({sorted(legacy)}) are deprecated; pass "
-                "config=ServeConfig(...) instead",
-                LegacyServeWarning, stacklevel=2)
-            config = ServeConfig.from_legacy(config, **legacy)
+                 mesh: Mesh | None = None, method: str | None = None):
         self.config = config = config if config is not None else ServeConfig()
         self.parts = parts
         self.mesh = mesh
@@ -214,17 +191,16 @@ class SpatialServer:
     @classmethod
     def from_method(cls, method: str, mbrs: jax.Array, payload: int,
                     config: ServeConfig | None = None, *,
-                    mesh: Mesh | None = None, **legacy) -> "SpatialServer":
+                    mesh: Mesh | None = None) -> "SpatialServer":
         """Partition ``mbrs`` with ``method`` at ``payload`` and serve.
 
         Everything after ``payload`` — ``config`` included — reaches
         the constructor verbatim, so staging knobs like
         ``ServeConfig.capacity`` are honoured here exactly as on the
-        direct path (legacy boolean kwargs pass through the same
-        deprecation shim).
+        direct path.
         """
         parts = api.partition(method, mbrs, payload)
-        return cls(parts, mbrs, config, mesh=mesh, method=method, **legacy)
+        return cls(parts, mbrs, config, mesh=mesh, method=method)
 
     # -- shared accessors -------------------------------------------------
 
@@ -254,24 +230,6 @@ class SpatialServer:
     @property
     def shards(self) -> int:
         return self.tiles.shards
-
-    # legacy attribute views (one release, like the shims): PR-4 set
-    # these as instance attributes; they now derive from the config
-    @property
-    def sharded(self) -> bool:
-        return self.config.placement == "sharded"
-
-    @property
-    def pruned(self) -> bool:
-        return self.config.probe == "pruned"
-
-    @property
-    def local_index(self) -> bool:
-        return self.config.indexed
-
-    @property
-    def axis(self) -> str:
-        return self.config.axis
 
     @property
     def n_devices(self) -> int:
@@ -444,52 +402,3 @@ class SpatialServer:
         return (jnp.asarray(nn_ids), jnp.asarray(nn_d2),
                 jnp.asarray(overflow),
                 dict(f_max=f, retries=retries, **xstats))
-
-
-# --------------------------------------------------------------------------
-# deprecated shims (one release): the PR-4 staging entry points
-# --------------------------------------------------------------------------
-
-def stage(parts: api.Partitioning, mbrs: jax.Array,
-          capacity: int | None = None, local_index: bool = True
-          ) -> tuple[StagedLayout, dict]:
-    """Deprecated: use ``stage_tiles(parts, mbrs, ServeConfig(...))``.
-
-    The boolean ``local_index`` maps to the config modes ``"x"`` /
-    ``"off"``; behaviour (capacity sizing, sort, chunk boxes, stats) is
-    the config path's.  One deliberate semantic change rides along: an
-    object intersecting *no* partition region — possible on the
-    non-covering hc/str layouts — was silently dropped by the PR-4
-    ``stage`` (absent from every answer); ``stage_tiles`` adopts it
-    into the nearest valid tile instead, so it is served (see
-    ``layout.membership``).  Data staged under a layout built from the
-    same data is unaffected.
-    """
-    warnings.warn(
-        "repro.serve.engine.stage is deprecated; use "
-        "repro.serve.stage_tiles(parts, mbrs, ServeConfig(...))",
-        LegacyServeWarning, stacklevel=2)
-    return stage_tiles(parts, mbrs, ServeConfig.from_legacy(
-        local_index=local_index, capacity=capacity))
-
-
-def stage_sharded(parts: api.Partitioning, mbrs: jax.Array, n_shards: int,
-                  capacity: int | None = None, mesh: Mesh | None = None,
-                  axis: str = "d", local_index: bool = True
-                  ) -> tuple[ShardedLayout, tuple, dict]:
-    """Deprecated: use ``stage_tiles`` + ``shard_staged`` (or simply a
-    ``placement="sharded"`` server, which manages both)."""
-    warnings.warn(
-        "repro.serve.engine.stage_sharded is deprecated; use "
-        "repro.serve.stage_tiles + repro.serve.shard_staged, or a "
-        "SpatialServer with ServeConfig(placement='sharded')",
-        LegacyServeWarning, stacklevel=2)
-    lay, stats = stage_tiles(parts, mbrs, ServeConfig.from_legacy(
-        local_index=local_index, capacity=capacity, axis=axis))
-    return shard_staged(lay, stats, n_shards, mesh=mesh, axis=axis)
-
-
-# keep the historical private helpers importable for one release (the
-# packing grid movers live in serve.layout now)
-_pack_rows = layout_mod._pack_rows
-_unpack_rows = layout_mod._unpack_rows

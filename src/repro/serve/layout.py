@@ -545,10 +545,6 @@ class _TilesBase:
         self.n_devices = (int(mesh.shape[config.axis])
                           if mesh is not None else 1)
         self._steps: dict = {}
-        # accumulated dataset = staged base + pending append batches;
-        # concatenated lazily at re-stage so appends stay O(M) per call
-        self._base_np = np.asarray(mbrs, np.float32).reshape(-1, 4)
-        self._pending: list[np.ndarray] = []
         layout, stats = stage_tiles(parts, mbrs, config)
         self.stats = dict(stats, placement=config.placement,
                           probe=config.probe, restages=0)
@@ -557,15 +553,11 @@ class _TilesBase:
 
     # -- host mirrors (the append path's source of truth) ---------------
 
-    _keep_full_tiles = True              # sharded staging drops them
-
     def _mirror(self, layout: StagedLayout) -> None:
         # np.array (not asarray): jax buffers surface as read-only
         # views, and the append path mutates these in place
         self._canon_np = np.array(layout.canon_tiles)
         self._ids_np = np.array(layout.ids)
-        self._tiles_np = (np.array(layout.tiles)
-                          if self._keep_full_tiles else None)
         self._tb_np = np.array(layout.tile_boxes)
         self._probe_np = np.array(layout.probe_boxes)
         self._chunk_np = (None if layout.chunk_boxes is None
@@ -600,7 +592,6 @@ class _TilesBase:
                                            - self._fill.max()))
         start_n = self.stats["n"]
         hit = np.asarray(membership(self.parts, jnp.asarray(new)))
-        self._pending.append(new)
         need = self._fill + hit.sum(axis=0)
         restaged = bool(need.max() > self.stats["cap"])
         if restaged:
@@ -608,7 +599,7 @@ class _TilesBase:
             log.info("append overflow: %d tile(s) past capacity %d — "
                      "re-staging %d objects", over, self.stats["cap"],
                      start_n + m)
-            self._restage()
+            self._restage(new)
         else:
             self._insert(new, hit, start_n)
             self._install_incremental()
@@ -643,8 +634,6 @@ class _TilesBase:
         oi, ti = np.nonzero(hit)                            # row-major:
         s = (self._fill[ti] + rank[oi, ti]).astype(np.int64)  # oi sorted
         self._ids_np[ti, s] = start_n + oi
-        if self._tiles_np is not None:
-            self._tiles_np[ti, s] = new[oi]
         first = np.r_[True, oi[1:] != oi[:-1]]     # lowest member tile
         self._canon_np[ti, s] = np.where(first[:, None], new[oi],
                                          _SENTINEL[None, :])
@@ -665,17 +654,28 @@ class _TilesBase:
              np.maximum(self._uni_np[2:], new[:, 2:].max(axis=0))]
         ).astype(np.float32)
 
-    def _restage(self) -> None:
-        """Rebuild the staging from the accumulated dataset at a grown
-        capacity (``capacity=None`` re-sizes from the new max tile
-        count + slack), refresh mirrors and device arrays, and bump the
-        step generation so no cached executor can serve stale shapes.
+    def _dataset_np(self) -> np.ndarray:
+        """The accumulated dataset, reconstructed from the canonical
+        host mirrors: every object has exactly one canonical slot (a
+        staging invariant ``_insert`` preserves), so scattering
+        canonical boxes by id rebuilds the (N, 4) input — appends
+        included, in arrival order, since ids are the running
+        numbering — without a second host copy of the data."""
+        out = np.empty((self.stats["n"], 4), np.float32)
+        live = self._canon_np[..., 0] < 1e9        # canonical slots only
+        out[self._ids_np[live]] = self._canon_np[live]
+        return out
+
+    def _restage(self, extra: np.ndarray) -> None:
+        """Rebuild the staging from the accumulated dataset plus the
+        not-yet-inserted ``extra`` batch at a grown capacity
+        (``capacity=None`` re-sizes from the new max tile count +
+        slack), refresh mirrors and device arrays, and bump the step
+        generation so no cached executor can serve stale shapes.
         Subclass ``_install`` re-balances owners under sharding."""
-        self._base_np = np.concatenate([self._base_np, *self._pending],
-                                       axis=0)
-        self._pending = []
+        data = np.concatenate([self._dataset_np(), extra], axis=0)
         layout, stats = stage_tiles(
-            self.parts, jnp.asarray(self._base_np),
+            self.parts, jnp.asarray(data),
             self.config.replace(capacity=None, slack=self._eff_slack))
         for key in ("n", "t", "cap", "t_live", "chunks", "replication"):
             self.stats[key] = stats[key]
@@ -710,6 +710,10 @@ class ReplicatedTiles(_TilesBase):
     shards = 1
 
     def _install(self, layout: StagedLayout) -> None:
+        # the served executors read canonical data only — drop the
+        # all-copies member tiles instead of keeping (T, cap, 4) bytes
+        # resident (and re-uploading them on every append)
+        layout = dataclasses.replace(layout, tiles=None)
         # under a mesh, place the staging replicated ONCE per install:
         # the arrays then enter every step as already-resident P()
         # inputs instead of re-broadcasting O(T·cap) bytes per batch
@@ -720,7 +724,7 @@ class ReplicatedTiles(_TilesBase):
 
     def _install_incremental(self) -> None:
         self._install(StagedLayout(
-            tiles=jnp.asarray(self._tiles_np),
+            tiles=None,
             ids=jnp.asarray(self._ids_np),
             canon_tiles=jnp.asarray(self._canon_np),
             tile_boxes=jnp.asarray(self._tb_np),
@@ -741,8 +745,7 @@ class ReplicatedTiles(_TilesBase):
 
     def resident_tile_bytes(self) -> int:
         lay = self.staged
-        return int(lay.tiles.nbytes + lay.canon_tiles.nbytes
-                   + lay.ids.nbytes)
+        return int(lay.canon_tiles.nbytes + lay.ids.nbytes)
 
     # -- SPMD plumbing ---------------------------------------------------
 
@@ -907,7 +910,6 @@ class ShardedTiles(_TilesBase):
     """
 
     mode = "sharded"
-    _keep_full_tiles = False
 
     def __init__(self, parts, mbrs, config: ServeConfig,
                  mesh: Mesh | None):

@@ -1,10 +1,7 @@
-"""ServeConfig validation, the legacy→config deprecation shims (one
-release: ``stage``, ``stage_sharded``, the boolean ``SpatialServer``
-kwargs), and the from_method passthrough contract.  The dedicated CI
-job runs the whole suite with ``LegacyServeWarning`` escalated to an
-error, so the shim tests here are the *only* place the legacy surface
-is exercised — via ``pytest.deprecated_call``/``pytest.warns``, which
-records instead of raising."""
+"""ServeConfig validation and the constructor/from_method contract of
+the config-only serving surface (the PR-4 legacy shims — ``stage``,
+``stage_sharded``, boolean ``SpatialServer`` kwargs — were removed
+after their one-release deprecation window)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,13 +9,7 @@ import pytest
 
 from repro.core.partition import api
 from repro.data import spatial_gen
-from repro.serve import (
-    LegacyServeWarning,
-    ServeConfig,
-    SpatialServer,
-    engine as serve_engine,
-    stage_tiles,
-)
+from repro.serve import ServeConfig, SpatialServer
 
 
 @pytest.fixture(scope="module")
@@ -46,7 +37,7 @@ def test_config_is_frozen_and_hashable():
     dict(placement="mirrored"),
     dict(probe="fuzzy"),
     dict(local_index="y"),
-    dict(local_index=True),            # booleans are legacy-only
+    dict(local_index=True),            # mode strings only, not booleans
     dict(chunk=64),
     dict(chunk=129),
     dict(capacity=0),
@@ -59,81 +50,39 @@ def test_config_rejects_invalid(bad):
         ServeConfig(**bad)
 
 
-def test_from_legacy_mapping():
-    cfg = ServeConfig.from_legacy(pruned=False, sharded=True, shards=3,
-                                  local_index=False, capacity=256)
-    assert cfg == ServeConfig(placement="sharded", probe="dense",
-                              local_index="off", capacity=256, shards=3)
-    # shards alongside sharded=False was legal (and ignored) before —
-    # whether it arrives via the kwargs or an already-sharded base config
-    assert ServeConfig.from_legacy(sharded=False, shards=3).shards is None
-    cfg = ServeConfig.from_legacy(ServeConfig(placement="sharded", shards=3),
-                                  sharded=False)
-    assert cfg.placement == "replicated" and cfg.shards is None
+# -- the config-only surface ------------------------------------------------
+
+def test_server_rejects_legacy_kwargs(parts, mbrs):
+    """The boolean kwargs are gone, not silently accepted."""
+    with pytest.raises(TypeError):
+        SpatialServer(parts, mbrs, sharded=True)
+    with pytest.raises(TypeError):
+        SpatialServer(parts, mbrs, pruned=False)
+    with pytest.raises(AttributeError):
+        import repro.serve.engine as serve_engine
+        serve_engine.stage
 
 
-# -- deprecated shims -------------------------------------------------------
-
-def test_stage_shim_warns_and_matches_config_path(parts, mbrs):
-    with pytest.deprecated_call():
-        legacy, lstats = serve_engine.stage(parts, mbrs)
-    new, nstats = stage_tiles(parts, mbrs)
-    np.testing.assert_array_equal(np.asarray(legacy.ids), np.asarray(new.ids))
-    np.testing.assert_array_equal(np.asarray(legacy.canon_tiles),
-                                  np.asarray(new.canon_tiles))
-    np.testing.assert_array_equal(np.asarray(legacy.chunk_boxes),
-                                  np.asarray(new.chunk_boxes))
-    assert lstats["cap"] == nstats["cap"]
-    with pytest.warns(LegacyServeWarning):
-        plain, _ = serve_engine.stage(parts, mbrs, local_index=False)
-    assert plain.chunk_boxes is None
-
-
-def test_stage_sharded_shim_warns_and_shards(parts, mbrs):
-    with pytest.deprecated_call():
-        slay, (canon_np, ids_np), stats = serve_engine.stage_sharded(
-            parts, mbrs, 4)
-    assert stats["shards"] == 4
-    np.testing.assert_array_equal(
-        np.asarray(slay.id_shards)[slay.owner, slay.local], ids_np)
-
-
-def test_server_boolean_kwargs_warn_and_map(parts, mbrs):
-    with pytest.deprecated_call():
-        srv = SpatialServer(parts, mbrs, pruned=False, sharded=True,
-                            shards=3, local_index=False, capacity=256)
-    assert srv.config == ServeConfig(placement="sharded", probe="dense",
-                                     local_index="off", capacity=256,
-                                     shards=3)
+def test_config_drives_server(parts, mbrs):
+    srv = SpatialServer(parts, mbrs, ServeConfig(placement="sharded",
+                                                 shards=3, probe="dense",
+                                                 local_index="off",
+                                                 capacity=256))
     assert srv.stats["cap"] == 256 and srv.shards == 3
     qb = jnp.asarray([[0.4, 0.4, 0.6, 0.6]], jnp.float32)
     _, stats = srv.range_counts(qb)
     assert stats["mode"] == "dense"               # probe default respected
 
 
-def test_server_unknown_kwarg_raises(parts, mbrs):
-    with pytest.raises(TypeError, match="unknown"):
-        SpatialServer(parts, mbrs, sharted=True)
-
-
-def test_new_surface_is_warning_free(parts, mbrs, recwarn):
+def test_new_surface_is_warning_free(parts, mbrs):
     import warnings
+    from repro.serve import stage_tiles
     with warnings.catch_warnings():
-        warnings.simplefilter("error", LegacyServeWarning)
+        warnings.simplefilter("error", DeprecationWarning)
         srv = SpatialServer(parts, mbrs, ServeConfig())
         srv.range_counts(jnp.asarray([[0.4, 0.4, 0.6, 0.6]], jnp.float32))
         srv.append(np.asarray([[0.1, 0.1, 0.2, 0.2]], np.float32))
         stage_tiles(parts, mbrs)
-
-
-def test_legacy_attribute_views(parts, mbrs):
-    """PR-4 public attributes stay readable for one release, derived
-    from the config."""
-    srv = SpatialServer(parts, mbrs, ServeConfig(placement="sharded",
-                                                 shards=3, probe="dense",
-                                                 local_index="off"))
-    assert srv.sharded and not srv.pruned and not srv.local_index
-    assert srv.axis == "d" and srv.n_devices == 1 and srv.shards == 3
 
 
 # -- from_method passthrough ------------------------------------------------

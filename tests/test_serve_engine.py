@@ -168,10 +168,6 @@ def test_from_method_passes_capacity_through(mbrs):
     srv = SpatialServer.from_method("bsp", mbrs, 150,
                                     ServeConfig(capacity=512))
     assert srv.stats["cap"] == 512
-    # the deprecated boolean spelling lands in the same place
-    with pytest.deprecated_call():
-        legacy = SpatialServer.from_method("bsp", mbrs, 150, capacity=512)
-    assert legacy.stats["cap"] == 512
 
 
 def test_slack_reserves_free_slots(mbrs):
