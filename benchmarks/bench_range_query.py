@@ -9,7 +9,12 @@ the local index then skips dead 128-member chunks *inside* each
 candidate tile (chunk-skip rate reported per layout, for the default
 ``"x"`` sort and the ``"hilbert"`` sort — square-ish chunk boxes vs
 x-strips).  Streaming rows time ``append`` throughput into reserved
-slack and the cost of a forced tile-overflow re-stage.
+slack (and the scattered device bytes per appended object — the O(M)
+ingest bar: flat per object, independent of the T×cap layout size) and
+the cost of a forced tile-overflow re-stage.  The
+``interleaved_stream`` scenario runs a sustained append/delete/update/
+query mix against one server and reports ingest ops/sec and the query
+p50 under churn (with the compaction policy live).
 
 ``--smoke`` runs a small configuration (CI: exercises the pruned,
 local-index, and sharded paths and the exactness assertions on every
@@ -56,6 +61,63 @@ def _qboxes(key, q, scale=0.05):
     return jnp.concatenate([c - s, c + s], axis=-1)
 
 
+def _interleaved_stream(ds: str, mbrs, qb, payload: int,
+                        smoke: bool) -> dict:
+    """Sustained append/delete/update/query churn against one server:
+    ingest ops/sec and the query p50 while the alive mask and the
+    compaction policy are doing real work."""
+    rng = np.random.default_rng(0)
+    n = int(mbrs.shape[0])
+    head = mbrs[: 4 * n // 5]
+    srv = SpatialServer.from_method(
+        "bsp", head, payload,
+        ServeConfig(slack=1024, compact_dead_frac=0.4))
+    live = np.arange(head.shape[0])
+    next_id = head.shape[0]
+    rounds, m_app, m_del, m_upd = (4, 64, 32, 16) if smoke \
+        else (12, 128, 64, 32)
+    q_times = []
+
+    def one_round():
+        nonlocal live, next_id
+        lo = rng.uniform(0.0, 1.0, (m_app, 2)).astype(np.float32)
+        ex = rng.uniform(0.0, 0.01, (m_app, 2)).astype(np.float32)
+        srv.append(np.concatenate([lo, lo + ex], axis=1))
+        live = np.concatenate([live, np.arange(next_id, next_id + m_app)])
+        next_id += m_app
+        dels = rng.choice(live, m_del, replace=False)
+        srv.delete(dels)
+        live = np.setdiff1d(live, dels)
+        upd = rng.choice(live, m_upd, replace=False)
+        lo = rng.uniform(0.0, 1.0, (m_upd, 2)).astype(np.float32)
+        ex = rng.uniform(0.0, 0.01, (m_upd, 2)).astype(np.float32)
+        srv.update(upd, np.concatenate([lo, lo + ex], axis=1))
+        tq = time.perf_counter()
+        np.asarray(srv.range_counts(qb)[0])
+        q_times.append(time.perf_counter() - tq)
+
+    one_round()            # warmup: one scatter compile per size bucket
+    q_times.clear()
+    ops = rounds * (m_app + m_del + m_upd)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        one_round()
+    total = time.perf_counter() - t0
+    assert srv.stats["n"] == live.size
+    p50_us = float(np.median(q_times) * 1e6)
+    emit(f"interleaved_stream/{ds}/bsp", total * 1e6,
+         f"ingest_ops_per_s={ops / max(total, 1e-9):.0f}"
+         f";query_p50_us={p50_us:.1f}"
+         f";compactions={srv.stats['compactions']}"
+         f";restages={srv.stats['restages']};n_final={srv.stats['n']}")
+    return dict(dataset=ds, layout="bsp", rounds=rounds,
+                ingest_ops_per_s=round(ops / max(total, 1e-9), 1),
+                query_p50_us=round(p50_us, 1),
+                compactions=int(srv.stats["compactions"]),
+                restages=int(srv.stats["restages"]),
+                n_final=int(srv.stats["n"]))
+
+
 def main(smoke: bool = False, json_out: bool = False) -> None:
     n, q, k, payload = (1200, 128, 4, 100) if smoke else (6000, 512, 8, 120)
     iters = 5 if smoke else 15      # range counts are cheap; drown drift
@@ -65,7 +127,7 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
         shards = jax.device_count()
     else:
         mesh, shards = None, 4          # exchange in vmap simulation
-    rows = []
+    rows, stream_rows = [], []
     for ds in DATASETS:
         mbrs = spatial_gen.dataset(ds, jax.random.PRNGKey(0), n)
         qb = _qboxes(jax.random.PRNGKey(1), q)
@@ -102,10 +164,26 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
             head, tail = mbrs[: 9 * n // 10], np.asarray(mbrs[9 * n // 10:])
             asrv = SpatialServer.from_method(m, head, payload,
                                              ServeConfig(slack=512))
+            bs = max(64, tail.shape[0] // 8)
+            # warmup on a throwaway server: the eager scatter steps are
+            # cached by shape globally, and identical batches produce
+            # identical size buckets — the timed loop below runs warm
+            wsrv = SpatialServer.from_method(m, head, payload,
+                                             ServeConfig(slack=512))
+            for i in range(0, tail.shape[0], bs):
+                wsrv.append(tail[i:i + bs])
+            del wsrv
+            append_bytes, append_rates = 0, []
             t0 = time.perf_counter()
-            for i in range(0, tail.shape[0], 128):
-                asrv.append(tail[i:i + 128])
+            for i in range(0, tail.shape[0], bs):
+                chunk = tail[i:i + bs]
+                tb0 = time.perf_counter()
+                rep = asrv.append(chunk)
+                append_rates.append(
+                    chunk.shape[0] / max(time.perf_counter() - tb0, 1e-9))
+                append_bytes += rep["bytes_transferred"]
             dt_append = time.perf_counter() - t0
+            append_rate = float(np.median(append_rates))
             acounts, _ = asrv.range_counts(qb)
             assert [int(c) for c in acounts] == want, (ds, m, "append")
             append_restages = asrv.stats["restages"]
@@ -150,7 +228,8 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
                            warmup=1, iters=3)
             us_sk = timeit(lambda: ssrv.knn(pts, k)[0], warmup=1, iters=3)
             emit(f"append_serve/{ds}/{m}", dt_append * 1e6,
-                 f"objs_per_s={tail.shape[0] / max(dt_append, 1e-9):.0f}"
+                 f"objs_per_s={append_rate:.0f}"
+                 f";bytes_per_obj={append_bytes / tail.shape[0]:.1f}"
                  f";restages={append_restages}"
                  f";restage_ms={dt_restage * 1e3:.1f}")
             emit(f"knn_serve/{ds}/{m}/k{k}", us_pk,
@@ -173,13 +252,15 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
                 tiles=int(srv.stats["t"]), chunks=int(srv.stats["chunks"]),
                 chunk_skip_rate=round(skip_rate, 4),
                 chunk_skip_rate_hilbert=round(skip_rate_h, 4),
-                append_objs_per_s=round(
-                    tail.shape[0] / max(dt_append, 1e-9), 1),
+                append_objs_per_s=round(append_rate, 1),
+                append_bytes_per_obj=round(
+                    append_bytes / tail.shape[0], 1),
                 append_restages=int(append_restages),
                 restage_ms=round(dt_restage * 1e3, 2),
                 exchange_messages=int(sstats["messages"]),
                 shard_bytes_per_device=int(ssrv.resident_tile_bytes()),
             ))
+        stream_rows.append(_interleaved_stream(ds, mbrs, qb, payload, smoke))
     if json_out:
         # aggregate the local-vs-unindexed comparison per dataset: the
         # per-layout ratios carry ±5% machine noise even interleaved,
@@ -203,7 +284,7 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
             bench="serving", smoke=smoke, n_objects=n, batch_queries=q,
             knn_k=k, payload=payload, backend=jax.default_backend(),
             devices=jax.device_count(), shards=shards, summary=summary,
-            rows=rows)
+            rows=rows, interleaved_stream=stream_rows)
         JSON_PATH.write_text(json.dumps(payload_doc, indent=2) + "\n")
         print(f"# wrote {JSON_PATH}", file=sys.stderr)
 

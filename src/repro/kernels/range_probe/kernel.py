@@ -40,6 +40,16 @@ slots, and absent candidate tiles with *inverted* sentinel boxes
 (xmin > xmax), which intersect nothing, so no validity mask is
 streamed through VMEM.  All-sentinel chunks get inverted chunk boxes
 and are always skipped.
+
+Every entry point takes an optional **alive mask** (keyword-only
+``alive``; dense: (T, cap) bool, gathered: (Q, F, cap) bool) — the
+tombstone-delete layer of the ingest engine (``serve.layout``).  A hit
+counts only if its member slot is alive; the ``*_skip`` variants
+additionally ``pl.when`` a whole chunk away when none of its slots is
+alive, so a tombstone-riddled chunk costs one scalar reduce even when
+its (stale, superset) chunk box still overlaps the query.
+``alive=None`` compiles the original mask-free kernels — the all-live
+fast path, bit-identical to an all-``True`` mask.
 """
 from __future__ import annotations
 
@@ -72,43 +82,64 @@ def _mask_kernel(q_ref, t_ref, out_ref):
     out_ref[0, ...] = _block_hits(q_ref, t_ref)
 
 
+def _count_alive_kernel(q_ref, t_ref, a_ref, out_ref):
+    hits = _block_hits(q_ref, t_ref) & a_ref[0, :][None, :]
+    out_ref[0, :] = jnp.sum(hits.astype(jnp.int32), axis=1)
+
+
+def _mask_alive_kernel(q_ref, t_ref, a_ref, out_ref):
+    out_ref[0, ...] = _block_hits(q_ref, t_ref) & a_ref[0, :][None, :]
+
+
+def _dense_specs(bq: int, cap: int, alive) -> list:
+    """Input specs shared by the dense kernels: query block, one tile's
+    component block, and (when masking) that tile's alive row."""
+    specs = [
+        pl.BlockSpec((4, bq), lambda ti, i: (0, i)),
+        pl.BlockSpec((1, 4, cap), lambda ti, i: (ti, 0, 0)),
+    ]
+    if alive is not None:
+        specs.append(pl.BlockSpec((1, cap), lambda ti, i: (ti, 0)))
+    return specs
+
+
 def count_pallas(q4: jax.Array, tiles: jax.Array, bq: int = DEFAULT_BQ,
-                 interpret: bool = False) -> jax.Array:
+                 interpret: bool = False, *,
+                 alive: jax.Array | None = None) -> jax.Array:
     """q4: (4, Q), tiles: (T, 4, cap); Q % bq == 0, cap % 128 == 0
-    -> (T, Q) int32 per-(tile, query) hit counts."""
+    -> (T, Q) int32 per-(tile, query) hit counts.  ``alive``: (T, cap)
+    bool — dead member slots never count."""
     q = q4.shape[1]
     t, _, cap = tiles.shape
     grid = (t, q // bq)
+    args = (q4, tiles) if alive is None else (q4, tiles, alive)
     return pl.pallas_call(
-        _count_kernel,
+        _count_kernel if alive is None else _count_alive_kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((4, bq), lambda ti, i: (0, i)),
-            pl.BlockSpec((1, 4, cap), lambda ti, i: (ti, 0, 0)),
-        ],
+        in_specs=_dense_specs(bq, cap, alive),
         out_specs=pl.BlockSpec((1, bq), lambda ti, i: (ti, i)),
         out_shape=jax.ShapeDtypeStruct((t, q), jnp.int32),
         interpret=interpret,
-    )(q4, tiles)
+    )(*args)
 
 
 def mask_pallas(q4: jax.Array, tiles: jax.Array, bq: int = DEFAULT_BQ,
-                interpret: bool = False) -> jax.Array:
-    """q4: (4, Q), tiles: (T, 4, cap) -> (T, Q, cap) bool hit table."""
+                interpret: bool = False, *,
+                alive: jax.Array | None = None) -> jax.Array:
+    """q4: (4, Q), tiles: (T, 4, cap) -> (T, Q, cap) bool hit table
+    (dead slots read False under ``alive``)."""
     q = q4.shape[1]
     t, _, cap = tiles.shape
     grid = (t, q // bq)
+    args = (q4, tiles) if alive is None else (q4, tiles, alive)
     return pl.pallas_call(
-        _mask_kernel,
+        _mask_kernel if alive is None else _mask_alive_kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((4, bq), lambda ti, i: (0, i)),
-            pl.BlockSpec((1, 4, cap), lambda ti, i: (ti, 0, 0)),
-        ],
+        in_specs=_dense_specs(bq, cap, alive),
         out_specs=pl.BlockSpec((1, bq, cap), lambda ti, i: (ti, i, 0)),
         out_shape=jax.ShapeDtypeStruct((t, q, cap), jnp.bool_),
         interpret=interpret,
-    )(q4, tiles)
+    )(*args)
 
 
 def _gather_block_hits(q_ref, g_ref):
@@ -135,51 +166,70 @@ def _gather_mask_kernel(q_ref, g_ref, out_ref):
     out_ref[:, 0, :] = _gather_block_hits(q_ref, g_ref)
 
 
+def _gather_count_alive_kernel(q_ref, g_ref, ga_ref, out_ref):
+    hits = _gather_block_hits(q_ref, g_ref) & ga_ref[:, 0, :]
+    out_ref[:, 0] = jnp.sum(hits.astype(jnp.int32), axis=1)
+
+
+def _gather_mask_alive_kernel(q_ref, g_ref, ga_ref, out_ref):
+    out_ref[:, 0, :] = _gather_block_hits(q_ref, g_ref) & ga_ref[:, 0, :]
+
+
+def _gather_specs(bq: int, cap: int, alive) -> list:
+    """Input specs shared by the gathered kernels: query block, per-row
+    candidate-f slab, and (when masking) the matching alive slab."""
+    specs = [
+        pl.BlockSpec((4, bq), lambda fi, i: (0, i)),
+        pl.BlockSpec((bq, 1, 4, cap), lambda fi, i: (i, fi, 0, 0)),
+    ]
+    if alive is not None:
+        specs.append(pl.BlockSpec((bq, 1, cap), lambda fi, i: (i, fi, 0)))
+    return specs
+
+
 def gather_count_pallas(q4: jax.Array, gtiles: jax.Array,
                         bq: int = DEFAULT_BQ,
-                        interpret: bool = False) -> jax.Array:
+                        interpret: bool = False, *,
+                        alive: jax.Array | None = None) -> jax.Array:
     """Routed probe, count form.
 
     q4: (4, Q) component-major queries; gtiles: (Q, F, 4, cap) each
     query's gathered candidate tiles (absent candidates = sentinel
     tiles).  Q % bq == 0, cap % 128 == 0 -> (Q, F) int32 per-(query,
-    candidate) hit counts.
+    candidate) hit counts.  ``alive``: (Q, F, cap) gathered alive mask.
     """
     q = q4.shape[1]
     _, f, _, cap = gtiles.shape
     grid = (f, q // bq)
+    args = (q4, gtiles) if alive is None else (q4, gtiles, alive)
     return pl.pallas_call(
-        _gather_count_kernel,
+        _gather_count_kernel if alive is None else _gather_count_alive_kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((4, bq), lambda fi, i: (0, i)),
-            pl.BlockSpec((bq, 1, 4, cap), lambda fi, i: (i, fi, 0, 0)),
-        ],
+        in_specs=_gather_specs(bq, cap, alive),
         out_specs=pl.BlockSpec((bq, 1), lambda fi, i: (i, fi)),
         out_shape=jax.ShapeDtypeStruct((q, f), jnp.int32),
         interpret=interpret,
-    )(q4, gtiles)
+    )(*args)
 
 
 def gather_mask_pallas(q4: jax.Array, gtiles: jax.Array,
                        bq: int = DEFAULT_BQ,
-                       interpret: bool = False) -> jax.Array:
+                       interpret: bool = False, *,
+                       alive: jax.Array | None = None) -> jax.Array:
     """Routed probe, mask form: (4, Q) x (Q, F, 4, cap) -> (Q, F, cap)
     bool hit table (hit-id extraction over candidate tiles only)."""
     q = q4.shape[1]
     _, f, _, cap = gtiles.shape
     grid = (f, q // bq)
+    args = (q4, gtiles) if alive is None else (q4, gtiles, alive)
     return pl.pallas_call(
-        _gather_mask_kernel,
+        _gather_mask_kernel if alive is None else _gather_mask_alive_kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((4, bq), lambda fi, i: (0, i)),
-            pl.BlockSpec((bq, 1, 4, cap), lambda fi, i: (i, fi, 0, 0)),
-        ],
+        in_specs=_gather_specs(bq, cap, alive),
         out_specs=pl.BlockSpec((bq, 1, cap), lambda fi, i: (i, fi, 0)),
         out_shape=jax.ShapeDtypeStruct((q, f, cap), jnp.bool_),
         interpret=interpret,
-    )(q4, gtiles)
+    )(*args)
 
 
 # --------------------------------------------------------------------------
@@ -235,53 +285,91 @@ def _mask_skip_kernel(q_ref, t_ref, cb_ref, out_ref):
                 _block_hits_chunk(q_ref, t_ref, c) & live[:, None])
 
 
+def _count_skip_alive_kernel(q_ref, t_ref, cb_ref, a_ref, out_ref):
+    bq = q_ref.shape[1]
+    n_chunks = t_ref.shape[2] // CHUNK
+    out_ref[0, :] = jnp.zeros((bq,), jnp.int32)
+    for c in range(n_chunks):
+        live = _chunk_live_dense(q_ref, cb_ref, c)
+        alive_c = a_ref[0, c * CHUNK:(c + 1) * CHUNK]
+
+        @pl.when(jnp.any(live) & jnp.any(alive_c))
+        def _(c=c, live=live, alive_c=alive_c):
+            hits = (_block_hits_chunk(q_ref, t_ref, c)
+                    & live[:, None] & alive_c[None, :])
+            out_ref[0, :] += jnp.sum(hits.astype(jnp.int32), axis=1)
+
+
+def _mask_skip_alive_kernel(q_ref, t_ref, cb_ref, a_ref, out_ref):
+    bq = q_ref.shape[1]
+    n_chunks = t_ref.shape[2] // CHUNK
+    out_ref[0, ...] = jnp.zeros((bq, t_ref.shape[2]), jnp.bool_)
+    for c in range(n_chunks):
+        live = _chunk_live_dense(q_ref, cb_ref, c)
+        alive_c = a_ref[0, c * CHUNK:(c + 1) * CHUNK]
+
+        @pl.when(jnp.any(live) & jnp.any(alive_c))
+        def _(c=c, live=live, alive_c=alive_c):
+            out_ref[0, :, c * CHUNK:(c + 1) * CHUNK] = (
+                _block_hits_chunk(q_ref, t_ref, c)
+                & live[:, None] & alive_c[None, :])
+
+
+def _dense_skip_specs(bq: int, cap: int, c: int, alive) -> list:
+    specs = [
+        pl.BlockSpec((4, bq), lambda ti, i: (0, i)),
+        pl.BlockSpec((1, 4, cap), lambda ti, i: (ti, 0, 0)),
+        pl.BlockSpec((1, c, 4), lambda ti, i: (ti, 0, 0)),
+    ]
+    if alive is not None:
+        specs.append(pl.BlockSpec((1, cap), lambda ti, i: (ti, 0)))
+    return specs
+
+
 def count_skip_pallas(q4: jax.Array, tiles: jax.Array, cboxes: jax.Array,
                       bq: int = DEFAULT_BQ,
-                      interpret: bool = False) -> jax.Array:
+                      interpret: bool = False, *,
+                      alive: jax.Array | None = None) -> jax.Array:
     """Dense probe with chunk skipping.
 
     q4: (4, Q), tiles: (T, 4, cap), cboxes: (T, C, 4) per-chunk MBRs
     (C == cap // CHUNK); Q % bq == 0, cap % CHUNK == 0 -> (T, Q) int32.
+    ``alive``: (T, cap) bool — all-dead chunks are skipped entirely.
     """
     q = q4.shape[1]
     t, _, cap = tiles.shape
     grid = (t, q // bq)
     c = cboxes.shape[1]
+    args = (q4, tiles, cboxes) if alive is None else (q4, tiles, cboxes, alive)
     return pl.pallas_call(
-        _count_skip_kernel,
+        _count_skip_kernel if alive is None else _count_skip_alive_kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((4, bq), lambda ti, i: (0, i)),
-            pl.BlockSpec((1, 4, cap), lambda ti, i: (ti, 0, 0)),
-            pl.BlockSpec((1, c, 4), lambda ti, i: (ti, 0, 0)),
-        ],
+        in_specs=_dense_skip_specs(bq, cap, c, alive),
         out_specs=pl.BlockSpec((1, bq), lambda ti, i: (ti, i)),
         out_shape=jax.ShapeDtypeStruct((t, q), jnp.int32),
         interpret=interpret,
-    )(q4, tiles, cboxes)
+    )(*args)
 
 
 def mask_skip_pallas(q4: jax.Array, tiles: jax.Array, cboxes: jax.Array,
                      bq: int = DEFAULT_BQ,
-                     interpret: bool = False) -> jax.Array:
+                     interpret: bool = False, *,
+                     alive: jax.Array | None = None) -> jax.Array:
     """Dense mask with chunk skipping: -> (T, Q, cap) bool (skipped
-    chunks read False)."""
+    chunks and dead slots read False)."""
     q = q4.shape[1]
     t, _, cap = tiles.shape
     grid = (t, q // bq)
     c = cboxes.shape[1]
+    args = (q4, tiles, cboxes) if alive is None else (q4, tiles, cboxes, alive)
     return pl.pallas_call(
-        _mask_skip_kernel,
+        _mask_skip_kernel if alive is None else _mask_skip_alive_kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((4, bq), lambda ti, i: (0, i)),
-            pl.BlockSpec((1, 4, cap), lambda ti, i: (ti, 0, 0)),
-            pl.BlockSpec((1, c, 4), lambda ti, i: (ti, 0, 0)),
-        ],
+        in_specs=_dense_skip_specs(bq, cap, c, alive),
         out_specs=pl.BlockSpec((1, bq, cap), lambda ti, i: (ti, i, 0)),
         out_shape=jax.ShapeDtypeStruct((t, q, cap), jnp.bool_),
         interpret=interpret,
-    )(q4, tiles, cboxes)
+    )(*args)
 
 
 def _chunk_live_gather(q_ref, gcb_ref, c: int):
@@ -334,51 +422,94 @@ def _gather_mask_skip_kernel(q_ref, g_ref, gcb_ref, out_ref):
                 _gather_block_hits_chunk(q_ref, g_ref, c) & live[:, None])
 
 
+def _gather_count_skip_alive_kernel(q_ref, g_ref, gcb_ref, ga_ref, out_ref):
+    bq = q_ref.shape[1]
+    n_chunks = g_ref.shape[3] // CHUNK
+    out_ref[:, 0] = jnp.zeros((bq,), jnp.int32)
+    for c in range(n_chunks):
+        live = _chunk_live_gather(q_ref, gcb_ref, c)
+        alive_c = ga_ref[:, 0, c * CHUNK:(c + 1) * CHUNK]
+
+        @pl.when(jnp.any(live) & jnp.any(alive_c))
+        def _(c=c, live=live, alive_c=alive_c):
+            hits = (_gather_block_hits_chunk(q_ref, g_ref, c)
+                    & live[:, None] & alive_c)
+            out_ref[:, 0] += jnp.sum(hits.astype(jnp.int32), axis=1)
+
+
+def _gather_mask_skip_alive_kernel(q_ref, g_ref, gcb_ref, ga_ref, out_ref):
+    bq = q_ref.shape[1]
+    cap = g_ref.shape[3]
+    n_chunks = cap // CHUNK
+    out_ref[:, 0, :] = jnp.zeros((bq, cap), jnp.bool_)
+    for c in range(n_chunks):
+        live = _chunk_live_gather(q_ref, gcb_ref, c)
+        alive_c = ga_ref[:, 0, c * CHUNK:(c + 1) * CHUNK]
+
+        @pl.when(jnp.any(live) & jnp.any(alive_c))
+        def _(c=c, live=live, alive_c=alive_c):
+            out_ref[:, 0, c * CHUNK:(c + 1) * CHUNK] = (
+                _gather_block_hits_chunk(q_ref, g_ref, c)
+                & live[:, None] & alive_c)
+
+
+def _gather_skip_specs(bq: int, cap: int, c: int, alive) -> list:
+    specs = [
+        pl.BlockSpec((4, bq), lambda fi, i: (0, i)),
+        pl.BlockSpec((bq, 1, 4, cap), lambda fi, i: (i, fi, 0, 0)),
+        pl.BlockSpec((bq, 1, c, 4), lambda fi, i: (i, fi, 0, 0)),
+    ]
+    if alive is not None:
+        specs.append(pl.BlockSpec((bq, 1, cap), lambda fi, i: (i, fi, 0)))
+    return specs
+
+
 def gather_count_skip_pallas(q4: jax.Array, gtiles: jax.Array,
                              gcboxes: jax.Array, bq: int = DEFAULT_BQ,
-                             interpret: bool = False) -> jax.Array:
+                             interpret: bool = False, *,
+                             alive: jax.Array | None = None) -> jax.Array:
     """Routed probe with chunk skipping, count form.
 
     q4: (4, Q); gtiles: (Q, F, 4, cap); gcboxes: (Q, F, C, 4) each
     query's gathered candidate chunk boxes (C == cap // CHUNK)
-    -> (Q, F) int32.
+    -> (Q, F) int32.  ``alive``: (Q, F, cap) gathered alive mask —
+    all-dead chunk blocks are skipped entirely.
     """
     q = q4.shape[1]
     _, f, _, cap = gtiles.shape
     grid = (f, q // bq)
     c = gcboxes.shape[2]
+    args = ((q4, gtiles, gcboxes) if alive is None
+            else (q4, gtiles, gcboxes, alive))
     return pl.pallas_call(
-        _gather_count_skip_kernel,
+        (_gather_count_skip_kernel if alive is None
+         else _gather_count_skip_alive_kernel),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((4, bq), lambda fi, i: (0, i)),
-            pl.BlockSpec((bq, 1, 4, cap), lambda fi, i: (i, fi, 0, 0)),
-            pl.BlockSpec((bq, 1, c, 4), lambda fi, i: (i, fi, 0, 0)),
-        ],
+        in_specs=_gather_skip_specs(bq, cap, c, alive),
         out_specs=pl.BlockSpec((bq, 1), lambda fi, i: (i, fi)),
         out_shape=jax.ShapeDtypeStruct((q, f), jnp.int32),
         interpret=interpret,
-    )(q4, gtiles, gcboxes)
+    )(*args)
 
 
 def gather_mask_skip_pallas(q4: jax.Array, gtiles: jax.Array,
                             gcboxes: jax.Array, bq: int = DEFAULT_BQ,
-                            interpret: bool = False) -> jax.Array:
+                            interpret: bool = False, *,
+                            alive: jax.Array | None = None) -> jax.Array:
     """Routed mask with chunk skipping: -> (Q, F, cap) bool (skipped
-    chunks read False)."""
+    chunks and dead slots read False)."""
     q = q4.shape[1]
     _, f, _, cap = gtiles.shape
     grid = (f, q // bq)
     c = gcboxes.shape[2]
+    args = ((q4, gtiles, gcboxes) if alive is None
+            else (q4, gtiles, gcboxes, alive))
     return pl.pallas_call(
-        _gather_mask_skip_kernel,
+        (_gather_mask_skip_kernel if alive is None
+         else _gather_mask_skip_alive_kernel),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((4, bq), lambda fi, i: (0, i)),
-            pl.BlockSpec((bq, 1, 4, cap), lambda fi, i: (i, fi, 0, 0)),
-            pl.BlockSpec((bq, 1, c, 4), lambda fi, i: (i, fi, 0, 0)),
-        ],
+        in_specs=_gather_skip_specs(bq, cap, c, alive),
         out_specs=pl.BlockSpec((bq, 1, cap), lambda fi, i: (i, fi, 0)),
         out_shape=jax.ShapeDtypeStruct((q, f, cap), jnp.bool_),
         interpret=interpret,
-    )(q4, gtiles, gcboxes)
+    )(*args)

@@ -18,6 +18,12 @@ carry inverted boxes).  Answers equal the unindexed variants whenever
 the chunk boxes bound their members; on TPU dead chunks are skipped,
 off-TPU the fused jnp path masks per-chunk partials (same O(1/CHUNK)
 bookkeeping cost, same bits).
+
+Tombstone contract (keyword-only ``alive``): an optional (T, cap) bool
+per-slot alive mask — a hit counts only if its member slot is alive.
+Wrappers pad it with False (dead) and gather it alongside the member
+boxes, so padded slots and padded candidates stay inert.  ``alive=None``
+is the all-live fast path, bit-identical to an all-``True`` mask.
 """
 from __future__ import annotations
 
@@ -59,21 +65,32 @@ def _pad_tiles_cm(tiles: jax.Array) -> jax.Array:
     return jnp.swapaxes(tiles, 1, 2)
 
 
+def _pad_alive(alive: jax.Array) -> jax.Array:
+    """(T, cap) bool -> (T, cap_pad) with False (dead) padding."""
+    cap = alive.shape[1]
+    pad = (-cap) % _LANE
+    if pad:
+        alive = jnp.pad(alive, ((0, 0), (0, pad)))
+    return alive
+
+
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
 def probe_counts(qboxes: jax.Array, tiles: jax.Array,
                  bq: int = kernel.DEFAULT_BQ,
-                 interpret: bool | None = None) -> jax.Array:
+                 interpret: bool | None = None, *,
+                 alive: jax.Array | None = None) -> jax.Array:
     """Per-(query, tile) hit counts.
 
     qboxes: (Q, 4), tiles: (T, cap, 4) sentinel-padded member boxes
-    -> (Q, T) int32.
+    -> (Q, T) int32.  ``alive``: (T, cap) bool — dead slots never count.
     """
     if interpret is None:
         interpret = _interpret_default()
     q = qboxes.shape[0]
     q4 = _pad_queries_cm(qboxes.astype(jnp.float32), bq)
     t3 = _pad_tiles_cm(tiles.astype(jnp.float32))
-    counts = kernel.count_pallas(q4, t3, bq, interpret=interpret)
+    a = None if alive is None else _pad_alive(alive)
+    counts = kernel.count_pallas(q4, t3, bq, interpret=interpret, alive=a)
     return counts.T[:q]
 
 
@@ -108,6 +125,15 @@ def gathered_ids(ids: jax.Array, cand: jax.Array) -> jax.Array:
     return ids_p[jnp.where(cand >= 0, cand, t)]
 
 
+def gathered_alive(alive: jax.Array, cand: jax.Array) -> jax.Array:
+    """Candidate gather of the alive mask: (T, cap) bool x (Q, F) ->
+    (Q, F, cap) with -1 candidates remapped to an appended all-``False``
+    (dead) row — the tombstone companion of ``gathered_rows``, so padded
+    candidates never answer."""
+    alive_p, t = _append_pad_row(alive, False)
+    return alive_p[jnp.where(cand >= 0, cand, t)]
+
+
 def _gather_cm(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
                bq: int) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Shared gathered-probe staging: pad queries to a block multiple,
@@ -130,10 +156,22 @@ def _gather_cm(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
     return q4, t3[cidx], cidx
 
 
+def _gather_alive_cm(alive: jax.Array | None,
+                     cidx: jax.Array) -> jax.Array | None:
+    """Kernel-path companion of ``gathered_alive``: lane-pad with False,
+    append the all-dead pad row, gather by the already-remapped ``cidx``
+    -> (Q_pad, F, cap_pad) bool (or None passthrough)."""
+    if alive is None:
+        return None
+    alive_p, _ = _append_pad_row(_pad_alive(alive), False)
+    return alive_p[cidx]
+
+
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
 def gathered_counts(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
                     bq: int = kernel.DEFAULT_BQ,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None, *,
+                    alive: jax.Array | None = None) -> jax.Array:
     """Routed probe: per-(query, candidate) hit counts.
 
     qboxes: (Q, 4); tiles: (T, cap, 4) sentinel-padded member boxes;
@@ -148,19 +186,23 @@ def gathered_counts(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
     """
     if interpret is None and _interpret_default():
         from . import ref
-        return ref.gathered_counts(qboxes.astype(jnp.float32),
-                                   gathered_rows(tiles, cand))
+        return ref.gathered_counts(
+            qboxes.astype(jnp.float32), gathered_rows(tiles, cand),
+            None if alive is None else gathered_alive(alive, cand))
     if interpret is None:
         interpret = False
     q = qboxes.shape[0]
-    q4, gt, _ = _gather_cm(qboxes, tiles, cand, bq)
-    return kernel.gather_count_pallas(q4, gt, bq, interpret=interpret)[:q]
+    q4, gt, cidx = _gather_cm(qboxes, tiles, cand, bq)
+    ga = _gather_alive_cm(alive, cidx)
+    return kernel.gather_count_pallas(q4, gt, bq, interpret=interpret,
+                                      alive=ga)[:q]
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
 def gathered_mask(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
                   bq: int = kernel.DEFAULT_BQ,
-                  interpret: bool | None = None) -> jax.Array:
+                  interpret: bool | None = None, *,
+                  alive: jax.Array | None = None) -> jax.Array:
     """Routed probe, full hit table over candidate tiles only.
 
     qboxes: (Q, 4); tiles: (T, cap, 4); cand: (Q, F) int32 (-1 padding)
@@ -170,20 +212,24 @@ def gathered_mask(qboxes: jax.Array, tiles: jax.Array, cand: jax.Array,
     """
     if interpret is None and _interpret_default():
         from . import ref
-        return ref.gathered_mask(qboxes.astype(jnp.float32),
-                                 gathered_rows(tiles, cand))
+        return ref.gathered_mask(
+            qboxes.astype(jnp.float32), gathered_rows(tiles, cand),
+            None if alive is None else gathered_alive(alive, cand))
     if interpret is None:
         interpret = False
     q, cap = qboxes.shape[0], tiles.shape[1]
-    q4, gt, _ = _gather_cm(qboxes, tiles, cand, bq)
-    full = kernel.gather_mask_pallas(q4, gt, bq, interpret=interpret)
+    q4, gt, cidx = _gather_cm(qboxes, tiles, cand, bq)
+    ga = _gather_alive_cm(alive, cidx)
+    full = kernel.gather_mask_pallas(q4, gt, bq, interpret=interpret,
+                                     alive=ga)
     return full[:q, :, :cap]
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
 def probe_mask(qboxes: jax.Array, tiles: jax.Array,
                bq: int = kernel.DEFAULT_BQ,
-               interpret: bool | None = None) -> jax.Array:
+               interpret: bool | None = None, *,
+               alive: jax.Array | None = None) -> jax.Array:
     """Full hit table for id extraction.
 
     qboxes: (Q, 4), tiles: (T, cap, 4) -> (Q, T, cap) bool (un-padded
@@ -194,7 +240,8 @@ def probe_mask(qboxes: jax.Array, tiles: jax.Array,
     q, cap = qboxes.shape[0], tiles.shape[1]
     q4 = _pad_queries_cm(qboxes.astype(jnp.float32), bq)
     t3 = _pad_tiles_cm(tiles.astype(jnp.float32))
-    full = kernel.mask_pallas(q4, t3, bq, interpret=interpret)
+    a = None if alive is None else _pad_alive(alive)
+    full = kernel.mask_pallas(q4, t3, bq, interpret=interpret, alive=a)
     return jnp.swapaxes(full, 0, 1)[:q, :, :cap]
 
 
@@ -214,7 +261,8 @@ def gathered_chunk_boxes(cboxes: jax.Array, cand: jax.Array) -> jax.Array:
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
 def probe_counts_skip(qboxes: jax.Array, tiles: jax.Array,
                       cboxes: jax.Array, bq: int = kernel.DEFAULT_BQ,
-                      interpret: bool | None = None) -> jax.Array:
+                      interpret: bool | None = None, *,
+                      alive: jax.Array | None = None) -> jax.Array:
     """Dense per-(query, tile) hit counts with chunk skipping.
 
     qboxes: (Q, 4); tiles: (T, cap, 4); cboxes: (T, C, 4) chunk boxes
@@ -231,21 +279,23 @@ def probe_counts_skip(qboxes: jax.Array, tiles: jax.Array,
         from . import ref
         return ref.probe_counts_skip(qboxes.astype(jnp.float32),
                                      tiles.astype(jnp.float32),
-                                     cboxes.astype(jnp.float32))
+                                     cboxes.astype(jnp.float32), alive)
     if interpret is None:
         interpret = False
     q = qboxes.shape[0]
     q4 = _pad_queries_cm(qboxes.astype(jnp.float32), bq)
     t3 = _pad_tiles_cm(tiles.astype(jnp.float32))
+    a = None if alive is None else _pad_alive(alive)
     counts = kernel.count_skip_pallas(q4, t3, cboxes.astype(jnp.float32),
-                                      bq, interpret=interpret)
+                                      bq, interpret=interpret, alive=a)
     return counts.T[:q]
 
 
 @functools.partial(jax.jit, static_argnames=("bq", "interpret"))
 def probe_mask_skip(qboxes: jax.Array, tiles: jax.Array,
                     cboxes: jax.Array, bq: int = kernel.DEFAULT_BQ,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None, *,
+                    alive: jax.Array | None = None) -> jax.Array:
     """Dense hit table with chunk skipping: -> (Q, T, cap) bool
     (un-padded view); same chunk-box contract (boxes must bound the
     probed ``tiles`` — staged boxes pair with ``canon_tiles``) and
@@ -255,14 +305,15 @@ def probe_mask_skip(qboxes: jax.Array, tiles: jax.Array,
         return jnp.swapaxes(
             ref.probe_mask_skip(qboxes.astype(jnp.float32),
                                 tiles.astype(jnp.float32),
-                                cboxes.astype(jnp.float32)), 0, 1)
+                                cboxes.astype(jnp.float32), alive), 0, 1)
     if interpret is None:
         interpret = False
     q, cap = qboxes.shape[0], tiles.shape[1]
     q4 = _pad_queries_cm(qboxes.astype(jnp.float32), bq)
     t3 = _pad_tiles_cm(tiles.astype(jnp.float32))
+    a = None if alive is None else _pad_alive(alive)
     full = kernel.mask_skip_pallas(q4, t3, cboxes.astype(jnp.float32),
-                                   bq, interpret=interpret)
+                                   bq, interpret=interpret, alive=a)
     return jnp.swapaxes(full, 0, 1)[:q, :, :cap]
 
 
@@ -270,7 +321,8 @@ def probe_mask_skip(qboxes: jax.Array, tiles: jax.Array,
 def gathered_counts_skip(qboxes: jax.Array, tiles: jax.Array,
                          cboxes: jax.Array, cand: jax.Array,
                          bq: int = kernel.DEFAULT_BQ,
-                         interpret: bool | None = None) -> jax.Array:
+                         interpret: bool | None = None, *,
+                         alive: jax.Array | None = None) -> jax.Array:
     """Routed per-(query, candidate) hit counts with chunk skipping.
 
     qboxes: (Q, 4); tiles: (T, cap, 4); cboxes: (T, C, 4); cand:
@@ -280,16 +332,18 @@ def gathered_counts_skip(qboxes: jax.Array, tiles: jax.Array,
     """
     if interpret is None and _interpret_default():
         from . import ref
-        return ref.gathered_counts_skip(qboxes.astype(jnp.float32),
-                                        gathered_rows(tiles, cand),
-                                        gathered_chunk_boxes(cboxes, cand))
+        return ref.gathered_counts_skip(
+            qboxes.astype(jnp.float32), gathered_rows(tiles, cand),
+            gathered_chunk_boxes(cboxes, cand),
+            None if alive is None else gathered_alive(alive, cand))
     if interpret is None:
         interpret = False
     q = qboxes.shape[0]
     q4, gt, cidx = _gather_cm(qboxes, tiles, cand, bq)
     cb_p, _ = _append_pad_row(cboxes.astype(jnp.float32), _SENTINEL)
+    ga = _gather_alive_cm(alive, cidx)
     out = kernel.gather_count_skip_pallas(q4, gt, cb_p[cidx], bq,
-                                          interpret=interpret)
+                                          interpret=interpret, alive=ga)
     return out[:q]
 
 
@@ -297,21 +351,24 @@ def gathered_counts_skip(qboxes: jax.Array, tiles: jax.Array,
 def gathered_mask_skip(qboxes: jax.Array, tiles: jax.Array,
                        cboxes: jax.Array, cand: jax.Array,
                        bq: int = kernel.DEFAULT_BQ,
-                       interpret: bool | None = None) -> jax.Array:
+                       interpret: bool | None = None, *,
+                       alive: jax.Array | None = None) -> jax.Array:
     """Routed hit table with chunk skipping: -> (Q, F, cap) bool
     (un-padded view); executor selection as in ``gathered_counts_skip``."""
     if interpret is None and _interpret_default():
         from . import ref
-        return ref.gathered_mask_skip(qboxes.astype(jnp.float32),
-                                      gathered_rows(tiles, cand),
-                                      gathered_chunk_boxes(cboxes, cand))
+        return ref.gathered_mask_skip(
+            qboxes.astype(jnp.float32), gathered_rows(tiles, cand),
+            gathered_chunk_boxes(cboxes, cand),
+            None if alive is None else gathered_alive(alive, cand))
     if interpret is None:
         interpret = False
     q, cap = qboxes.shape[0], tiles.shape[1]
     q4, gt, cidx = _gather_cm(qboxes, tiles, cand, bq)
     cb_p, _ = _append_pad_row(cboxes.astype(jnp.float32), _SENTINEL)
+    ga = _gather_alive_cm(alive, cidx)
     full = kernel.gather_mask_skip_pallas(q4, gt, cb_p[cidx], bq,
-                                          interpret=interpret)
+                                          interpret=interpret, alive=ga)
     return full[:q, :, :cap]
 
 

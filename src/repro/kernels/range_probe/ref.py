@@ -13,6 +13,14 @@ don't, the kernels must still match these oracles bit-for-bit.  They
 double as the fused off-TPU executors — the chunk bookkeeping is
 O(work / CHUNK), so the masked path costs within noise of the
 unmasked one on backends that cannot skip.
+
+Every oracle takes an optional per-slot **alive mask** (``alive``:
+``(T, cap)`` dense, ``(Q, F, cap)`` gathered): a hit survives only if
+its member slot is alive.  This is the tombstone-delete semantics of
+the ingest engine (``serve.layout``): deleted members keep their slot
+(and their contribution to the routing boxes, which stay exact
+supersets) but stop answering.  ``alive=None`` is the all-live
+fast path — bit-identical to passing an all-``True`` mask.
 """
 from __future__ import annotations
 
@@ -22,39 +30,53 @@ import jax.numpy as jnp
 from .kernel import CHUNK
 
 
-def probe_mask(qboxes: jax.Array, tiles: jax.Array) -> jax.Array:
-    """(Q, 4) x (T, cap, 4) -> (T, Q, cap) closed-box intersection."""
+def probe_mask(qboxes: jax.Array, tiles: jax.Array,
+               alive: jax.Array | None = None) -> jax.Array:
+    """(Q, 4) x (T, cap, 4) -> (T, Q, cap) closed-box intersection;
+    ``alive`` (T, cap) masks dead member slots out of the hit table."""
     q = qboxes[None, :, None, :]
     s = tiles[:, None, :, :]
-    return (
+    hit = (
         (q[..., 0] <= s[..., 2])
         & (s[..., 0] <= q[..., 2])
         & (q[..., 1] <= s[..., 3])
         & (s[..., 1] <= q[..., 3])
     )
+    if alive is not None:
+        hit = hit & alive[:, None, :]
+    return hit
 
 
-def probe_counts(qboxes: jax.Array, tiles: jax.Array) -> jax.Array:
+def probe_counts(qboxes: jax.Array, tiles: jax.Array,
+                 alive: jax.Array | None = None) -> jax.Array:
     """(Q, 4) x (T, cap, 4) -> (Q, T) per-(query, tile) hit counts."""
-    return jnp.sum(probe_mask(qboxes, tiles).astype(jnp.int32), axis=2).T
+    return jnp.sum(probe_mask(qboxes, tiles, alive).astype(jnp.int32),
+                   axis=2).T
 
 
-def gathered_mask(qboxes: jax.Array, gtiles: jax.Array) -> jax.Array:
+def gathered_mask(qboxes: jax.Array, gtiles: jax.Array,
+                  galive: jax.Array | None = None) -> jax.Array:
     """(Q, 4) x (Q, F, cap, 4) -> (Q, F, cap): query j vs ITS OWN
-    gathered candidate tiles (row-major gather)."""
+    gathered candidate tiles (row-major gather); ``galive`` (Q, F, cap)
+    is the matching gathered alive mask."""
     q = qboxes[:, None, None, :]
     s = gtiles
-    return (
+    hit = (
         (q[..., 0] <= s[..., 2])
         & (s[..., 0] <= q[..., 2])
         & (q[..., 1] <= s[..., 3])
         & (s[..., 1] <= q[..., 3])
     )
+    if galive is not None:
+        hit = hit & galive
+    return hit
 
 
-def gathered_counts(qboxes: jax.Array, gtiles: jax.Array) -> jax.Array:
+def gathered_counts(qboxes: jax.Array, gtiles: jax.Array,
+                    galive: jax.Array | None = None) -> jax.Array:
     """(Q, 4) x (Q, F, cap, 4) -> (Q, F) per-candidate hit counts."""
-    return jnp.sum(gathered_mask(qboxes, gtiles).astype(jnp.int32), axis=2)
+    return jnp.sum(gathered_mask(qboxes, gtiles, galive).astype(jnp.int32),
+                   axis=2)
 
 
 # --------------------------------------------------------------------------
@@ -82,20 +104,23 @@ def chunk_hits(qboxes: jax.Array, cboxes: jax.Array) -> jax.Array:
 
 
 def probe_mask_skip(qboxes: jax.Array, tiles: jax.Array,
-                    cboxes: jax.Array) -> jax.Array:
+                    cboxes: jax.Array,
+                    alive: jax.Array | None = None) -> jax.Array:
     """Chunk-masked ``probe_mask``: -> (T, Q, cap); a hit survives only
-    if the query also hits the member's chunk box."""
+    if the query also hits the member's chunk box (and the member slot
+    is alive, when ``alive`` is given)."""
     live = jnp.swapaxes(chunk_hits(qboxes, cboxes), 0, 1)  # (T, Q, C)
     lanes = jnp.repeat(live, CHUNK, axis=-1)[..., :tiles.shape[1]]
-    return probe_mask(qboxes, tiles) & lanes
+    return probe_mask(qboxes, tiles, alive) & lanes
 
 
 def probe_counts_skip(qboxes: jax.Array, tiles: jax.Array,
-                      cboxes: jax.Array) -> jax.Array:
+                      cboxes: jax.Array,
+                      alive: jax.Array | None = None) -> jax.Array:
     """Chunk-masked ``probe_counts``: -> (Q, T).  Sums per-chunk
     partials, then zeroes chunks the query's box cannot reach."""
     n_chunks = cboxes.shape[1]
-    m = _pad_lanes(probe_mask(qboxes, tiles), n_chunks)     # (T, Q, cap_p)
+    m = _pad_lanes(probe_mask(qboxes, tiles, alive), n_chunks)  # (T,Q,cap_p)
     part = jnp.sum(m.reshape(m.shape[0], m.shape[1], n_chunks, CHUNK)
                    .astype(jnp.int32), axis=3)              # (T, Q, C)
     live = jnp.swapaxes(chunk_hits(qboxes, cboxes), 0, 1)   # (T, Q, C)
@@ -116,18 +141,20 @@ def gathered_chunk_hits(qboxes: jax.Array, gcboxes: jax.Array) -> jax.Array:
 
 
 def gathered_mask_skip(qboxes: jax.Array, gtiles: jax.Array,
-                       gcboxes: jax.Array) -> jax.Array:
+                       gcboxes: jax.Array,
+                       galive: jax.Array | None = None) -> jax.Array:
     """Chunk-masked ``gathered_mask``: -> (Q, F, cap)."""
     live = gathered_chunk_hits(qboxes, gcboxes)             # (Q, F, C)
     lanes = jnp.repeat(live, CHUNK, axis=-1)[..., :gtiles.shape[2]]
-    return gathered_mask(qboxes, gtiles) & lanes
+    return gathered_mask(qboxes, gtiles, galive) & lanes
 
 
 def gathered_counts_skip(qboxes: jax.Array, gtiles: jax.Array,
-                         gcboxes: jax.Array) -> jax.Array:
+                         gcboxes: jax.Array,
+                         galive: jax.Array | None = None) -> jax.Array:
     """Chunk-masked ``gathered_counts``: -> (Q, F)."""
     n_chunks = gcboxes.shape[2]
-    m = _pad_lanes(gathered_mask(qboxes, gtiles), n_chunks)  # (Q, F, cap_p)
+    m = _pad_lanes(gathered_mask(qboxes, gtiles, galive), n_chunks)
     part = jnp.sum(m.reshape(m.shape[0], m.shape[1], n_chunks, CHUNK)
                    .astype(jnp.int32), axis=3)               # (Q, F, C)
     return jnp.sum(part * gathered_chunk_hits(qboxes, gcboxes), axis=2)

@@ -131,7 +131,7 @@ def _refine_topk(k: int, pt: jax.Array, hit: jax.Array,
 def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
                 ids: jax.Array, uni: jax.Array, r0: float | None = None,
                 max_rounds: int = 32, max_cand: int = 1024,
-                n_live=None):
+                n_live=None, alive: jax.Array | None = None):
     """Exact batched kNN against a staged layout.
 
     pts: (Q, 2) query points; canon_tiles/ids: staging from
@@ -146,7 +146,9 @@ def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     refinement box held more than ``max_cand`` candidates (re-run with
     a bigger ``max_cand`` — exactness is flagged, never silently
     lost); rounds counts each query's radius doublings (the deepening
-    cost the initial radius is meant to minimise).
+    cost the initial radius is meant to minimise).  ``alive``: (T, cap)
+    tombstone mask — deleted objects neither count during deepening nor
+    appear as neighbours (pass the matching live ``n_live``).
     """
     q = pts.shape[0]
     diag = jnp.sqrt(jnp.sum((uni[2:] - uni[:2]) ** 2))
@@ -166,8 +168,8 @@ def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     r_cover = jnp.maximum(r_cover, diag * 1e-6)
 
     def counts_at(r):
-        return jnp.sum(rops.probe_counts(_qboxes(pts, r), canon_tiles),
-                       axis=1)
+        return jnp.sum(rops.probe_counts(_qboxes(pts, r), canon_tiles,
+                                         alive=alive), axis=1)
 
     def cond(state):
         r, counts, rounds, i = state
@@ -186,7 +188,8 @@ def batched_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
 
     # refinement: the √2-inflated box provably contains all true kNN
     re = r * jnp.sqrt(jnp.float32(2.0))
-    mask = rops.probe_mask(_qboxes(pts, re), canon_tiles)   # (Q, T, cap)
+    mask = rops.probe_mask(_qboxes(pts, re), canon_tiles,
+                           alive=alive)                     # (Q, T, cap)
     ids_flat = ids.reshape(-1)
     flat = mask.reshape(q, -1) & (ids_flat >= 0)[None, :]
     n_cand = jnp.sum(flat, axis=1, dtype=jnp.int32)
@@ -204,7 +207,8 @@ def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
                excluded: jax.Array, r0: float | None = None,
                max_rounds: int = 32, max_cand: int = 1024,
                n_live=None,
-               chunk_boxes: jax.Array | None = None):
+               chunk_boxes: jax.Array | None = None,
+               alive: jax.Array | None = None):
     """Exact batched kNN probing only each query's candidate tiles.
 
     Same contract as ``batched_knn`` (including ``n_live`` for the
@@ -248,10 +252,11 @@ def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     def counts_at(r):
         qb = _qboxes(pts, r)
         if chunk_boxes is None:
-            return jnp.sum(rops.gathered_counts(qb, canon_tiles, cand),
-                           axis=1)
+            return jnp.sum(rops.gathered_counts(qb, canon_tiles, cand,
+                                                alive=alive), axis=1)
         return jnp.sum(rops.gathered_counts_skip(qb, canon_tiles,
-                                                 chunk_boxes, cand), axis=1)
+                                                 chunk_boxes, cand,
+                                                 alive=alive), axis=1)
 
     def cond(state):
         r, counts, rounds, i = state
@@ -274,7 +279,8 @@ def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
     re = r * jnp.sqrt(jnp.float32(2.0))
     nn_ids, nn_d2, n_cand = knn_partial(pts, canon_tiles, ids, cand, re,
                                         k=k, max_cand=max_cand,
-                                        chunk_boxes=chunk_boxes)
+                                        chunk_boxes=chunk_boxes,
+                                        alive=alive)
     overflow = (n_cand > max_cand) | (excluded <= re)
     return nn_ids, nn_d2, r, overflow, rounds
 
@@ -287,7 +293,8 @@ def pruned_knn(pts: jax.Array, k: int, canon_tiles: jax.Array,
 def knn_partial(pts: jax.Array, canon_tiles: jax.Array, ids: jax.Array,
                 cand: jax.Array, re: jax.Array, k: int,
                 max_cand: int = 1024,
-                chunk_boxes: jax.Array | None = None
+                chunk_boxes: jax.Array | None = None,
+                alive: jax.Array | None = None
                 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Owner-side refinement: local top-k within ``[pt ± re]``.
 
@@ -308,10 +315,11 @@ def knn_partial(pts: jax.Array, canon_tiles: jax.Array, ids: jax.Array,
     """
     q = pts.shape[0]
     if chunk_boxes is None:
-        mask = rops.gathered_mask(_qboxes(pts, re), canon_tiles, cand)
+        mask = rops.gathered_mask(_qboxes(pts, re), canon_tiles, cand,
+                                  alive=alive)
     else:
         mask = rops.gathered_mask_skip(_qboxes(pts, re), canon_tiles,
-                                       chunk_boxes, cand)
+                                       chunk_boxes, cand, alive=alive)
     gids = rops.gathered_ids(ids, cand).reshape(q, -1)
     gboxes = rops.gathered_rows(canon_tiles, cand).reshape(q, -1, 4)
     flat = mask.reshape(q, -1) & (gids >= 0)

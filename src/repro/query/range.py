@@ -82,26 +82,31 @@ def range_query_ref(mbrs: np.ndarray, qboxes: np.ndarray) -> list[np.ndarray]:
 # --------------------------------------------------------------------------
 
 @jax.jit
-def range_counts(qboxes: jax.Array, canon_tiles: jax.Array) -> jax.Array:
+def range_counts(qboxes: jax.Array, canon_tiles: jax.Array,
+                 alive: jax.Array | None = None) -> jax.Array:
     """Exact per-query unique hit counts.
 
     qboxes: (Q, 4); canon_tiles: (T, cap, 4) canonical-copy member boxes
-    (non-canonical slots sentineled) -> (Q,) int32.
+    (non-canonical slots sentineled) -> (Q,) int32.  ``alive``: (T, cap)
+    bool tombstone mask — deleted objects stop answering.
     """
-    return jnp.sum(rops.probe_counts(qboxes, canon_tiles), axis=1)
+    return jnp.sum(rops.probe_counts(qboxes, canon_tiles, alive=alive),
+                   axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("max_hits",))
 def range_ids(qboxes: jax.Array, canon_tiles: jax.Array, ids: jax.Array,
-              max_hits: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+              max_hits: int, alive: jax.Array | None = None
+              ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Exact per-query unique hit-id sets, ascending, padded with -1.
 
     ids: (T, cap) int32 member ids (-1 in padding slots).  Returns
     ``(hit_ids[Q, max_hits], counts[Q], overflow[Q])``; ids beyond
-    ``max_hits`` are dropped and flagged.
+    ``max_hits`` are dropped and flagged.  ``alive`` as in
+    ``range_counts``.
     """
     q = qboxes.shape[0]
-    mask = rops.probe_mask(qboxes, canon_tiles)           # (Q, T, cap)
+    mask = rops.probe_mask(qboxes, canon_tiles, alive=alive)  # (Q, T, cap)
     flat = mask.reshape(q, -1) & (ids.reshape(-1) >= 0)[None, :]
     keyed = jnp.where(flat, ids.reshape(-1)[None, :], _BIG_ID)
     if keyed.shape[1] < max_hits:          # small layout, wide id budget
@@ -120,7 +125,8 @@ def range_ids(qboxes: jax.Array, canon_tiles: jax.Array, ids: jax.Array,
 @jax.jit
 def pruned_range_counts(qboxes: jax.Array, canon_tiles: jax.Array,
                         cand: jax.Array,
-                        chunk_boxes: jax.Array | None = None) -> jax.Array:
+                        chunk_boxes: jax.Array | None = None,
+                        alive: jax.Array | None = None) -> jax.Array:
     """Exact per-query unique hit counts, probing candidate tiles only.
 
     qboxes: (Q, 4); canon_tiles: (T, cap, 4) canonical-copy member
@@ -135,19 +141,21 @@ def pruned_range_counts(qboxes: jax.Array, canon_tiles: jax.Array,
     without overflow loses nothing; padded (-1) candidates gather an
     all-sentinel tile and contribute zero.  Chunk boxes bound their
     chunks' canonical members (a staging invariant), so a skipped
-    chunk provably holds no hit.
+    chunk provably holds no hit.  ``alive``: (T, cap) tombstone mask.
     """
     if chunk_boxes is None:
-        return jnp.sum(rops.gathered_counts(qboxes, canon_tiles, cand),
-                       axis=1)
+        return jnp.sum(rops.gathered_counts(qboxes, canon_tiles, cand,
+                                            alive=alive), axis=1)
     return jnp.sum(rops.gathered_counts_skip(qboxes, canon_tiles,
-                                             chunk_boxes, cand), axis=1)
+                                             chunk_boxes, cand,
+                                             alive=alive), axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("max_hits",))
 def pruned_range_ids(qboxes: jax.Array, canon_tiles: jax.Array,
                      ids: jax.Array, cand: jax.Array, max_hits: int,
-                     chunk_boxes: jax.Array | None = None
+                     chunk_boxes: jax.Array | None = None,
+                     alive: jax.Array | None = None
                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Exact per-query unique hit-id sets from candidate tiles only.
 
@@ -164,10 +172,11 @@ def pruned_range_ids(qboxes: jax.Array, canon_tiles: jax.Array,
     """
     q = qboxes.shape[0]
     if chunk_boxes is None:
-        mask = rops.gathered_mask(qboxes, canon_tiles, cand)  # (Q, F, cap)
+        mask = rops.gathered_mask(qboxes, canon_tiles, cand,
+                                  alive=alive)                # (Q, F, cap)
     else:
         mask = rops.gathered_mask_skip(qboxes, canon_tiles, chunk_boxes,
-                                       cand)
+                                       cand, alive=alive)
     gids = rops.gathered_ids(ids, cand)                    # (Q, F, cap)
     flat = mask.reshape(q, -1) & (gids.reshape(q, -1) >= 0)
     keyed = jnp.where(flat, gids.reshape(q, -1), _BIG_ID)

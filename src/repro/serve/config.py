@@ -30,6 +30,15 @@ names each axis of the design space once:
   (in-process exchange simulation); with a mesh it must equal the mesh
   axis size and may be left ``None``.
 - ``axis`` — the mesh axis name serving shards over.
+- ``compact_dead_frac`` / ``restage_dead_frac`` — the compaction
+  policy for tombstone deletes (``SpatialServer.delete``/``update``).
+  A tile whose dead-slot fraction reaches ``compact_dead_frac`` is
+  compacted in place (slots re-sorted live-first, probe/chunk boxes
+  tightened, pushed as one full-row scatter); when the *global* dead
+  fraction reaches ``restage_dead_frac`` the whole layout re-stages
+  from the live set (also reclaiming non-canonical copies).  Either
+  may be ``None`` to disable that trigger; ``restage_dead_frac``
+  defaults to off because tile-local compaction usually suffices.
 
 The config is frozen and hashable, so a server's serving behaviour is
 one immutable value — loggable, comparable, and usable as a cache key.
@@ -57,6 +66,8 @@ class ServeConfig:
     slack: int = 0
     shards: int | None = None
     axis: str = "d"
+    compact_dead_frac: float | None = 0.5
+    restage_dead_frac: float | None = None
 
     def __post_init__(self):
         if self.placement not in PLACEMENTS:
@@ -80,6 +91,11 @@ class ServeConfig:
         if self.shards is not None and self.placement != "sharded":
             raise ValueError("shards is only meaningful with "
                              "placement='sharded'")
+        for name in ("compact_dead_frac", "restage_dead_frac"):
+            frac = getattr(self, name)
+            if frac is not None and not 0.0 < frac <= 1.0:
+                raise ValueError(f"{name} must be in (0, 1] or None, "
+                                 f"got {frac}")
 
     @property
     def indexed(self) -> bool:

@@ -31,12 +31,17 @@ branch anywhere in the query paths; ``ReplicatedTiles`` and
 owner-routed ``all_to_all`` exchange, ``serve.exchange``).
 
 The dataset *moves*: ``append(mbrs)`` streams new objects into the
-slack slots staging reserved (``config.slack``), refreshing probe and
-chunk boxes incrementally; a tile overflow re-stages the layout at a
-grown capacity (re-balancing owners under sharding) and resets the
-``WidthPolicy``.  Answers after any append sequence are bit-identical
-to re-staging from scratch — and to the dense oracle — because every
-answer is a function of the canonical membership sets alone.
+slack slots staging reserved (``config.slack``), scattering only the
+touched ``(tile, slot)`` cells to device — append cost tracks the
+batch, not the layout; a tile overflow re-stages the layout at a grown
+capacity (re-balancing owners under sharding) and resets the
+``WidthPolicy``.  ``delete(ids)`` tombstones objects by flipping their
+slots' alive bits (``update`` moves them), and the ``ServeConfig``
+compaction policy reclaims dead slots — tile-locally past
+``compact_dead_frac``, by full re-stage past ``restage_dead_frac``.
+Answers after any ingest sequence are bit-identical to re-staging the
+live set from scratch — and to the dense oracle — because every answer
+is a function of the live canonical membership sets alone.
 
 Exactness of the pruned path is never assumed: range candidate lists
 are sized from the batch's true max fan-out, and kNN flags any query
@@ -277,6 +282,40 @@ class SpatialServer:
         report = self.tiles.append(mbrs)
         self.widths.cap = self.stats["t_live"]
         if report["restaged"]:
+            self.widths.reset()
+        return report
+
+    def delete(self, ids) -> dict:
+        """Tombstone objects by id: their slots' alive bits flip off (a
+        few-byte scatter — member boxes stay put as routing supersets)
+        and every query path stops counting them.  Unknown, repeated,
+        or already-deleted ids raise ``ValueError`` naming them.  May
+        trigger the config's compaction policy (``compact_dead_frac`` /
+        ``restage_dead_frac``); the report carries ``deleted``, ``n``,
+        ``dead_frac``, ``compacted_tiles``, ``restaged``.
+        """
+        return self._after_maintenance(self.tiles.delete(ids))
+
+    def update(self, ids, mbrs) -> dict:
+        """Move objects: tombstone each id's current canonical slot and
+        re-insert its new MBR under the same id (delete + append in one
+        scatter).  A tile overflow re-stages like ``append``; otherwise
+        the compaction policy applies as in ``delete``.
+        """
+        return self._after_maintenance(self.tiles.update(ids, mbrs))
+
+    def compact(self) -> dict:
+        """Force tile-local compaction of every tile holding dead
+        slots, regardless of the config thresholds (re-sorts survivors,
+        tightens probe/chunk boxes, zeroes the dead counts)."""
+        return self._after_maintenance(self.tiles.compact())
+
+    def _after_maintenance(self, report: dict) -> dict:
+        """Shared post-ingest bookkeeping: live-tile count may move
+        (compaction empties tiles, re-stage rebuilds them), and a
+        re-stage invalidates the width cache's converged widths."""
+        self.widths.cap = self.stats["t_live"]
+        if report.get("restaged"):
             self.widths.reset()
         return report
 

@@ -101,14 +101,16 @@ def _gather_send(x: jax.Array, slots: jax.Array, pad) -> jax.Array:
 # --------------------------------------------------------------------------
 
 def serve_range_counts(comm: _Comm, q: jax.Array, sl: jax.Array,
-                       sc: jax.Array, tiles: jax.Array,
+                       sc: jax.Array, tiles: jax.Array, alive: jax.Array,
                        cboxes: jax.Array | None = None) -> jax.Array:
     """Sharded exact range counts: scatter -> local probe -> sum merge.
 
     Per-device view: q (Qpd, 4) home query shard, sl (D, M) message
     slots, sc (D, M, Fl) local candidate lists, tiles (Tl, cap, 4)
-    owner shard, cboxes (Tl, C, 4) owner-local chunk boxes or None
-    (selects the chunk-skipping probe — same bits) -> (Qpd,) int32.
+    owner shard, alive (Tl, cap) the owner shard's tombstone mask
+    (dead member slots answer nothing), cboxes (Tl, C, 4) owner-local
+    chunk boxes or None (selects the chunk-skipping probe — same bits)
+    -> (Qpd,) int32.
     """
     d, m = sl.shape[-2], sl.shape[-1]
     fl = sc.shape[-1]
@@ -116,18 +118,19 @@ def serve_range_counts(comm: _Comm, q: jax.Array, sl: jax.Array,
     qs = comm.apply(lambda qq, ss: _gather_send(qq, ss, _SENTINEL), q, sl)
     qr, cr = comm.exchange(qs), comm.exchange(sc)
 
-    def owner_probe(t, cb, qrr, crr):
+    def owner_probe(t, al, cb, qrr, crr):
         return range_mod.pruned_range_counts(
             qrr.reshape(d * m, 4), t, crr.reshape(d * m, fl),
-            chunk_boxes=cb).reshape(d, m)
+            chunk_boxes=cb, alive=al).reshape(d, m)
 
-    pb = comm.exchange(comm.apply(owner_probe, tiles, cboxes, qr, cr))
+    pb = comm.exchange(comm.apply(owner_probe, tiles, alive, cboxes,
+                                  qr, cr))
     return comm.apply(
         lambda p, s: range_mod.merge_owner_counts(p, s, qpd), pb, sl)
 
 
 def serve_range_ids(comm: _Comm, q: jax.Array, sl: jax.Array, sc: jax.Array,
-                    tiles: jax.Array, ids: jax.Array,
+                    tiles: jax.Array, ids: jax.Array, alive: jax.Array,
                     cboxes: jax.Array | None = None, *, max_hits: int,
                     mh_local: int
                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -144,13 +147,14 @@ def serve_range_ids(comm: _Comm, q: jax.Array, sl: jax.Array, sc: jax.Array,
     qs = comm.apply(lambda qq, ss: _gather_send(qq, ss, _SENTINEL), q, sl)
     qr, cr = comm.exchange(qs), comm.exchange(sc)
 
-    def owner_ids(t, i, cb, qrr, crr):
+    def owner_ids(t, i, al, cb, qrr, crr):
         hids, counts, _ = range_mod.pruned_range_ids(
             qrr.reshape(d * m, 4), t, i, crr.reshape(d * m, fl),
-            max_hits=mh_local, chunk_boxes=cb)
+            max_hits=mh_local, chunk_boxes=cb, alive=al)
         return hids.reshape(d, m, mh_local), counts.reshape(d, m)
 
-    pids, pcounts = comm.apply(owner_ids, tiles, ids, cboxes, qr, cr)
+    pids, pcounts = comm.apply(owner_ids, tiles, ids, alive, cboxes,
+                               qr, cr)
     bids, bcounts = comm.exchange(pids), comm.exchange(pcounts)
     return comm.apply(
         lambda pi, pc, s: range_mod.merge_owner_ids(pi, pc, s, qpd, max_hits),
@@ -159,7 +163,8 @@ def serve_range_ids(comm: _Comm, q: jax.Array, sl: jax.Array, sc: jax.Array,
 
 def serve_knn(comm: _Comm, pts: jax.Array, sl: jax.Array, sc: jax.Array,
               dead: jax.Array, tiles: jax.Array, ids: jax.Array,
-              cboxes: jax.Array | None, uni: jax.Array, n_live: jax.Array,
+              alive: jax.Array, cboxes: jax.Array | None, uni: jax.Array,
+              n_live: jax.Array,
               *, k: int, max_cand: int, max_rounds: int = 32
               ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                          jax.Array]:
@@ -199,16 +204,16 @@ def serve_knn(comm: _Comm, pts: jax.Array, sl: jax.Array, sc: jax.Array,
         jnp.maximum(pts[..., 1] - uni[1], uni[3] - pts[..., 1]))
     r_cover = jnp.maximum(r_cover, diag * 1e-6)
 
-    def owner_counts(t, cb, p, c, rad):
+    def owner_counts(t, al, cb, p, c, rad):
         qb = jnp.concatenate([p - rad[..., None], p + rad[..., None]], -1)
         return range_mod.pruned_range_counts(
             qb.reshape(d * m, 4), t, c.reshape(d * m, fl),
-            chunk_boxes=cb).reshape(d, m)
+            chunk_boxes=cb, alive=al).reshape(d, m)
 
     def counts_at(r):
         rr = comm.exchange(comm.apply(
             lambda r_, s: _gather_send(r_, s, jnp.float32(0.0)), r, sl))
-        pb = comm.exchange(comm.apply(owner_counts, tiles, cboxes,
+        pb = comm.exchange(comm.apply(owner_counts, tiles, alive, cboxes,
                                       pr, cr, rr))
         return comm.apply(
             lambda p, s: range_mod.merge_owner_counts(p, s, qpd), pb, sl)
@@ -237,14 +242,16 @@ def serve_knn(comm: _Comm, pts: jax.Array, sl: jax.Array, sc: jax.Array,
     rr = comm.exchange(comm.apply(
         lambda r_, s: _gather_send(r_, s, jnp.float32(0.0)), re, sl))
 
-    def owner_refine(t, i, cb, p, c, rad):
+    def owner_refine(t, i, al, cb, p, c, rad):
         nn_i, nn_d, nc = knn_mod.knn_partial(
             p.reshape(d * m, 2), t, i, c.reshape(d * m, fl),
-            rad.reshape(d * m), k=k, max_cand=max_cand, chunk_boxes=cb)
+            rad.reshape(d * m), k=k, max_cand=max_cand, chunk_boxes=cb,
+            alive=al)
         return (nn_i.reshape(d, m, k), nn_d.reshape(d, m, k),
                 nc.reshape(d, m))
 
-    pid, pd2, pnc = comm.apply(owner_refine, tiles, ids, cboxes, pr, cr, rr)
+    pid, pd2, pnc = comm.apply(owner_refine, tiles, ids, alive, cboxes,
+                               pr, cr, rr)
     bid, bd2, bnc = (comm.exchange(pid), comm.exchange(pd2),
                      comm.exchange(pnc))
     nn_ids, nn_d2 = comm.apply(
@@ -258,13 +265,13 @@ def serve_knn(comm: _Comm, pts: jax.Array, sl: jax.Array, sc: jax.Array,
 
 def serve_knn_unindexed(comm: _Comm, pts: jax.Array, sl: jax.Array,
                         sc: jax.Array, dead: jax.Array, tiles: jax.Array,
-                        ids: jax.Array, uni: jax.Array, n_live: jax.Array,
-                        **static):
+                        ids: jax.Array, alive: jax.Array, uni: jax.Array,
+                        n_live: jax.Array, **static):
     """``serve_knn`` without the local-index chunk shards — the oracle
     arg order (no ``cboxes`` slot), so the ``local_index="off"`` server
     can build the step with one fewer sharded input."""
-    return serve_knn(comm, pts, sl, sc, dead, tiles, ids, None, uni,
-                     n_live, **static)
+    return serve_knn(comm, pts, sl, sc, dead, tiles, ids, alive, None,
+                     uni, n_live, **static)
 
 
 # --------------------------------------------------------------------------

@@ -32,11 +32,32 @@ tile count, and ``append(mbrs)`` inserts new objects into that slack —
 host-side mirrors are updated incrementally (probe boxes and chunk
 boxes union the new member MBRs, so routing and chunk skipping stay
 exact) and pushed to the device without re-tracing any serving step.
-The device refresh re-uploads the full mirrors (O(T·cap) per append —
-the shapes compiled steps already expect); a device-side ``.at[]``
-scatter of only the touched slots would cut that to O(M) and is the
-known follow-up, but the host mirrors stay the source of truth either
-way.
+The device refresh is an **O(M) scatter**: the mutation paths emit a
+*scatter plan* — the touched ``(tile, slot)`` cells with their box /
+id / alive values, the touched probe rows and chunk cells, plus full
+rows for compacted tiles — and ``_scatter(plan)`` pushes exactly those
+bytes with ``.at[]`` updates (replicated on ``ReplicatedTiles``;
+owner-local under a mesh on ``ShardedTiles``, where a cached
+``shard_map`` step keeps each device's own writes and ``mode="drop"``s
+the rest, so no cross-device traffic moves).  Transfer cost is
+proportional to the batch, never to T·cap; the host mirrors stay the
+source of truth.
+
+**Tombstone deletes and updates**: every slot carries an *alive* bit
+(``StagedLayout.alive``) — True iff the slot holds a live canonical
+member; initial staging sets it to the canonical mask.  ``delete(ids)``
+flips only those bits (the smallest possible scatter) and leaves box
+data in place: probe and chunk boxes stay exact *supersets*, so
+routing is unchanged while the alive mask — threaded through all four
+probe-kernel families — removes dead members from every answer.
+``update(ids, mbrs)`` is a tombstone of the old canonical slots plus a
+slack insert of the new MBRs under the same ids.  Dead slots are
+reclaimed by **compaction**: when a tile's dead fraction reaches
+``config.compact_dead_frac`` its slots are rebuilt live-first in local
+sort order (probe row and chunk boxes tighten back to the live set)
+and pushed as one full-row scatter; ``config.restage_dead_frac`` on
+the *global* dead fraction escalates to a full re-stage, which also
+reclaims the non-canonical copies tile-local compaction leaves behind.
 A tile overflow triggers a **re-stage**: the layout is rebuilt from the
 accumulated dataset at a grown capacity (same ``Partitioning``, fresh
 sort + chunk boxes), owners re-balance under sharding
@@ -105,6 +126,12 @@ class StagedLayout:
                   members in slots [c·128, (c+1)·128) — sentinel where
                   a chunk holds none, so the ``*_skip`` probe kernels
                   skip it outright
+    alive       : (T, cap) bool — slot holds a *live* canonical member.
+                  Initial staging sets it to the canonical mask;
+                  tombstone deletes flip bits off in place.  Threaded
+                  into every probe kernel so dead members stop
+                  answering while their (stale, still-superset) probe
+                  and chunk boxes keep routing exact
     uni         : (4,) dataset universe
     """
 
@@ -114,13 +141,14 @@ class StagedLayout:
     tile_boxes: jax.Array
     probe_boxes: jax.Array
     chunk_boxes: jax.Array | None
+    alive: jax.Array
     uni: jax.Array
 
 
 jax.tree_util.register_dataclass(
     StagedLayout,
     data_fields=("tiles", "ids", "canon_tiles", "tile_boxes",
-                 "probe_boxes", "chunk_boxes", "uni"),
+                 "probe_boxes", "chunk_boxes", "alive", "uni"),
     meta_fields=())
 
 
@@ -133,6 +161,8 @@ class ShardedLayout:
                    device's tile count) — device-sharded when a mesh is
                    given, so per-device memory is O(total/D)
     id_shards    : (D, T_local, cap) int32 member ids (-1 padding)
+    alive_shards : (D, T_local, cap) bool per-shard alive mask (see
+                   ``StagedLayout.alive``; False in padding rows)
     chunk_shards : (D, T_local, C, 4) per-shard local index (chunk
                    boxes in owner-local tile rows; None when staged
                    with ``local_index="off"``)
@@ -150,6 +180,7 @@ class ShardedLayout:
 
     canon_shards: jax.Array
     id_shards: jax.Array
+    alive_shards: jax.Array
     chunk_shards: jax.Array | None
     probe_boxes: jax.Array
     chunk_boxes: jax.Array | None
@@ -245,7 +276,8 @@ def _local_sort_order(canon_tiles: jax.Array, ids: jax.Array, mode: str,
 
 
 def stage_tiles(parts: api.Partitioning, mbrs: jax.Array,
-                config: ServeConfig | None = None
+                config: ServeConfig | None = None,
+                ids: jax.Array | None = None
                 ) -> tuple[StagedLayout, dict]:
     """MASJ-stage ``mbrs`` under ``parts`` per ``config``.
 
@@ -255,6 +287,12 @@ def stage_tiles(parts: api.Partitioning, mbrs: jax.Array,
     staged data's max tile count plus ``config.slack`` reserved append
     slots, 128-aligned; an explicit capacity is used as given (its
     headroom over the max count *is* the slack).
+
+    ``ids`` (optional, (N,) int32) assigns explicit object ids instead
+    of ``0..N-1`` — the re-stage path of a layout that has seen deletes
+    passes the surviving ids here, so the running id numbering (and
+    therefore every query answer) survives re-staging a live set with
+    holes in it.
 
     ``config.local_index`` other than ``"off"`` builds the intra-tile
     local index: each tile's slots are permuted canonical-first by the
@@ -285,7 +323,9 @@ def stage_tiles(parts: api.Partitioning, mbrs: jax.Array,
 
     sentinel = jnp.asarray(_SENTINEL)
     tiles = jnp.where(mask[..., None], mbrs[members], sentinel)
-    ids = jnp.where(mask, members, -1).astype(jnp.int32)
+    obj_ids = (jnp.arange(n, dtype=jnp.int32) if ids is None
+               else jnp.asarray(ids, jnp.int32))
+    ids = jnp.where(mask, obj_ids[members], -1).astype(jnp.int32)
 
     # canonical mark: first copy of each id in tile-major order wins,
     # so every object has exactly one canonical slot
@@ -319,9 +359,13 @@ def stage_tiles(parts: api.Partitioning, mbrs: jax.Array,
          jnp.max(canon_tiles[..., 2:], axis=1)], axis=-1)
 
     tile_boxes = jnp.where(parts.valid[:, None], parts.boxes, sentinel)
+    # a freshly staged layout has no tombstones: alive == canonical mask
+    # (serving always passes the mask, so the very first delete changes
+    # only array *values* — no executor ever re-traces for it)
+    alive = canon_tiles[..., 0] < 1e9
     layout = StagedLayout(tiles=tiles, ids=ids, canon_tiles=canon_tiles,
                           tile_boxes=tile_boxes, probe_boxes=probe_boxes,
-                          chunk_boxes=chunk_boxes, uni=uni)
+                          chunk_boxes=chunk_boxes, alive=alive, uni=uni)
     stats = dict(
         n=n, t=int(parts.k()), cap=capacity,
         # tiles holding >= 1 canonical member: the widest candidate list
@@ -337,6 +381,7 @@ def stage_tiles(parts: api.Partitioning, mbrs: jax.Array,
 
 
 def _scatter_shards(canon_np: np.ndarray, ids_np: np.ndarray,
+                    alive_np: np.ndarray,
                     chunk_np: np.ndarray | None, owner: np.ndarray,
                     local: np.ndarray, t_local: int, d: int,
                     mesh: Mesh | None, axis: str):
@@ -347,8 +392,10 @@ def _scatter_shards(canon_np: np.ndarray, ids_np: np.ndarray,
     cap = ids_np.shape[1]
     canon_sh = np.broadcast_to(_SENTINEL, (d, t_local, cap, 4)).copy()
     ids_sh = np.full((d, t_local, cap), -1, np.int32)
+    alive_sh = np.zeros((d, t_local, cap), bool)
     canon_sh[owner, local] = canon_np
     ids_sh[owner, local] = ids_np
+    alive_sh[owner, local] = alive_np
     cb_sh = None
     if chunk_np is not None:
         c = chunk_np.shape[1]
@@ -358,8 +405,10 @@ def _scatter_shards(canon_np: np.ndarray, ids_np: np.ndarray,
         sharding = NamedSharding(mesh, P(axis))
         return (jax.device_put(canon_sh, sharding),
                 jax.device_put(ids_sh, sharding),
+                jax.device_put(alive_sh, sharding),
                 None if cb_sh is None else jax.device_put(cb_sh, sharding))
     return (jnp.asarray(canon_sh), jnp.asarray(ids_sh),
+            jnp.asarray(alive_sh),
             None if cb_sh is None else jnp.asarray(cb_sh))
 
 
@@ -382,21 +431,25 @@ def shard_staged(layout: StagedLayout, stats: dict, n_shards: int,
     """
     canon_np = np.asarray(layout.canon_tiles)
     ids_np = np.asarray(layout.ids)
+    alive_np = np.asarray(layout.alive)
     chunk_np = (None if layout.chunk_boxes is None
                 else np.asarray(layout.chunk_boxes))
     d = max(1, int(n_shards))
     member_counts = (ids_np >= 0).sum(axis=1).astype(np.float64)
     owner, local, t_local, pstats = placement.shard_tiles(
         member_counts, d, prev_owner=prev_owner)
-    canon_shards, id_shards, chunk_shards = _scatter_shards(
-        canon_np, ids_np, chunk_np, owner, local, t_local, d, mesh, axis)
+    canon_shards, id_shards, alive_shards, chunk_shards = _scatter_shards(
+        canon_np, ids_np, alive_np, chunk_np, owner, local, t_local, d,
+        mesh, axis)
     slayout = ShardedLayout(canon_shards=canon_shards, id_shards=id_shards,
+                            alive_shards=alive_shards,
                             chunk_shards=chunk_shards,
                             probe_boxes=layout.probe_boxes,
                             chunk_boxes=layout.chunk_boxes, uni=layout.uni,
                             owner=owner, local=local)
     stats = dict(stats, shards=d, t_local=t_local,
-                 shard_bytes=(canon_shards.nbytes + id_shards.nbytes) // d,
+                 shard_bytes=(canon_shards.nbytes + id_shards.nbytes
+                              + alive_shards.nbytes) // d,
                  placement_skew=pstats["skew"])
     if "moved" in pstats:
         stats["moved_tiles"] = pstats["moved"]
@@ -486,10 +539,12 @@ class TileLayout(Protocol):
     vector; ``knn_attempt`` routes its own MINDIST frontier at width
     ``f`` (one rung of the server's widen-and-retry ladder) and returns
     the excluded distance the exactness check needs.  The ``dense_*``
-    trio is the all-tile oracle.  ``append`` is the streaming
-    lifecycle: insert into slack, refresh probe/chunk boxes, re-stage
-    (re-balancing owners under sharding) on tile overflow — mutating
-    ``stats`` in place (``SpatialServer`` shares the dict).
+    trio is the all-tile oracle.  ``append`` / ``delete`` / ``update``
+    / ``compact`` are the ingest lifecycle: slack inserts, tombstones,
+    and slot reclamation, each pushed to the device as an O(M) scatter
+    — re-staging (which re-balances owners under sharding) on tile
+    overflow or past ``restage_dead_frac`` — mutating ``stats`` in
+    place (``SpatialServer`` shares the dict).
     """
 
     parts: api.Partitioning
@@ -511,6 +566,12 @@ class TileLayout(Protocol):
 
     def append(self, mbrs) -> dict: ...
 
+    def delete(self, ids) -> dict: ...
+
+    def update(self, ids, mbrs) -> dict: ...
+
+    def compact(self) -> dict: ...
+
     def range_counts(self, qboxes, cand, costs): ...
 
     def range_ids(self, qboxes, cand, costs, max_hits: int): ...
@@ -524,13 +585,66 @@ class TileLayout(Protocol):
     def dense_knn(self, pts, k: int, max_cand: int): ...
 
 
+def _fmt_ids(arr) -> str:
+    """Name the offending ids in an ingest error (first few + count)."""
+    vals = ", ".join(str(int(i)) for i in arr[:8])
+    if arr.size > 8:
+        vals += f", ... ({int(arr.size)} total)"
+    return vals
+
+
+def _pad_pow2(idx: np.ndarray, *vals: np.ndarray):
+    """Pad a scatter's leading dim to the next power of two by
+    repeating the last entry.  Duplicate writes of an identical value
+    are harmless, and size-bucketed shapes bound the eager scatter's
+    recompiles to one per bucket instead of one per distinct batch
+    size (the sharded owner scatter buckets the same way)."""
+    k = idx.shape[0]
+    kb = 1 << max(0, (k - 1).bit_length())
+    if kb == k:
+        return (idx, *vals)
+    pad = kb - k
+    return tuple(np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+                 for a in (idx, *vals))
+
+
+def _merge_plans(a: dict, b: dict) -> dict:
+    """Concatenate two scatter plans key-wise.  Entries are
+    ``(index, values)`` pairs except ``"uni"`` (replace — later plan
+    wins) and ``"rows"`` (whole-row rewrites; at most one producer per
+    batch)."""
+    out = dict(a)
+    for key, val in b.items():
+        if key not in out:
+            out[key] = val
+        elif key in ("uni", "rows"):
+            out[key] = val
+        else:
+            ia, va = out[key]
+            ib, vb = val
+            out[key] = (np.concatenate([ia, ib]), np.concatenate([va, vb]))
+    return out
+
+
 class _TilesBase:
-    """Shared staging mirrors + the streaming append lifecycle.
+    """Shared staging mirrors + the streaming ingest lifecycle.
 
     Subclasses implement ``_install(layout)`` (full install: build the
     device-resident arrays from a fresh ``StagedLayout``) and
-    ``_install_incremental()`` (refresh device arrays from the mutated
-    host mirrors after a slack insert — same shapes, no re-trace).
+    ``_scatter(plan)`` (O(M) device refresh: push only the touched
+    cells/rows of the mutated host mirrors — same shapes, no re-trace
+    — returning the bytes transferred).
+
+    A *scatter plan* is a dict of optional entries, all host numpy:
+
+    - ``"boxes"`` / ``"ids"`` / ``"alive"``: ``((K, 2) [tile, slot]
+      cells, (K, ...) values)`` per-slot writes into
+      canon_tiles/ids/alive
+    - ``"probe"``: ``((P,) rows, (P, 4) boxes)`` probe-row writes
+    - ``"chunk"``: ``((C, 2) [tile, chunk] cells, (C, 4) boxes)``
+    - ``"uni"``: ``(4,)`` replacement universe
+    - ``"rows"``: full-row rewrites from compaction — ``dict(rows,
+      boxes, ids, alive, probe, chunk)`` with leading dim R
     """
 
     mode = "base"
@@ -546,24 +660,42 @@ class _TilesBase:
                           if mesh is not None else 1)
         self._steps: dict = {}
         layout, stats = stage_tiles(parts, mbrs, config)
+        self._n_total = stats["n"]      # running id numbering (never
+        # decremented: deleted ids stay burned, appends continue past)
         self.stats = dict(stats, placement=config.placement,
-                          probe=config.probe, restages=0)
+                          probe=config.probe, restages=0, compactions=0,
+                          n_total=self._n_total)
         self._mirror(layout)
         self._install(layout)
 
-    # -- host mirrors (the append path's source of truth) ---------------
+    # -- host mirrors (the ingest path's source of truth) ---------------
 
     def _mirror(self, layout: StagedLayout) -> None:
         # np.array (not asarray): jax buffers surface as read-only
-        # views, and the append path mutates these in place
+        # views, and the ingest paths mutate these in place
         self._canon_np = np.array(layout.canon_tiles)
         self._ids_np = np.array(layout.ids)
         self._tb_np = np.array(layout.tile_boxes)
         self._probe_np = np.array(layout.probe_boxes)
         self._chunk_np = (None if layout.chunk_boxes is None
                           else np.array(layout.chunk_boxes))
+        self._alive_np = np.array(layout.alive)
         self._uni_np = np.array(layout.uni)
         self._fill = (self._ids_np >= 0).sum(axis=1).astype(np.int64)
+        # tombstone bookkeeping: per-tile dead canonical slots (feeds
+        # the compaction trigger) and the id -> (tile, slot) canonical
+        # placement + liveness maps the delete/update paths index by id.
+        # A fresh layout stages live objects only, so dead counts are 0
+        # and ids absent from the staging are exactly the deleted ones.
+        self._dead = np.zeros(self._ids_np.shape[0], np.int64)
+        cmask = self._canon_np[..., 0] < 1e9
+        tt, ss = np.nonzero(cmask)
+        idv = self._ids_np[tt, ss]
+        self._canon_slot = np.full((self._n_total, 2), -1, np.int64)
+        self._canon_slot[idv, 0] = tt
+        self._canon_slot[idv, 1] = ss
+        self._live_np = np.zeros(self._n_total, bool)
+        self._live_np[idv] = True
         # the slack a re-stage must re-reserve: the configured value, or
         # the headroom an explicit capacity carried (its excess over the
         # hottest tile IS the user's slack policy — a re-stage must not
@@ -577,20 +709,29 @@ class _TilesBase:
         """Insert new objects into the staged layout (see module doc).
 
         mbrs: (M, 4) f32 new object MBRs; ids continue the running
-        numbering (the first appended object is id ``n``).  Returns an
-        append report: ``appended``, ``restaged`` (a tile overflowed
-        and the layout was rebuilt at a grown capacity), the new ``n``
-        and ``cap``, and ``free_slots_min`` (the tightest tile's
+        numbering (the first appended object is id ``n_total``).
+        Returns an append report: ``appended``, ``restaged`` (a tile
+        overflowed and the layout was rebuilt at a grown capacity), the
+        new ``n`` / ``n_total`` / ``cap``, ``bytes_transferred`` (the
+        O(M) scatter's device upload — or the full re-upload when a
+        re-stage fired), and ``free_slots_min`` (the tightest tile's
         remaining slack).  Mutates ``stats`` in place.
         """
         new = np.asarray(mbrs, np.float32).reshape(-1, 4)
         m = new.shape[0]
         if m == 0:
             return dict(appended=0, restaged=False, n=self.stats["n"],
-                        cap=self.stats["cap"],
+                        n_total=self._n_total, cap=self.stats["cap"],
+                        bytes_transferred=0,
                         free_slots_min=int(self.stats["cap"]
                                            - self._fill.max()))
-        start_n = self.stats["n"]
+        n_before = self.stats["n"]
+        new_ids = np.arange(self._n_total, self._n_total + m,
+                            dtype=np.int32)
+        self._n_total += m
+        self._live_np = np.concatenate([self._live_np, np.ones(m, bool)])
+        self._canon_slot = np.concatenate(
+            [self._canon_slot, np.full((m, 2), -1, np.int64)])
         hit = np.asarray(membership(self.parts, jnp.asarray(new)))
         need = self._fill + hit.sum(axis=0)
         restaged = bool(need.max() > self.stats["cap"])
@@ -598,23 +739,156 @@ class _TilesBase:
             over = int((need > self.stats["cap"]).sum())
             log.info("append overflow: %d tile(s) past capacity %d — "
                      "re-staging %d objects", over, self.stats["cap"],
-                     start_n + m)
-            self._restage(new)
+                     n_before + m)
+            nbytes = self._restage(new, new_ids)
         else:
-            self._insert(new, hit, start_n)
-            self._install_incremental()
-        self.stats["n"] = start_n + m
+            nbytes = self._scatter(self._insert(new, hit, new_ids))
+        self.stats["n"] = n_before + m
+        self.stats["n_total"] = self._n_total
         self.stats["t_live"] = int(
             (self._probe_np[:, 0] <= self._probe_np[:, 2]).sum())
         self.stats["replication"] = (float(self._fill.sum())
                                      / self.stats["n"] - 1.0)
         return dict(appended=m, restaged=restaged, n=self.stats["n"],
-                    cap=self.stats["cap"],
+                    n_total=self._n_total, cap=self.stats["cap"],
+                    bytes_transferred=nbytes,
                     free_slots_min=int(self.stats["cap"]
                                        - self._fill.max()))
 
+    def delete(self, ids) -> dict:
+        """Tombstone-delete objects by id (see module doc).
+
+        Flips the canonical slots' alive bits — the device refresh is a
+        K-bool scatter; box data stays in place, so probe and chunk
+        boxes remain exact supersets.  Raises ``ValueError`` naming the
+        offending ids on an unknown id, an id repeated within the
+        batch, or an already-deleted id (mirroring the staging-overflow
+        contract: ingest never silently drops or double-counts).
+        Returns a report (``deleted``, ``compacted_tiles``,
+        ``restaged``, ``dead_frac``, ``bytes_transferred``, new ``n``)
+        and mutates ``stats`` in place.
+        """
+        req = np.asarray(ids).reshape(-1).astype(np.int64)
+        m = int(req.size)
+        report = dict(deleted=m, restaged=False, compacted_tiles=0)
+        if m == 0:
+            return self._maintain({}, report)
+        self._check_ids(req, "delete")
+        ts = self._canon_slot[req]
+        self._alive_np[ts[:, 0], ts[:, 1]] = False
+        self._live_np[req] = False
+        np.add.at(self._dead, ts[:, 0], 1)
+        self.stats["n"] -= m
+        return self._maintain({"alive": (ts.copy(), np.zeros(m, bool))},
+                              report)
+
+    def update(self, ids, mbrs) -> dict:
+        """Update objects' MBRs in place: tombstone the old canonical
+        slots, then slack-insert the new MBRs under the *same* ids (so
+        answers referencing the objects keep their identity).  The same
+        id-validation contract as ``delete`` applies; a tile overflow
+        re-stages exactly like ``append``.  Returns a report and
+        mutates ``stats`` in place."""
+        req = np.asarray(ids).reshape(-1).astype(np.int64)
+        new = np.asarray(mbrs, np.float32).reshape(-1, 4)
+        if int(req.size) != new.shape[0]:
+            raise ValueError("update ids/mbrs length mismatch: "
+                             f"{int(req.size)} ids, {new.shape[0]} MBRs")
+        m = int(req.size)
+        report = dict(updated=m, restaged=False, compacted_tiles=0)
+        if m == 0:
+            return self._maintain({}, report)
+        self._check_ids(req, "update")
+        ts = self._canon_slot[req]
+        self._alive_np[ts[:, 0], ts[:, 1]] = False
+        np.add.at(self._dead, ts[:, 0], 1)
+        plan = {"alive": (ts.copy(), np.zeros(m, bool))}
+        hit = np.asarray(membership(self.parts, jnp.asarray(new)))
+        need = self._fill + hit.sum(axis=0)
+        if bool(need.max() > self.stats["cap"]):
+            log.info("update overflow: re-staging %d objects",
+                     self.stats["n"])
+            nbytes = self._restage(new, req.astype(np.int32))
+            report.update(restaged=True, dead_frac=0.0, n=self.stats["n"],
+                          n_total=self._n_total, bytes_transferred=nbytes)
+            return report
+        plan = _merge_plans(plan,
+                            self._insert(new, hit, req.astype(np.int32)))
+        return self._maintain(plan, report)
+
+    def compact(self) -> dict:
+        """Force tile-local slot reclamation of *every* tile holding
+        dead slots, regardless of ``config.compact_dead_frac`` (the
+        threshold-triggered path runs automatically inside
+        ``delete``/``update``)."""
+        report = dict(restaged=False, compacted_tiles=0)
+        tl = np.flatnonzero(self._dead > 0)
+        plan: dict = {}
+        if tl.size:
+            plan = self._compact_tiles(tl, plan)
+            report["compacted_tiles"] = int(tl.size)
+            self.stats["compactions"] += int(tl.size)
+        nbytes = self._scatter(plan)
+        self.stats["t_live"] = int(
+            (self._probe_np[:, 0] <= self._probe_np[:, 2]).sum())
+        report.update(n=self.stats["n"], n_total=self._n_total,
+                      dead_frac=0.0, bytes_transferred=nbytes)
+        return report
+
+    def _check_ids(self, req: np.ndarray, verb: str) -> None:
+        bad = np.unique(req[(req < 0) | (req >= self._n_total)])
+        if bad.size:
+            raise ValueError(
+                f"{verb} of unknown id(s): {_fmt_ids(bad)} — known ids "
+                f"are 0..{self._n_total - 1}")
+        uniq, cnt = np.unique(req, return_counts=True)
+        dup = uniq[cnt > 1]
+        if dup.size:
+            raise ValueError(
+                f"{verb} batch repeats id(s): {_fmt_ids(dup)}")
+        dead = np.unique(req[~self._live_np[req]])
+        if dead.size:
+            raise ValueError(
+                f"{verb} of already-deleted id(s): {_fmt_ids(dead)}")
+
+    def _maintain(self, plan: dict, report: dict) -> dict:
+        """Apply the compaction policy to a finished mutation, then
+        push its scatter plan: a global dead fraction at
+        ``config.restage_dead_frac`` escalates to a full re-stage
+        (reclaiming non-canonical copies too); otherwise tiles whose
+        dead fraction reaches ``config.compact_dead_frac`` are
+        compacted tile-locally and ride along as full-row scatters."""
+        cfg = self.config
+        total_dead = int(self._dead.sum())
+        dead_frac = total_dead / max(total_dead + self.stats["n"], 1)
+        if (cfg.restage_dead_frac is not None and total_dead
+                and self.stats["n"] > 0
+                and dead_frac >= cfg.restage_dead_frac):
+            nbytes = self._restage(None, None)
+            report.update(restaged=True, dead_frac=0.0,
+                          n=self.stats["n"], n_total=self._n_total,
+                          bytes_transferred=nbytes)
+            return report
+        if cfg.compact_dead_frac is not None and total_dead:
+            frac = self._dead / np.maximum(self._fill, 1)
+            tl = np.flatnonzero((self._dead > 0)
+                                & (frac >= cfg.compact_dead_frac))
+            if tl.size:
+                plan = self._compact_tiles(tl, plan)
+                report["compacted_tiles"] = int(tl.size)
+                self.stats["compactions"] += int(tl.size)
+        nbytes = self._scatter(plan)
+        self.stats["t_live"] = int(
+            (self._probe_np[:, 0] <= self._probe_np[:, 2]).sum())
+        total_dead = int(self._dead.sum())
+        report.update(
+            n=self.stats["n"], n_total=self._n_total,
+            dead_frac=total_dead / max(total_dead + self.stats["n"], 1),
+            bytes_transferred=nbytes)
+        return report
+
     def _insert(self, new: np.ndarray, hit: np.ndarray,
-                start_n: int) -> None:
+                new_ids: np.ndarray) -> dict:
         """Slack-slot insert (host mirrors): each new object lands in
         every member tile's next free slot — live slots stay a prefix
         (a staging invariant of every sort mode) — with its canonical
@@ -628,16 +902,23 @@ class _TilesBase:
         the hit matrix offset by the current fill (the same rank trick
         as ``assign_from_hit``), and the box unions are ``ufunc.at``
         scatter-reductions — a bulk append costs numpy passes, not
-        M·(1+λ) interpreter iterations.
+        M·(1+λ) interpreter iterations.  Returns the scatter plan for
+        the touched cells (the O(M) device refresh).
         """
         rank = np.cumsum(hit, axis=0) - 1                   # (M, T)
         oi, ti = np.nonzero(hit)                            # row-major:
         s = (self._fill[ti] + rank[oi, ti]).astype(np.int64)  # oi sorted
-        self._ids_np[ti, s] = start_n + oi
+        ids_v = new_ids[oi].astype(np.int32)
+        self._ids_np[ti, s] = ids_v
         first = np.r_[True, oi[1:] != oi[:-1]]     # lowest member tile
-        self._canon_np[ti, s] = np.where(first[:, None], new[oi],
-                                         _SENTINEL[None, :])
+        boxes_v = np.where(first[:, None], new[oi],
+                           _SENTINEL[None, :]).astype(np.float32)
+        self._canon_np[ti, s] = boxes_v
+        self._alive_np[ti, s] = first
         tc, sc, boxes = ti[first], s[first], new[oi[first]]
+        self._canon_slot[ids_v[first], 0] = tc
+        self._canon_slot[ids_v[first], 1] = sc
+        self._live_np[ids_v[first]] = True
         np.minimum.at(self._probe_np[:, 0], tc, boxes[:, 0])
         np.minimum.at(self._probe_np[:, 1], tc, boxes[:, 1])
         np.maximum.at(self._probe_np[:, 2], tc, boxes[:, 2])
@@ -653,36 +934,143 @@ class _TilesBase:
             [np.minimum(self._uni_np[:2], new[:, :2].min(axis=0)),
              np.maximum(self._uni_np[2:], new[:, 2:].max(axis=0))]
         ).astype(np.float32)
+        cells = np.stack([ti, s], axis=1)
+        prows = np.unique(tc)
+        plan = {
+            "boxes": (cells, boxes_v),
+            "ids": (cells, ids_v),
+            "alive": (cells, first.copy()),
+            "probe": (prows, self._probe_np[prows].copy()),
+            "uni": self._uni_np,
+        }
+        if self._chunk_np is not None:
+            ccells = np.unique(np.stack([tc, sc // rops.CHUNK], axis=1),
+                               axis=0)
+            plan["chunk"] = (ccells,
+                             self._chunk_np[ccells[:, 0],
+                                            ccells[:, 1]].copy())
+        return plan
 
-    def _dataset_np(self) -> np.ndarray:
-        """The accumulated dataset, reconstructed from the canonical
-        host mirrors: every object has exactly one canonical slot (a
-        staging invariant ``_insert`` preserves), so scattering
-        canonical boxes by id rebuilds the (N, 4) input — appends
-        included, in arrival order, since ids are the running
-        numbering — without a second host copy of the data."""
-        out = np.empty((self.stats["n"], 4), np.float32)
-        live = self._canon_np[..., 0] < 1e9        # canonical slots only
-        out[self._ids_np[live]] = self._canon_np[live]
-        return out
+    def _compact_tiles(self, tl: np.ndarray, plan: dict) -> dict:
+        """Tile-local slot reclamation: rebuild each tile's slots from
+        its live members — surviving canonical slots lead in local sort
+        order, then the non-canonical copies of still-live ids; dead
+        canonical slots and copies of dead ids are dropped.  (Stale
+        non-canonical copies of *updated* objects persist until a
+        re-stage — they are answer-irrelevant, since serving probes
+        canonical data only.)  Probe rows and chunk boxes tighten back
+        to the surviving canonical members.  Mutates the host mirrors
+        and appends one full-row scatter entry per tile to ``plan``."""
+        cap = self._ids_np.shape[1]
+        mode = self.config.local_index
+        rows, rb, ri, ra, rp = [], [], [], [], []
+        rc = [] if self._chunk_np is not None else None
+        for t in tl.tolist():
+            ids_row = self._ids_np[t]
+            occ = ids_row >= 0
+            cmask = self._canon_np[t, :, 0] < 1e9
+            live_id = np.zeros(cap, bool)
+            live_id[occ] = self._live_np[ids_row[occ]]
+            cidx = np.flatnonzero(self._alive_np[t])
+            ncidx = np.flatnonzero(occ & ~cmask & live_id)
+            if cidx.size and mode == "x":
+                cidx = cidx[np.argsort(self._canon_np[t, cidx, 0],
+                                       kind="stable")]
+            elif cidx.size and mode == "hilbert":
+                b = self._canon_np[t, cidx]
+                keys = np.asarray(hilbert_ops.hilbert_keys(
+                    jnp.asarray((b[:, :2] + b[:, 2:]) * 0.5),
+                    jnp.asarray(self._uni_np)))
+                cidx = cidx[np.argsort(keys, kind="stable")]
+            nk, nc = cidx.size, ncidx.size
+            new_ids = np.full(cap, -1, np.int32)
+            new_canon = np.broadcast_to(_SENTINEL, (cap, 4)).copy()
+            new_alive = np.zeros(cap, bool)
+            new_ids[:nk] = ids_row[cidx]
+            new_ids[nk:nk + nc] = ids_row[ncidx]
+            new_canon[:nk] = self._canon_np[t, cidx]
+            new_alive[:nk] = True
+            self._ids_np[t] = new_ids
+            self._canon_np[t] = new_canon
+            self._alive_np[t] = new_alive
+            self._canon_slot[new_ids[:nk], 0] = t
+            self._canon_slot[new_ids[:nk], 1] = np.arange(nk)
+            self._fill[t] = nk + nc
+            self._dead[t] = 0
+            self._probe_np[t] = (np.concatenate(
+                [new_canon[:nk, :2].min(axis=0),
+                 new_canon[:nk, 2:].max(axis=0)]) if nk else _SENTINEL)
+            rows.append(t)
+            rb.append(new_canon)
+            ri.append(new_ids)
+            ra.append(new_alive)
+            rp.append(self._probe_np[t].copy())
+            if rc is not None:
+                self._chunk_np[t] = self._chunk_row(new_canon)
+                rc.append(self._chunk_np[t].copy())
+        plan = dict(plan)
+        plan["rows"] = dict(
+            rows=np.asarray(rows, np.int64), boxes=np.stack(rb),
+            ids=np.stack(ri), alive=np.stack(ra), probe=np.stack(rp),
+            chunk=None if rc is None else np.stack(rc))
+        return plan
 
-    def _restage(self, extra: np.ndarray) -> None:
-        """Rebuild the staging from the accumulated dataset plus the
-        not-yet-inserted ``extra`` batch at a grown capacity
+    def _chunk_row(self, canon_row: np.ndarray) -> np.ndarray:
+        """One tile's chunk boxes from its (cap, 4) canonical slots —
+        the numpy mirror of ``_chunk_summary`` for compaction."""
+        chunk = self.config.chunk
+        cap = canon_row.shape[0]
+        g = -(-cap // chunk)
+        pad = g * chunk - cap
+        if pad:
+            canon_row = np.concatenate(
+                [canon_row, np.broadcast_to(_SENTINEL, (pad, 4))])
+        grp = canon_row.reshape(g, chunk, 4)
+        boxes = np.concatenate(
+            [grp[..., :2].min(axis=1), grp[..., 2:].max(axis=1)], axis=-1)
+        c128 = -(-cap // rops.CHUNK)
+        return np.repeat(boxes, chunk // rops.CHUNK,
+                         axis=0)[:c128].astype(np.float32)
+
+    def _dataset_np(self) -> tuple[np.ndarray, np.ndarray]:
+        """The *live* dataset ``(boxes, ids)``, read straight off the
+        alive slots: every live object has exactly one alive canonical
+        slot (an invariant every ingest path preserves), and deleted
+        ids simply never appear — a re-stage of this pair reproduces
+        the live membership sets exactly."""
+        live = self._alive_np
+        return (self._canon_np[live].astype(np.float32),
+                self._ids_np[live].astype(np.int32))
+
+    def _restage(self, extra: np.ndarray | None,
+                 extra_ids: np.ndarray | None = None) -> int:
+        """Rebuild the staging from the live dataset plus the
+        not-yet-inserted ``extra`` batch at a fresh capacity
         (``capacity=None`` re-sizes from the new max tile count +
         slack), refresh mirrors and device arrays, and bump the step
         generation so no cached executor can serve stale shapes.
-        Subclass ``_install`` re-balances owners under sharding."""
-        data = np.concatenate([self._dataset_np(), extra], axis=0)
+        Reclaims every tombstoned slot (canonical and copies).
+        Subclass ``_install`` re-balances owners under sharding.
+        Returns the full re-upload's byte count."""
+        boxes, ids = self._dataset_np()
+        if extra is not None and len(extra):
+            boxes = np.concatenate([boxes, extra], axis=0)
+            ids = np.concatenate([ids, np.asarray(extra_ids, np.int32)])
         layout, stats = stage_tiles(
-            self.parts, jnp.asarray(data),
-            self.config.replace(capacity=None, slack=self._eff_slack))
+            self.parts, jnp.asarray(boxes),
+            self.config.replace(capacity=None, slack=self._eff_slack),
+            ids=jnp.asarray(ids))
         for key in ("n", "t", "cap", "t_live", "chunks", "replication"):
             self.stats[key] = stats[key]
         self.stats["restages"] += 1
         self._steps.clear()     # shapes changed: no stale executor survives
         self._mirror(layout)
         self._install(layout)
+        nbytes = int(layout.canon_tiles.nbytes + layout.ids.nbytes
+                     + layout.alive.nbytes)
+        if layout.chunk_boxes is not None:
+            nbytes += int(layout.chunk_boxes.nbytes)
+        return nbytes
 
     # -- shared accessors ------------------------------------------------
 
@@ -722,16 +1110,61 @@ class ReplicatedTiles(_TilesBase):
             layout = jax.tree.map(lambda a: jax.device_put(a, rep), layout)
         self.staged = layout
 
-    def _install_incremental(self) -> None:
-        self._install(StagedLayout(
-            tiles=None,
-            ids=jnp.asarray(self._ids_np),
-            canon_tiles=jnp.asarray(self._canon_np),
-            tile_boxes=jnp.asarray(self._tb_np),
-            probe_boxes=jnp.asarray(self._probe_np),
-            chunk_boxes=(None if self._chunk_np is None
-                         else jnp.asarray(self._chunk_np)),
-            uni=jnp.asarray(self._uni_np)))
+    def _scatter(self, plan: dict) -> int:
+        """O(M) device refresh: ``.at[]``-scatter only the touched
+        cells/rows of the mutated host mirrors into the resident
+        staging (plan arrays are device_put replicated under a mesh).
+        Returns the bytes uploaded — proportional to the plan, never
+        to T·cap."""
+        if not plan:
+            return 0
+        lay = self.staged
+        rep = (NamedSharding(self.mesh, P())
+               if self.mesh is not None else None)
+        nbytes = 0
+
+        def put(x):
+            nonlocal nbytes
+            a = jnp.asarray(x)
+            nbytes += a.nbytes
+            return a if rep is None else jax.device_put(a, rep)
+
+        canon, ids, alive = lay.canon_tiles, lay.ids, lay.alive
+        probe, cbx, uni = lay.probe_boxes, lay.chunk_boxes, lay.uni
+        if "boxes" in plan:
+            idx, vals = _pad_pow2(*plan["boxes"])
+            canon = canon.at[put(idx[:, 0]), put(idx[:, 1])].set(put(vals))
+        if "ids" in plan:
+            idx, vals = _pad_pow2(*plan["ids"])
+            ids = ids.at[put(idx[:, 0]), put(idx[:, 1])].set(put(vals))
+        if "alive" in plan:
+            idx, vals = _pad_pow2(*plan["alive"])
+            alive = alive.at[put(idx[:, 0]), put(idx[:, 1])].set(put(vals))
+        if "probe" in plan:
+            rows, vals = _pad_pow2(*plan["probe"])
+            probe = probe.at[put(rows)].set(put(vals))
+        if "chunk" in plan and cbx is not None:
+            idx, vals = _pad_pow2(*plan["chunk"])
+            cbx = cbx.at[put(idx[:, 0]), put(idx[:, 1])].set(put(vals))
+        if "uni" in plan:
+            uni = put(plan["uni"])
+        if "rows" in plan:
+            e = plan["rows"]
+            rws, bx, iv, al, pr = _pad_pow2(e["rows"], e["boxes"],
+                                            e["ids"], e["alive"],
+                                            e["probe"])
+            rows = put(rws)
+            canon = canon.at[rows].set(put(bx))
+            ids = ids.at[rows].set(put(iv))
+            alive = alive.at[rows].set(put(al))
+            probe = probe.at[rows].set(put(pr))
+            if e["chunk"] is not None and cbx is not None:
+                _, ck = _pad_pow2(e["rows"], e["chunk"])
+                cbx = cbx.at[rows].set(put(ck))
+        self.staged = dataclasses.replace(
+            lay, canon_tiles=canon, ids=ids, alive=alive,
+            probe_boxes=probe, chunk_boxes=cbx, uni=uni)
+        return int(nbytes)
 
     # -- accessors -------------------------------------------------------
 
@@ -798,12 +1231,14 @@ class ReplicatedTiles(_TilesBase):
         lay = self.staged
         cb = lay.chunk_boxes
         f = cand.shape[1]
-        consts = (lay.canon_tiles,) + (() if cb is None else (cb,))
+        consts = (lay.canon_tiles, lay.alive) + (() if cb is None
+                                                 else (cb,))
         if cb is None:
-            fn = lambda qs, cd, ct: range_mod.pruned_range_counts(qs, ct, cd)
+            fn = lambda qs, cd, ct, al: range_mod.pruned_range_counts(
+                qs, ct, cd, alive=al)
         else:
-            fn = lambda qs, cd, ct, cbx: range_mod.pruned_range_counts(
-                qs, ct, cd, chunk_boxes=cbx)
+            fn = lambda qs, cd, ct, al, cbx: range_mod.pruned_range_counts(
+                qs, ct, cd, chunk_boxes=cbx, alive=al)
         counts, pstats = self._call(
             ("range_counts_pruned", cb is not None), fn,
             (qboxes, cand), costs,
@@ -814,13 +1249,14 @@ class ReplicatedTiles(_TilesBase):
         lay = self.staged
         cb = lay.chunk_boxes
         f = cand.shape[1]
-        consts = (lay.canon_tiles, lay.ids) + (() if cb is None else (cb,))
+        consts = (lay.canon_tiles, lay.ids, lay.alive) + (
+            () if cb is None else (cb,))
         if cb is None:
-            fn = lambda qs, cd, ct, ii: range_mod.pruned_range_ids(
-                qs, ct, ii, cd, max_hits)
+            fn = lambda qs, cd, ct, ii, al: range_mod.pruned_range_ids(
+                qs, ct, ii, cd, max_hits, alive=al)
         else:
-            fn = lambda qs, cd, ct, ii, cbx: range_mod.pruned_range_ids(
-                qs, ct, ii, cd, max_hits, chunk_boxes=cbx)
+            fn = lambda qs, cd, ct, ii, al, cbx: range_mod.pruned_range_ids(
+                qs, ct, ii, cd, max_hits, chunk_boxes=cbx, alive=al)
         (hit_ids, counts, overflow), pstats = self._call(
             ("range_ids_pruned", max_hits, cb is not None), fn,
             (qboxes, cand), costs,
@@ -836,16 +1272,17 @@ class ReplicatedTiles(_TilesBase):
         cand, dist, excl = router.candidate_knn(lay.probe_boxes, pts, f)
         # n_live rides along as a traced scalar, NOT a static baked into
         # the step: appends change n every batch and must not re-trace
-        consts = (lay.canon_tiles, lay.ids, lay.uni,
+        consts = (lay.canon_tiles, lay.ids, lay.alive, lay.uni,
                   jnp.int32(n_live)) + (() if cb is None else (cb,))
         if cb is None:
-            fn = lambda qs, cd, ex, ct, ii, un, nl: knn_mod.pruned_knn(
+            fn = lambda qs, cd, ex, ct, ii, al, un, nl: knn_mod.pruned_knn(
                 qs, k, ct, ii, un, cd, ex, max_cand=max_cand,
-                n_live=nl)
+                n_live=nl, alive=al)
         else:
-            fn = lambda qs, cd, ex, ct, ii, un, nl, cbx: knn_mod.pruned_knn(
-                qs, k, ct, ii, un, cd, ex, max_cand=max_cand,
-                n_live=nl, chunk_boxes=cbx)
+            fn = (lambda qs, cd, ex, ct, ii, al, un, nl, cbx:
+                  knn_mod.pruned_knn(
+                      qs, k, ct, ii, un, cd, ex, max_cand=max_cand,
+                      n_live=nl, chunk_boxes=cbx, alive=al))
         (nn_ids, nn_d2, radius, overflow, rounds), pstats = self._call(
             ("knn_pruned", k, max_cand, cb is not None), fn,
             (pts, cand, excl),
@@ -862,18 +1299,19 @@ class ReplicatedTiles(_TilesBase):
         lay = self.staged
         counts, pstats = self._call(
             ("range_counts_dense",),
-            lambda qs, ct: range_mod.range_counts(qs, ct),
+            lambda qs, ct, al: range_mod.range_counts(qs, ct, al),
             (qboxes,), np.ones(qboxes.shape[0], np.float64),
-            (_SENTINEL,), (lay.canon_tiles,))
+            (_SENTINEL,), (lay.canon_tiles, lay.alive))
         return jnp.asarray(counts), pstats
 
     def dense_range_ids(self, qboxes, max_hits: int):
         lay = self.staged
         (hit_ids, counts, overflow), pstats = self._call(
             ("range_ids_dense", max_hits),
-            lambda qs, ct, ii: range_mod.range_ids(qs, ct, ii, max_hits),
+            lambda qs, ct, ii, al: range_mod.range_ids(
+                qs, ct, ii, max_hits, al),
             (qboxes,), np.ones(qboxes.shape[0], np.float64),
-            (_SENTINEL,), (lay.canon_tiles, lay.ids))
+            (_SENTINEL,), (lay.canon_tiles, lay.ids, lay.alive))
         return (jnp.asarray(hit_ids), jnp.asarray(counts),
                 jnp.asarray(overflow), pstats)
 
@@ -883,10 +1321,12 @@ class ReplicatedTiles(_TilesBase):
         pad_pt = np.asarray((self._uni_np[:2] + self._uni_np[2:]) * 0.5)
         (nn_ids, nn_d2, radius, overflow, rounds), pstats = self._call(
             ("knn_dense", k, max_cand),
-            lambda qs, ct, ii, un, nl: knn_mod.batched_knn(
-                qs, k, ct, ii, un, max_cand=max_cand, n_live=nl),
+            lambda qs, ct, ii, al, un, nl: knn_mod.batched_knn(
+                qs, k, ct, ii, un, max_cand=max_cand, n_live=nl,
+                alive=al),
             (pts,), np.ones(pts.shape[0], np.float64), (pad_pt,),
-            (lay.canon_tiles, lay.ids, lay.uni, jnp.int32(n_live)))
+            (lay.canon_tiles, lay.ids, lay.alive, lay.uni,
+             jnp.int32(n_live)))
         return nn_ids, nn_d2, overflow, dict(
             rounds=int(np.asarray(rounds).max(initial=0)), **pstats)
 
@@ -939,22 +1379,134 @@ class ShardedTiles(_TilesBase):
                 self.stats[key] = stats[key]
         self._oracle_jax = None
 
-    def _install_incremental(self) -> None:
-        """Re-scatter the mutated host mirrors into the existing
-        owner/local placement (slack inserts never move tiles)."""
+    def _owner_scatter(self, arr, t_idx, slot_idx, vals):
+        """Owner-local scatter into a (D, T_local, ...) shard array at
+        global tiles ``t_idx`` — per-slot when ``slot_idx`` is given,
+        whole rows otherwise.  In-process this is a plain ``.at[]``
+        update on translated (owner, local) coordinates; under a mesh
+        it runs as a cached ``shard_map`` step in which each device
+        keeps only its own tiles' writes (non-owned rows index out of
+        bounds and ``mode="drop"``), so the update is SPMD with zero
+        cross-device traffic.  Plan sizes bucket up to the next power
+        of two (padding rows carry owner -1, which no device claims) to
+        bound the number of step retraces."""
         s = self.slayout
-        canon_shards, id_shards, chunk_shards = _scatter_shards(
-            self._canon_np, self._ids_np, self._chunk_np, s.owner,
-            s.local, int(self.stats["t_local"]), self.shards, self.mesh,
-            self.axis)
-        self.slayout = ShardedLayout(
-            canon_shards=canon_shards, id_shards=id_shards,
-            chunk_shards=chunk_shards,
-            probe_boxes=jnp.asarray(self._probe_np),
-            chunk_boxes=(None if self._chunk_np is None
-                         else jnp.asarray(self._chunk_np)),
-            uni=jnp.asarray(self._uni_np), owner=s.owner, local=s.local)
+        o = s.owner[t_idx].astype(np.int32)
+        l = s.local[t_idx].astype(np.int32)
+        vals = np.ascontiguousarray(vals)
+        if self.mesh is None:
+            if slot_idx is None:
+                return arr.at[jnp.asarray(o), jnp.asarray(l)].set(
+                    jnp.asarray(vals))
+            return arr.at[jnp.asarray(o), jnp.asarray(l),
+                          jnp.asarray(slot_idx, np.int32)].set(
+                jnp.asarray(vals))
+        k = len(o)
+        kb = 1 << max(0, (k - 1).bit_length())
+        pad = kb - k
+        o = np.concatenate([o, np.full(pad, -1, np.int32)])
+        l = np.concatenate([l, np.zeros(pad, np.int32)])
+        sl = (None if slot_idx is None else np.concatenate(
+            [np.asarray(slot_idx, np.int32), np.zeros(pad, np.int32)]))
+        vals = np.concatenate(
+            [vals, np.zeros((pad,) + vals.shape[1:], vals.dtype)])
+        key = ("owner_scatter", slot_idx is not None, kb, arr.shape,
+               str(vals.dtype))
+        step = self._steps.get(key)
+        if step is None:
+            axis = self.axis
+            if slot_idx is not None:
+                def spmd(a, o_, l_, s_, v):
+                    row = jnp.where(o_ == jax.lax.axis_index(axis), l_,
+                                    a.shape[1])
+                    return a.at[0, row, s_].set(v, mode="drop")
+                in_specs = (P(axis), P(), P(), P(), P())
+            else:
+                def spmd(a, o_, l_, v):
+                    row = jnp.where(o_ == jax.lax.axis_index(axis), l_,
+                                    a.shape[1])
+                    return a.at[0, row].set(v, mode="drop")
+                in_specs = (P(axis), P(), P(), P())
+            step = jax.jit(shard_map(spmd, mesh=self.mesh,
+                                     in_specs=in_specs,
+                                     out_specs=P(axis), check_vma=False))
+            self._steps[key] = step
+        args = (arr, jnp.asarray(o), jnp.asarray(l)) + (
+            () if sl is None else (jnp.asarray(sl),)) + (jnp.asarray(vals),)
+        return step(*args)
+
+    def _scatter(self, plan: dict) -> int:
+        """O(M) device refresh of the sharded staging: owner-local
+        ``.at[]`` scatters for the shard arrays plus plain updates for
+        the small replicated routing index (probe/chunk boxes, uni).
+        Returns the bytes uploaded."""
+        if not plan:
+            return 0
+        s = self.slayout
+        nbytes = 0
+
+        def count(*arrs):
+            nonlocal nbytes
+            for a in arrs:
+                nbytes += np.asarray(a).nbytes
+
+        canon_sh, id_sh = s.canon_shards, s.id_shards
+        alive_sh, chunk_sh = s.alive_shards, s.chunk_shards
+        probe, cbx, uni = s.probe_boxes, s.chunk_boxes, s.uni
+        if "boxes" in plan:
+            idx, vals = plan["boxes"]
+            canon_sh = self._owner_scatter(canon_sh, idx[:, 0],
+                                           idx[:, 1], vals)
+            count(idx, vals)
+        if "ids" in plan:
+            idx, vals = plan["ids"]
+            id_sh = self._owner_scatter(id_sh, idx[:, 0], idx[:, 1], vals)
+            count(idx, vals)
+        if "alive" in plan:
+            idx, vals = plan["alive"]
+            alive_sh = self._owner_scatter(alive_sh, idx[:, 0],
+                                           idx[:, 1], vals)
+            count(idx, vals)
+        if "probe" in plan:
+            rows, vals = plan["probe"]
+            probe = probe.at[jnp.asarray(rows)].set(jnp.asarray(vals))
+            count(rows, vals)
+        if "chunk" in plan:
+            idx, vals = plan["chunk"]
+            if chunk_sh is not None:
+                # chunk cells share a tile: scatter each (tile, chunk)
+                # cell through the owner map as a slot-indexed write
+                chunk_sh = self._owner_scatter(chunk_sh, idx[:, 0],
+                                               idx[:, 1], vals)
+            if cbx is not None:
+                cbx = cbx.at[jnp.asarray(idx[:, 0]),
+                             jnp.asarray(idx[:, 1])].set(jnp.asarray(vals))
+            count(idx, vals, idx, vals)
+        if "uni" in plan:
+            uni = jnp.asarray(plan["uni"])
+            count(plan["uni"])
+        if "rows" in plan:
+            e = plan["rows"]
+            rows = e["rows"]
+            canon_sh = self._owner_scatter(canon_sh, rows, None, e["boxes"])
+            id_sh = self._owner_scatter(id_sh, rows, None, e["ids"])
+            alive_sh = self._owner_scatter(alive_sh, rows, None, e["alive"])
+            probe = probe.at[jnp.asarray(rows)].set(jnp.asarray(e["probe"]))
+            count(rows, e["boxes"], e["ids"], e["alive"], e["probe"])
+            if e["chunk"] is not None:
+                if chunk_sh is not None:
+                    chunk_sh = self._owner_scatter(chunk_sh, rows, None,
+                                                   e["chunk"])
+                if cbx is not None:
+                    cbx = cbx.at[jnp.asarray(rows)].set(
+                        jnp.asarray(e["chunk"]))
+                count(e["chunk"])
+        self.slayout = dataclasses.replace(
+            s, canon_shards=canon_sh, id_shards=id_sh,
+            alive_shards=alive_sh, chunk_shards=chunk_sh,
+            probe_boxes=probe, chunk_boxes=cbx, uni=uni)
         self._oracle_jax = None
+        return int(nbytes)
 
     # -- accessors -------------------------------------------------------
 
@@ -977,13 +1529,14 @@ class ShardedTiles(_TilesBase):
         return int(s.canon_shards.nbytes + s.id_shards.nbytes) \
             // self.shards
 
-    def _oracle(self) -> tuple[jax.Array, jax.Array]:
+    def _oracle(self) -> tuple[jax.Array, jax.Array, jax.Array]:
         """Dense single-device staging for the ``probe="dense"`` oracle
         — staged to the default device on first use (debug/validation
         path; the sharded executors never need it)."""
         if self._oracle_jax is None:
             self._oracle_jax = (jnp.asarray(self._canon_np),
-                                jnp.asarray(self._ids_np))
+                                jnp.asarray(self._ids_np),
+                                jnp.asarray(self._alive_np))
         return self._oracle_jax
 
     # -- exchange plumbing -----------------------------------------------
@@ -1021,9 +1574,10 @@ class ShardedTiles(_TilesBase):
         extra = (self.slayout.chunk_shards,) if li else ()
         step = self._exchange_step(
             ("s_range_counts", qp.shape[1], ss.shape[2], sc.shape[3], li),
-            exchange.serve_range_counts, n_sharded=4 + len(extra))
+            exchange.serve_range_counts, n_sharded=5 + len(extra))
         out = step(self._put(qp), self._put(ss), self._put(sc),
-                   self.slayout.canon_shards, *extra)
+                   self.slayout.canon_shards, self.slayout.alive_shards,
+                   *extra)
         counts = _unpack_rows(out, slots, qboxes.shape[0])
         return jnp.asarray(counts), dict(shards=self.shards, **xstats)
 
@@ -1037,11 +1591,11 @@ class ShardedTiles(_TilesBase):
         step = self._exchange_step(
             ("s_range_ids", qp.shape[1], ss.shape[2], sc.shape[3],
              max_hits, mh_local, li),
-            exchange.serve_range_ids, n_sharded=5 + len(extra),
+            exchange.serve_range_ids, n_sharded=6 + len(extra),
             max_hits=max_hits, mh_local=mh_local)
         out = step(self._put(qp), self._put(ss), self._put(sc),
                    self.slayout.canon_shards, self.slayout.id_shards,
-                   *extra)
+                   self.slayout.alive_shards, *extra)
         n_q = qboxes.shape[0]
         hit_ids, counts, overflow = (
             _unpack_rows(x, slots, n_q) for x in out)
@@ -1066,12 +1620,12 @@ class ShardedTiles(_TilesBase):
         step = self._exchange_step(
             ("s_knn", k, max_cand, pp.shape[1], ss.shape[2],
              sc.shape[3], li),
-            orch, n_sharded=6 + len(extra), n_replicated=2,
+            orch, n_sharded=7 + len(extra), n_replicated=2,
             k=k, max_cand=max_cand)
         out = step(self._put(pp), self._put(ss), self._put(sc),
                    self._put(dead), self.slayout.canon_shards,
-                   self.slayout.id_shards, *extra, self.slayout.uni,
-                   jnp.int32(n_live))
+                   self.slayout.id_shards, self.slayout.alive_shards,
+                   *extra, self.slayout.uni, jnp.int32(n_live))
         nn_ids, nn_d2, radius, overflow, rounds = (
             _unpack_rows(x, slots, n_q) for x in out)
         xstats = dict(xstats, shards=self.shards,
@@ -1081,20 +1635,20 @@ class ShardedTiles(_TilesBase):
     # -- dense oracle ----------------------------------------------------
 
     def dense_range_counts(self, qboxes):
-        canon, _ = self._oracle()
-        return range_mod.range_counts(qboxes, canon), {}
+        canon, _, alive = self._oracle()
+        return range_mod.range_counts(qboxes, canon, alive), {}
 
     def dense_range_ids(self, qboxes, max_hits: int):
-        canon, ids = self._oracle()
+        canon, ids, alive = self._oracle()
         hit_ids, counts, overflow = range_mod.range_ids(
-            qboxes, canon, ids, max_hits)
+            qboxes, canon, ids, max_hits, alive)
         return hit_ids, counts, overflow, {}
 
     def dense_knn(self, pts, k: int, max_cand: int):
-        canon, ids = self._oracle()
+        canon, ids, alive = self._oracle()
         nn_ids, nn_d2, _, overflow, rounds = knn_mod.batched_knn(
             pts, k, canon, ids, jnp.asarray(self._uni_np),
-            max_cand=max_cand, n_live=self.stats["n"])
+            max_cand=max_cand, n_live=self.stats["n"], alive=alive)
         return nn_ids, nn_d2, overflow, dict(
             rounds=int(np.asarray(rounds).max(initial=0)))
 

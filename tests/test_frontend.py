@@ -160,6 +160,53 @@ def test_drr_hot_tenant_cannot_starve_others():
                          "small2": 1, "small3": 1}
 
 
+def test_deadline_close_serves_exhausted_deficit_tenant():
+    """The DRR × deadline interaction: a class queue that is not full
+    must still close at ``max_delay`` even when the hot tenant's
+    rotation turns would exhaust its quantum many times over — and the
+    starved tenant's request rides the same deadline-formed batch
+    (fairness never delays a due close)."""
+    cfg = FrontendConfig(ladder=(8,), max_delay=0.010, quantum=2)
+    plane = RequestPlane(cfg)
+    for _ in range(6):
+        plane.submit(_req(tenant="hog"), now=0.0)
+    plane.submit(_req(tenant="slow"), now=0.002)
+    # 7 < max_batch: nothing closes before the oldest's max_delay
+    assert plane.form_batch(0.009) == (None, [])
+    assert plane.next_due(0.009) == pytest.approx(0.010)
+    batch, expired = plane.form_batch(0.010)
+    assert batch is not None and not expired
+    assert len(batch.requests) == 7
+    # the pop order shows the deficit turns: hog's 2-request quantum,
+    # then slow's turn, then hog drains through repeat rotation visits
+    assert [r.tenant for r in batch.requests] == \
+        ["hog", "hog", "slow", "hog", "hog", "hog", "hog"]
+    assert plane.pending == 0
+
+
+def test_deadline_expiry_inside_exhausted_deficit_batch():
+    """A starved tenant's request whose own deadline lapses while hog
+    turns consumed earlier batches is timed out at pop time — counted,
+    returned separately, never executed — and the deadline-formed
+    batch still carries the live requests."""
+    cfg = FrontendConfig(ladder=(4,), max_delay=0.010, quantum=4)
+    plane = RequestPlane(cfg)
+    for _ in range(4):
+        plane.submit(_req(tenant="hog"), now=0.0)
+    doomed = _req(tenant="slow", deadline=0.004)
+    plane.submit(doomed, now=0.0)
+    batch, expired = plane.form_batch(0.0)   # full: hog's quantum fills
+    assert [r.tenant for r in batch.requests] == ["hog"] * 4
+    assert not expired
+    # slow's lone request is now overdue for the class deadline but
+    # past its own: the close still happens, the request times out
+    assert plane.next_due(0.009) == pytest.approx(0.010)
+    batch, expired = plane.form_batch(0.010)
+    assert batch is None and expired == [doomed]
+    assert plane.metrics.timed_out == 1
+    assert plane.pending == 0
+
+
 def test_drr_rotation_persists_across_batches():
     cfg = FrontendConfig(ladder=(2,), max_delay=0.0, quantum=1)
     plane = RequestPlane(cfg)

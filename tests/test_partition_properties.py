@@ -1,11 +1,21 @@
-"""Hypothesis property tests on partitioner invariants."""
+"""Hypothesis property tests on partitioner invariants.
+
+Local runs without hypothesis skip this module; CI installs hypothesis
+and sets ``REPRO_REQUIRE_HYPOTHESIS=1``, turning a silent skip into a
+hard failure — the property tests must actually run there.
+"""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property tests need the optional hypothesis dep")
+if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+    import hypothesis  # a missing dep is a CI config error, not a skip
+else:
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property tests need the optional hypothesis dep")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import geometry, metrics
