@@ -14,7 +14,13 @@ ingest bar: flat per object, independent of the T×cap layout size) and
 the cost of a forced tile-overflow re-stage.  The
 ``interleaved_stream`` scenario runs a sustained append/delete/update/
 query mix against one server and reports ingest ops/sec and the query
-p50 under churn (with the compaction policy live).
+p50 under churn (with the compaction policy live).  The ``heat_plan``
+rows replay a skewed hotspot stream and compare exchange messages under
+the count-balanced shard plan, after heat-aware co-location of the same
+server, and on a ``placement="heat"`` server (co-location + hot-tile
+replicas) — with bit-identity asserted against the dense reference on
+every leg, and a hard check on ``osm`` that co-location never adds
+exchange traffic.
 
 ``--smoke`` runs a small configuration (CI: exercises the pruned,
 local-index, and sharded paths and the exactness assertions on every
@@ -45,7 +51,7 @@ import numpy as np
 
 from repro.data import spatial_gen
 from repro.query import range as range_mod
-from repro.serve import ServeConfig, SpatialServer
+from repro.serve import PlacementPolicy, ServeConfig, SpatialServer
 
 from .common import emit, timeit, timeit_many
 
@@ -59,6 +65,84 @@ def _qboxes(key, q, scale=0.05):
     c = jax.random.uniform(k1, (q, 2))
     s = jax.random.uniform(k2, (q, 2)) * scale
     return jnp.concatenate([c - s, c + s], axis=-1)
+
+
+def _hot_qboxes(key, q, frac=0.85, hot_scale=0.14, scale=0.05):
+    """Skewed query stream for the heat-placement rows: ``frac`` of the
+    query centres cluster inside one small hotspot patch and carry
+    larger boxes (``hot_scale``), so each hot query's candidates span
+    several tiles — the multi-owner fan-out that co-location + hot-tile
+    replicas exist to collapse.  The rest stay uniform."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    n_hot = int(q * frac)
+    ctr = jax.random.uniform(k1, (2,)) * 0.6 + 0.2
+    c_hot = ctr + (jax.random.uniform(k2, (n_hot, 2)) - 0.5) * 0.2
+    c_cold = jax.random.uniform(k3, (q - n_hot, 2))
+    c = jnp.concatenate([c_hot, c_cold], axis=0)
+    s = jax.random.uniform(k4, (q, 2)) * scale
+    s = s.at[:n_hot].set(
+        jax.random.uniform(jax.random.fold_in(k4, 1), (n_hot, 2))
+        * hot_scale + 0.02)
+    return jnp.concatenate([c - s, c + s], axis=-1)
+
+
+def _heat_experiment(ds, m, mbrs, qb_hot, want_hot, payload, shards,
+                     mesh, smoke) -> dict:
+    """Heat-plan delta on the skewed stream: exchange messages under the
+    count-balanced shard plan, after heat-aware co-location of the same
+    server, and on a fresh ``placement="heat"`` server (co-location +
+    hot-tile replicas).  Every answer must stay bit-identical to the
+    dense reference — placement only moves bytes, never results."""
+    ssrv = SpatialServer.from_method(
+        m, mbrs, payload, ServeConfig(placement="sharded", shards=shards),
+        mesh=mesh)
+    counts, st0 = ssrv.range_counts(qb_hot)
+    assert [int(c) for c in counts] == want_hot, (ds, m, "hot/balanced")
+    for _ in range(4):      # accrue heat through the public batched path
+        ssrv.range_counts(qb_hot)
+    ssrv.rebalance()
+    counts, st1 = ssrv.range_counts(qb_hot)
+    assert [int(c) for c in counts] == want_hot, (ds, m, "hot/colocated")
+    if ds == "osm":     # CI smoke gate: co-location must not add traffic
+        assert st1["messages"] <= st0["messages"], \
+            (m, st0["messages"], st1["messages"])
+
+    top = 2 if smoke else 4
+    hsrv = SpatialServer.from_method(
+        m, mbrs, payload,
+        ServeConfig(placement="heat", shards=shards,
+                    policy=PlacementPolicy(heat_decay=0.9,
+                                           replicate_top=top)),
+        mesh=mesh)
+    for _ in range(5):
+        hsrv.range_counts(qb_hot)
+    t0 = time.perf_counter()
+    rep = hsrv.rebalance()
+    dt_rb = time.perf_counter() - t0
+    counts, st2 = hsrv.range_counts(qb_hot)
+    assert [int(c) for c in counts] == want_hot, (ds, m, "hot/heat")
+    emit(f"heat_plan/{ds}/{m}/d{shards}", dt_rb * 1e6,
+         f"msgs_balanced={st0['messages']}"
+         f";msgs_colocated={st1['messages']}"
+         f";msgs_heat={st2['messages']}"
+         f";replicated={rep['replicated_tiles']}"
+         f";moved={rep['moved_tiles']}"
+         f";imbalance={st0['probe_load_imbalance']:.2f}"
+         f"->{st2['probe_load_imbalance']:.2f}"
+         f";xbytes={st0['exchange_bytes']}->{st2['exchange_bytes']}")
+    return dict(
+        exchange_messages_hot_balanced=int(st0["messages"]),
+        exchange_messages_hot_colocated=int(st1["messages"]),
+        exchange_messages_hot_heat=int(st2["messages"]),
+        exchange_bytes_hot=int(st0["exchange_bytes"]),
+        exchange_bytes_hot_heat=int(st2["exchange_bytes"]),
+        probe_load_imbalance_hot=round(
+            float(st0["probe_load_imbalance"]), 3),
+        probe_load_imbalance_hot_heat=round(
+            float(st2["probe_load_imbalance"]), 3),
+        heat_replicated_tiles=int(rep["replicated_tiles"]),
+        heat_moved_tiles=int(rep["moved_tiles"]),
+        heat_rebalance_ms=round(dt_rb * 1e3, 2))
 
 
 def _interleaved_stream(ds: str, mbrs, qb, payload: int,
@@ -134,6 +218,10 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
         pts = jax.random.uniform(jax.random.PRNGKey(2), (q, 2))
         ref = range_mod.range_query_ref(np.asarray(mbrs), np.asarray(qb))
         want = [len(r) for r in ref]
+        qb_hot = _hot_qboxes(jax.random.PRNGKey(3), q)
+        ref_hot = range_mod.range_query_ref(np.asarray(mbrs),
+                                            np.asarray(qb_hot))
+        want_hot = [len(r) for r in ref_hot]
         for m in METHODS:
             srv = SpatialServer.from_method(m, mbrs, payload, mesh=mesh)
             usrv = SpatialServer.from_method(
@@ -197,15 +285,15 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
             dt_restage = time.perf_counter() - t0
             assert rep["restaged"], (ds, m, "restage")
 
-            # interleaved: the local-vs-unindexed delta is the point of
-            # the comparison, so machine drift must hit both equally
-            us_p, us_u, us_d = timeit_many(
+            # interleaved: the local-vs-unindexed and pruned-vs-sharded
+            # deltas are the point, so machine drift must hit all legs
+            # equally
+            us_p, us_u, us_d, us_s = timeit_many(
                 [lambda: srv.range_counts(qb)[0],
                  lambda: usrv.range_counts(qb)[0],
-                 lambda: srv.range_counts(qb, pruned=False)[0]],
+                 lambda: srv.range_counts(qb, pruned=False)[0],
+                 lambda: ssrv.range_counts(qb)[0]],
                 warmup=1, iters=iters)
-            us_s = timeit(lambda: ssrv.range_counts(qb)[0],
-                          warmup=1, iters=3)
             emit(f"range_serve/{ds}/{m}/q{q}", us_p,
                  f"qps={q / (us_p * 1e-6):.0f}"
                  f";fanout={rstats['fanout_mean']:.2f}"
@@ -218,6 +306,8 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
             emit(f"range_serve_sharded/{ds}/{m}/q{q}/d{shards}", us_s,
                  f"qps={q / (us_s * 1e-6):.0f}"
                  f";msgs={sstats['messages']};f_local={sstats['f_local']}"
+                 f";xbytes={sstats['exchange_bytes']}"
+                 f";imbalance={sstats['probe_load_imbalance']:.2f}"
                  f";dev_bytes={ssrv.resident_tile_bytes()}"
                  f";repl_bytes={srv.resident_tile_bytes()}"
                  f";mem_ratio={srv.resident_tile_bytes() / max(ssrv.resident_tile_bytes(), 1):.2f}")
@@ -258,8 +348,14 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
                 append_restages=int(append_restages),
                 restage_ms=round(dt_restage * 1e3, 2),
                 exchange_messages=int(sstats["messages"]),
+                exchange_bytes=int(sstats["exchange_bytes"]),
+                probe_load_imbalance=round(
+                    float(sstats["probe_load_imbalance"]), 3),
                 shard_bytes_per_device=int(ssrv.resident_tile_bytes()),
             ))
+            rows[-1].update(_heat_experiment(
+                ds, m, mbrs, qb_hot, want_hot, payload, shards, mesh,
+                smoke))
         stream_rows.append(_interleaved_stream(ds, mbrs, qb, payload, smoke))
     if json_out:
         # aggregate the local-vs-unindexed comparison per dataset: the
@@ -280,6 +376,18 @@ def main(smoke: bool = False, json_out: bool = False) -> None:
             summary[f"{ds}_chunk_skip_rate_hilbert_mean"] = round(
                 sum(r["chunk_skip_rate_hilbert"] for r in rows
                     if r["dataset"] == ds) / len(ratios), 4)
+            # geomean exchange-message cut of the heat plan vs the
+            # count-balanced shard plan on the skewed hotspot stream —
+            # the headline number for query-heat-aware placement
+            hratios = [r["exchange_messages_hot_balanced"]
+                       / max(r["exchange_messages_hot_heat"], 1)
+                       for r in rows if r["dataset"] == ds]
+            hprod = 1.0
+            for x in hratios:
+                hprod *= x
+            hgeo = hprod ** (1.0 / len(hratios))
+            summary[f"{ds}_heat_exchange_messages_cut_geomean"] = round(
+                1.0 - 1.0 / hgeo, 4)
         payload_doc = dict(
             bench="serving", smoke=smoke, n_objects=n, batch_queries=q,
             knn_k=k, payload=payload, backend=jax.default_backend(),

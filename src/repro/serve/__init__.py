@@ -9,13 +9,15 @@
   partition fan-out metric, and the host-side owner translation
   (``owner_split``) that re-expresses candidate lists in sharded
   ``(owner device, local tile)`` coordinates.
-- ``layout``: the ``TileLayout`` protocol and its two placements —
-  ``ReplicatedTiles`` (full staging everywhere, queries shard) and
+- ``layout``: the ``TileLayout`` protocol and its three placements —
+  ``ReplicatedTiles`` (full staging everywhere, queries shard),
   ``ShardedTiles`` (tiles shard across owners, queries travel through
-  the exchange) — plus ``stage_tiles`` (MASJ tiles + canonical marks +
-  canonical probe boxes + the configurable intra-tile local index) and
-  the streaming append lifecycle (slack inserts, incremental probe/
-  chunk-box refresh, overflow re-stage with owner re-balancing).
+  the exchange), and ``HeatSharded`` (sharded with query-heat-aware
+  co-location + hot-tile replicas) — plus ``stage_tiles`` (MASJ tiles
+  + canonical marks + canonical probe boxes + the configurable
+  intra-tile local index) and the streaming append lifecycle (slack
+  inserts with dead-slot reuse, incremental probe/chunk-box refresh,
+  overflow re-stage with owner re-balancing).
 - ``engine``: ``SpatialServer`` — routing, LPT query packing, the kNN
   widen-and-retry exactness ladder, and the adaptive ``WidthPolicy``,
   written once against the protocol.
@@ -31,13 +33,14 @@
 See ``docs/ARCHITECTURE.md`` for the full pipeline.
 """
 from . import config, engine, exchange, frontend, layout, router  # noqa: F401
-from .config import ServeConfig  # noqa: F401
+from .config import PlacementPolicy, ServeConfig  # noqa: F401
 from .engine import SpatialServer, WidthPolicy  # noqa: F401
 from .frontend import (  # noqa: F401
     FrontendConfig,
     ServeFrontend,
 )
 from .layout import (  # noqa: F401
+    HeatSharded,
     ReplicatedTiles,
     ShardedLayout,
     ShardedTiles,
@@ -47,3 +50,4 @@ from .layout import (  # noqa: F401
     shard_staged,
     stage_tiles,
 )
+from .router import HeatTracker  # noqa: F401

@@ -39,6 +39,12 @@ names each axis of the design space once:
   from the live set (also reclaiming non-canonical copies).  Either
   may be ``None`` to disable that trigger; ``restage_dead_frac``
   defaults to off because tile-local compaction usually suffices.
+- ``policy`` — a :class:`PlacementPolicy` describing how owner-routed
+  placements follow the query log: the EWMA decay of the router heat
+  tracker, how many of the hottest tiles ``placement="heat"`` keeps
+  resident on a second owner, and (optionally) how often the server
+  re-plans automatically.  Ignored (but still tracked, so a later
+  ``rebalance()`` has data) under ``placement="replicated"``.
 
 The config is frozen and hashable, so a server's serving behaviour is
 one immutable value — loggable, comparable, and usable as a cache key.
@@ -49,9 +55,42 @@ import dataclasses
 
 from ..kernels.range_probe import ops as rops
 
-PLACEMENTS = ("replicated", "sharded")
+PLACEMENTS = ("replicated", "sharded", "heat")
 PROBES = ("pruned", "dense")
 LOCAL_INDEXES = ("off", "x", "hilbert")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPolicy:
+    """How owner-routed placements track query heat.
+
+    - ``heat_decay`` — EWMA decay applied to the per-tile hit counts
+      and the tile-pair co-occurrence sketch once per observed batch:
+      ``heat = decay * heat + hits``.  1.0 never forgets; smaller
+      values track drifting hotspots faster.
+    - ``replicate_top`` — under ``placement="heat"``, how many of the
+      hottest tiles keep a second live copy on another owner.  Each
+      device budgets ``ceil(T/D) + replicate_top`` tile rows, so the
+      sharded-memory story degrades by an explicit, bounded amount.
+    - ``rebalance_every`` — re-plan automatically every N observed
+      query batches (``None`` = only on explicit
+      ``SpatialServer.rebalance()`` calls).
+    """
+
+    heat_decay: float = 0.85
+    replicate_top: int = 0
+    rebalance_every: int | None = None
+
+    def __post_init__(self):
+        if not 0.0 < self.heat_decay <= 1.0:
+            raise ValueError(f"heat_decay must be in (0, 1], "
+                             f"got {self.heat_decay}")
+        if self.replicate_top < 0:
+            raise ValueError(f"replicate_top must be >= 0, "
+                             f"got {self.replicate_top}")
+        if self.rebalance_every is not None and self.rebalance_every < 1:
+            raise ValueError(f"rebalance_every must be >= 1 or None, "
+                             f"got {self.rebalance_every}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +107,7 @@ class ServeConfig:
     axis: str = "d"
     compact_dead_frac: float | None = 0.5
     restage_dead_frac: float | None = None
+    policy: PlacementPolicy = PlacementPolicy()
 
     def __post_init__(self):
         if self.placement not in PLACEMENTS:
@@ -88,9 +128,12 @@ class ServeConfig:
             raise ValueError(f"slack must be >= 0, got {self.slack}")
         if self.shards is not None and self.shards < 1:
             raise ValueError(f"shards must be >= 1, got {self.shards}")
-        if self.shards is not None and self.placement != "sharded":
+        if self.shards is not None and self.placement == "replicated":
             raise ValueError("shards is only meaningful with "
-                             "placement='sharded'")
+                             "placement='sharded' or 'heat'")
+        if not isinstance(self.policy, PlacementPolicy):
+            raise ValueError(f"policy must be a PlacementPolicy, "
+                             f"got {type(self.policy).__name__}")
         for name in ("compact_dead_frac", "restage_dead_frac"):
             frac = getattr(self, name)
             if frac is not None and not 0.0 < frac <= 1.0:

@@ -76,6 +76,7 @@ from ..query import knn as knn_mod
 from . import router
 from .config import ServeConfig
 from .layout import (  # noqa: F401  (re-exports: the staging surface)
+    HeatSharded,
     ReplicatedTiles,
     ShardedLayout,
     ShardedTiles,
@@ -192,6 +193,12 @@ class SpatialServer:
         self.stats = self.tiles.stats      # one dict, shared — appends
         self.stats["method"] = method      # mutate it in place
         self.widths = WidthPolicy(cap=self.stats["t_live"])
+        # query-heat signals for heat-aware placement: every routed
+        # batch's candidate lists fold in (O(Q·F) numpy, no device
+        # work); ``rebalance()`` turns them into a placement plan
+        self.heat = router.HeatTracker(self.stats["t"],
+                                       decay=config.policy.heat_decay)
+        self._batches_since_rebalance = 0
 
     @classmethod
     def from_method(cls, method: str, mbrs: jax.Array, payload: int,
@@ -319,6 +326,33 @@ class SpatialServer:
             self.widths.reset()
         return report
 
+    # -- heat-aware placement ---------------------------------------------
+
+    def rebalance(self) -> dict:
+        """Apply a heat-aware placement plan under traffic.
+
+        Snapshots the heat tracker and hands it to the layout: owners
+        re-plan co-locating co-occurring tiles (move-minimised from the
+        current plan) and, under ``placement="heat"``, the hottest
+        ``config.policy.replicate_top`` tiles refresh their replicas.
+        Tile contents never move logically — answers are bit-identical
+        before and after — only the owner maps and shard scatter
+        change.  No-op report under ``placement="replicated"``.
+        """
+        heat, cooc = self.heat.snapshot()
+        report = self.tiles.rebalance(heat, cooc)
+        self._batches_since_rebalance = 0
+        return report
+
+    def _observe(self, cand) -> None:
+        """Fold one routed batch into the heat tracker; auto-rebalance
+        every ``config.policy.rebalance_every`` observed batches."""
+        self.heat.observe(np.asarray(cand))
+        self._batches_since_rebalance += 1
+        every = self.config.policy.rebalance_every
+        if every is not None and self._batches_since_rebalance >= every:
+            self.rebalance()
+
     # -- routing helpers (host side, per batch) ---------------------------
 
     def _use_pruned(self, pruned: bool | None) -> bool:
@@ -336,6 +370,7 @@ class SpatialServer:
         f = self.widths.at_least("range", floor)
         cand, _, _ = router.candidates_from_overlap(hit, f)
         self.widths.observe("range", f)
+        self._observe(cand)
         return cand, pf.astype(np.float64), f
 
     def _fanout_stats(self, qboxes: jax.Array) -> dict:
@@ -437,6 +472,10 @@ class SpatialServer:
             f = new_f
             retries += 1
         self.widths.observe(wkey, f)
+        # heat sees the *converged* frontier — the tiles this batch
+        # actually probed at its final width
+        cand, _, _ = router.candidate_knn(self.probe_boxes, pts, f)
+        self._observe(cand)
         overflow = np.asarray(overflow) | miss
         return (jnp.asarray(nn_ids), jnp.asarray(nn_d2),
                 jnp.asarray(overflow),

@@ -25,6 +25,16 @@ three moves:
             owner-disjoint, so merged answers are bit-identical to the
             dense single-device oracle.
 
+Under ``serve.layout.HeatSharded`` the same steps serve heat-aware
+placement unchanged: replicated hot tiles occupy extra shard rows past
+``t_local`` as bit-exact copies, and ``router.owner_split`` already
+resolved each candidate to exactly *one* resident copy — whichever
+owner saves a message or carries less probe load — so the tables this
+module consumes still name each candidate once and the owner-disjoint
+merge argument is untouched.  The steps are shape-polymorphic in the
+shard row count and cache across re-plans (``rebalance`` moves owner
+maps, never shard shapes).
+
 kNN deepening is lock-step: the radius state lives at home, each round
 exchanges deepening boxes out and partial unique-counts back, and the
 loop's continue flag is a ``psum``-reduced global — every device runs

@@ -118,6 +118,26 @@ class ServeFrontend:
             "knn", np.asarray(pt, np.float32).reshape(2),
             (int(k), int(max_cand)), tenant, deadline)
 
+    # -- reporting --------------------------------------------------------
+
+    def placement_stats(self) -> dict:
+        """The served placement's heat view, as plain host values: what
+        an operator of the async plane watches to decide (or audit) a
+        ``server.rebalance()`` without reaching into the engine.
+        Traffic through this frontend feeds the tracker exactly like
+        direct batched calls — heat is observed at routing time."""
+        srv = self.server
+        stats = srv.stats
+        out = dict(placement=stats.get("placement"),
+                   shards=getattr(srv, "shards", 1),
+                   heat_batches=srv.heat.batches,
+                   heat_decay=srv.heat.decay)
+        for key in ("replicated_tiles", "moved_tiles", "cut_before",
+                    "cut_after", "placement_skew", "t_local"):
+            if key in stats:
+                out[key] = stats[key]
+        return out
+
     # -- dispatcher -------------------------------------------------------
 
     async def _run(self) -> None:

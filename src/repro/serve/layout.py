@@ -176,6 +176,15 @@ class ShardedLayout:
     owner        : (T,) int32 host map, global tile -> owner device
     local        : (T,) int32 host map, global tile -> row in the
                    owner's shard
+    rep_owner    : (T,) int32 host map, global tile -> device holding
+                   its *replica* (``-1`` = not replicated; ``None``
+                   when staged without hot-tile replication).  Replica
+                   rows live past ``t_local`` in the shard arrays
+                   (rows ``t_local .. t_local + replicate_top``) and
+                   are bit-exact copies of the primary rows — the
+                   exchange may probe a candidate on either owner.
+    rep_local    : (T,) int32 replica shard row (``-1`` / ``None`` as
+                   above)
     """
 
     canon_shards: jax.Array
@@ -187,6 +196,8 @@ class ShardedLayout:
     uni: jax.Array
     owner: np.ndarray
     local: np.ndarray
+    rep_owner: np.ndarray | None = None
+    rep_local: np.ndarray | None = None
 
 
 # --------------------------------------------------------------------------
@@ -412,9 +423,62 @@ def _scatter_shards(canon_np: np.ndarray, ids_np: np.ndarray,
             None if cb_sh is None else jnp.asarray(cb_sh))
 
 
+def _plan_replicas(owner: np.ndarray, score: np.ndarray, t_local: int,
+                   d: int, replicate_top: int,
+                   cooc: np.ndarray | None = None):
+    """Place one replica of each of the ``replicate_top`` hottest tiles
+    on a second owner.  Replica rows occupy shard rows past
+    ``t_local``; each device hosts at most ``replicate_top`` replicas,
+    so the per-device row budget is exactly ``t_local +
+    replicate_top``.  Targets are chosen greedily by descending tile
+    score.  With ``cooc`` observed, the target is the non-primary
+    device holding the most co-occurring traffic (primary tiles plus
+    replicas already placed) — a query whose candidates straddle the
+    primary cut can then resolve all of them on one owner.  Without it
+    (or when no co-occurrence reaches other devices), the target is the
+    least score-loaded device, with loads adjusted as if the replica
+    takes half the tile's traffic — the same split the exchange's
+    least-loaded routing converges to.  Deterministic."""
+    t = owner.shape[0]
+    rep_owner = np.full(t, -1, np.int32)
+    rep_local = np.full(t, -1, np.int32)
+    hot = np.argsort(-score, kind="stable")[:min(replicate_top, t)]
+    dev_load = np.zeros(d, np.float64)
+    np.add.at(dev_load, owner, score)
+    rep_count = np.zeros(d, np.int64)
+    aff = None
+    if cooc is not None:
+        w = np.asarray(cooc, np.float64)
+        w = w + w.T
+        np.fill_diagonal(w, 0.0)
+        onehot = np.zeros((t, d), np.float64)
+        onehot[np.arange(t), owner] = 1.0
+        aff = w @ onehot            # (t, d) co-traffic per device
+    for tt in hot.tolist():
+        open_ = [dv for dv in range(d)
+                 if dv != owner[tt] and rep_count[dv] < replicate_top]
+        if not open_:
+            continue
+        if aff is not None and max(aff[tt, dv] for dv in open_) > 0:
+            dv = max(open_, key=lambda x: (aff[tt, x], -dev_load[x], -x))
+        else:
+            dv = min(open_, key=lambda x: (dev_load[x], x))
+        rep_owner[tt] = dv
+        rep_local[tt] = t_local + rep_count[dv]
+        rep_count[dv] += 1
+        dev_load[dv] += 0.5 * score[tt]
+        dev_load[owner[tt]] -= 0.5 * score[tt]
+        if aff is not None:
+            aff[:, dv] += w[:, tt]  # the replica is now resident on dv
+    return rep_owner, rep_local
+
+
 def shard_staged(layout: StagedLayout, stats: dict, n_shards: int,
                  mesh: Mesh | None = None, axis: str = "d",
-                 prev_owner: np.ndarray | None = None
+                 prev_owner: np.ndarray | None = None,
+                 cooc: np.ndarray | None = None,
+                 heat: np.ndarray | None = None,
+                 replicate_top: int = 0
                  ) -> tuple[ShardedLayout, tuple, dict]:
     """Shard a staged layout's tiles across ``n_shards`` owner devices.
 
@@ -424,6 +488,16 @@ def shard_staged(layout: StagedLayout, stats: dict, n_shards: int,
     per-device shard memory is at most one tile over an even split.
     ``prev_owner`` (a streaming re-balance) adds the moved-tile count
     to the stats.
+
+    The heat-aware extensions (``HeatSharded`` / ``rebalance``):
+    ``cooc`` switches primary placement to the co-locating local search
+    (``placement.colocate_tiles``), and ``replicate_top`` > 0 appends
+    one bit-exact replica of each of the hottest tiles (ranked by
+    ``heat`` when observed, member counts cold) in the shard rows past
+    ``t_local`` — per-device rows are exactly ``t_local +
+    replicate_top`` regardless of how many replicas actually place, so
+    shard shapes (and the cached exchange steps) are stable across
+    re-plans.
 
     Returns ``(ShardedLayout, (canon_np, ids_np), stats)`` — the numpy
     pair is the host-side copy of the *unsharded* canonical staging,
@@ -435,22 +509,50 @@ def shard_staged(layout: StagedLayout, stats: dict, n_shards: int,
     chunk_np = (None if layout.chunk_boxes is None
                 else np.asarray(layout.chunk_boxes))
     d = max(1, int(n_shards))
+    if d == 1:
+        replicate_top = 0      # a second owner needs a second device
     member_counts = (ids_np >= 0).sum(axis=1).astype(np.float64)
     owner, local, t_local, pstats = placement.shard_tiles(
-        member_counts, d, prev_owner=prev_owner)
+        member_counts, d, prev_owner=prev_owner, cooc=cooc)
+    rep_owner = rep_local = None
+    t_rows = t_local
+    n_rep = 0
+    owner_all, local_all = owner, local
+    data = (canon_np, ids_np, alive_np, chunk_np)
+    if replicate_top > 0:
+        score = member_counts
+        if heat is not None and np.any(np.asarray(heat) > 0):
+            score = np.asarray(heat, np.float64)
+        rep_owner, rep_local = _plan_replicas(owner, score, t_local, d,
+                                              int(replicate_top),
+                                              cooc=cooc)
+        t_rows = t_local + int(replicate_top)
+        reps = np.flatnonzero(rep_owner >= 0)
+        n_rep = int(reps.size)
+        if n_rep:
+            owner_all = np.concatenate([owner, rep_owner[reps]])
+            local_all = np.concatenate([local, rep_local[reps]])
+            data = tuple(
+                None if a is None
+                else np.concatenate([a, a[reps]], axis=0)
+                for a in data)
     canon_shards, id_shards, alive_shards, chunk_shards = _scatter_shards(
-        canon_np, ids_np, alive_np, chunk_np, owner, local, t_local, d,
-        mesh, axis)
+        *data, owner_all, local_all, t_rows, d, mesh, axis)
     slayout = ShardedLayout(canon_shards=canon_shards, id_shards=id_shards,
                             alive_shards=alive_shards,
                             chunk_shards=chunk_shards,
                             probe_boxes=layout.probe_boxes,
                             chunk_boxes=layout.chunk_boxes, uni=layout.uni,
-                            owner=owner, local=local)
+                            owner=owner, local=local,
+                            rep_owner=rep_owner, rep_local=rep_local)
     stats = dict(stats, shards=d, t_local=t_local,
                  shard_bytes=(canon_shards.nbytes + id_shards.nbytes
                               + alive_shards.nbytes) // d,
-                 placement_skew=pstats["skew"])
+                 placement_skew=pstats["skew"],
+                 replicated_tiles=n_rep)
+    for key in ("cut_before", "cut_after"):
+        if key in pstats:
+            stats[key] = pstats[key]
     if "moved" in pstats:
         stats["moved_tiles"] = pstats["moved"]
     return slayout, (canon_np, ids_np), stats
@@ -534,7 +636,9 @@ class TileLayout(Protocol):
     placements.
 
     ``mode`` names the routed executor in answer stats (``"pruned"``
-    replicated, ``"sharded"`` owner-routed).  The routed executors take
+    replicated, ``"sharded"`` owner-routed, ``"heat"`` owner-routed
+    with heat-aware co-location + hot-tile replicas).  The routed
+    executors take
     the server's already-routed ``(Q, F)`` candidate lists + LPT cost
     vector; ``knn_attempt`` routes its own MINDIST frontier at width
     ``f`` (one rung of the server's widen-and-retry ladder) and returns
@@ -571,6 +675,8 @@ class TileLayout(Protocol):
     def update(self, ids, mbrs) -> dict: ...
 
     def compact(self) -> dict: ...
+
+    def rebalance(self, heat=None, cooc=None) -> dict: ...
 
     def range_counts(self, qboxes, cand, costs): ...
 
@@ -688,6 +794,11 @@ class _TilesBase:
         # A fresh layout stages live objects only, so dead counts are 0
         # and ids absent from the staging are exactly the deleted ones.
         self._dead = np.zeros(self._ids_np.shape[0], np.int64)
+        # dead-slot free lists: tombstoned canonical slots inserts may
+        # refill before consuming fresh slack (delete/append churn then
+        # stops growing fill between compactions)
+        self._free: dict[int, list[int]] = {}
+        self._n_free = np.zeros(self._ids_np.shape[0], np.int64)
         cmask = self._canon_np[..., 0] < 1e9
         tt, ss = np.nonzero(cmask)
         idv = self._ids_np[tt, ss]
@@ -733,7 +844,7 @@ class _TilesBase:
         self._canon_slot = np.concatenate(
             [self._canon_slot, np.full((m, 2), -1, np.int64)])
         hit = np.asarray(membership(self.parts, jnp.asarray(new)))
-        need = self._fill + hit.sum(axis=0)
+        need = self._fill + np.maximum(hit.sum(axis=0) - self._n_free, 0)
         restaged = bool(need.max() > self.stats["cap"])
         if restaged:
             over = int((need > self.stats["cap"]).sum())
@@ -778,6 +889,7 @@ class _TilesBase:
         self._alive_np[ts[:, 0], ts[:, 1]] = False
         self._live_np[req] = False
         np.add.at(self._dead, ts[:, 0], 1)
+        self._add_free(ts)
         self.stats["n"] -= m
         return self._maintain({"alive": (ts.copy(), np.zeros(m, bool))},
                               report)
@@ -804,7 +916,7 @@ class _TilesBase:
         np.add.at(self._dead, ts[:, 0], 1)
         plan = {"alive": (ts.copy(), np.zeros(m, bool))}
         hit = np.asarray(membership(self.parts, jnp.asarray(new)))
-        need = self._fill + hit.sum(axis=0)
+        need = self._fill + np.maximum(hit.sum(axis=0) - self._n_free, 0)
         if bool(need.max() > self.stats["cap"]):
             log.info("update overflow: re-staging %d objects",
                      self.stats["n"])
@@ -814,6 +926,10 @@ class _TilesBase:
             return report
         plan = _merge_plans(plan,
                             self._insert(new, hit, req.astype(np.int32)))
+        # slots tombstoned *by this call* open for reuse only now: the
+        # insert above must not target them, or its plan cells would
+        # collide with the alive=False tombstone writes in one scatter
+        self._add_free(ts)
         return self._maintain(plan, report)
 
     def compact(self) -> dict:
@@ -834,6 +950,22 @@ class _TilesBase:
         report.update(n=self.stats["n"], n_total=self._n_total,
                       dead_frac=0.0, bytes_transferred=nbytes)
         return report
+
+    def rebalance(self, heat=None, cooc=None) -> dict:
+        """Re-plan placement from query heat.  Replicated tiles have no
+        owners to move, so this is a no-op report; the sharded
+        placements override it."""
+        return dict(placement=self.config.placement, moved_tiles=0,
+                    replicated_tiles=0, bytes_transferred=0)
+
+    def _add_free(self, ts: np.ndarray) -> None:
+        """Open tombstoned canonical (tile, slot) cells for insert
+        reuse (the delete/update paths call this; ``_insert`` drains
+        the lists ascending, ``_compact_tiles`` voids them)."""
+        for t in np.unique(ts[:, 0]):
+            self._free.setdefault(int(t), []).extend(
+                ts[ts[:, 0] == t, 1].tolist())
+        np.add.at(self._n_free, ts[:, 0], 1)
 
     def _check_ids(self, req: np.ndarray, verb: str) -> None:
         bad = np.unique(req[(req < 0) | (req >= self._n_total)])
@@ -898,16 +1030,37 @@ class _TilesBase:
         canonical MBRs (sentinel boxes are min/max-neutral), so routing
         and chunk skipping stay exact without a re-sort.
 
-        Fully vectorised: slot targets are a per-tile rank cumsum over
-        the hit matrix offset by the current fill (the same rank trick
-        as ``assign_from_hit``), and the box unions are ``ufunc.at``
-        scatter-reductions — a bulk append costs numpy passes, not
+        Tombstoned canonical slots refill first: each tile's first
+        ``n_free`` insertions land in its dead slots (ascending slot
+        order) and only the rest extend the fill prefix — dead slots
+        hold stale ids inside the prefix, so overwriting them preserves
+        every staging invariant while delete/append churn stops
+        consuming slack.
+
+        Otherwise fully vectorised: slot targets are a per-tile rank
+        cumsum over the hit matrix offset by the current fill (the same
+        rank trick as ``assign_from_hit``), and the box unions are
+        ``ufunc.at`` scatter-reductions — a bulk append costs numpy
+        passes (plus one small loop over tiles with free slots), not
         M·(1+λ) interpreter iterations.  Returns the scatter plan for
         the touched cells (the O(M) device refresh).
         """
         rank = np.cumsum(hit, axis=0) - 1                   # (M, T)
         oi, ti = np.nonzero(hit)                            # row-major:
-        s = (self._fill[ti] + rank[oi, ti]).astype(np.int64)  # oi sorted
+        r = rank[oi, ti]                                    # oi sorted
+        nf0 = self._n_free[ti]
+        reuse = r < nf0
+        s = np.zeros(ti.shape[0], np.int64)
+        s[~reuse] = self._fill[ti[~reuse]] + (r[~reuse] - nf0[~reuse])
+        if reuse.any():
+            for t in np.unique(ti[reuse]):
+                m_t = reuse & (ti == t)
+                free = sorted(self._free[int(t)])
+                k = int(m_t.sum())
+                s[m_t] = free[:k]       # ascending rank ↔ ascending slot
+                self._free[int(t)] = free[k:]
+                self._n_free[t] -= k
+                self._dead[t] -= k
         ids_v = new_ids[oi].astype(np.int32)
         self._ids_np[ti, s] = ids_v
         first = np.r_[True, oi[1:] != oi[:-1]]     # lowest member tile
@@ -930,6 +1083,9 @@ class _TilesBase:
             np.maximum.at(self._chunk_np[:, :, 2], (tc, cc), boxes[:, 2])
             np.maximum.at(self._chunk_np[:, :, 3], (tc, cc), boxes[:, 3])
         self._fill += hit.sum(axis=0)
+        if reuse.any():                 # reused slots were already filled
+            self._fill -= np.bincount(ti[reuse],
+                                      minlength=self._fill.shape[0])
         self._uni_np = np.concatenate(
             [np.minimum(self._uni_np[:2], new[:, :2].min(axis=0)),
              np.maximum(self._uni_np[2:], new[:, 2:].max(axis=0))]
@@ -997,6 +1153,8 @@ class _TilesBase:
             self._canon_slot[new_ids[:nk], 1] = np.arange(nk)
             self._fill[t] = nk + nc
             self._dead[t] = 0
+            self._free.pop(t, None)     # slots re-packed: stale offsets
+            self._n_free[t] = 0
             self._probe_np[t] = (np.concatenate(
                 [new_canon[:nk, :2].min(axis=0),
                  new_canon[:nk, 2:].max(axis=0)]) if nk else _SENTINEL)
@@ -1355,7 +1513,13 @@ class ShardedTiles(_TilesBase):
                  mesh: Mesh | None):
         self.shards = 0        # set in _install, called by the base ctor
         self._owner = None
+        self._heat = None      # last observed heat/cooc (rebalance
+        self._cooc = None      # feeds them; re-stages re-plan on them)
         super().__init__(parts, mbrs, config, mesh)
+
+    @property
+    def _replicate_top(self) -> int:
+        return 0               # HeatSharded budgets replica rows
 
     def _install(self, layout: StagedLayout) -> None:
         cfg = self.config
@@ -1369,31 +1533,91 @@ class ShardedTiles(_TilesBase):
                     f"{self.shards}")
         slayout, _, stats = shard_staged(
             layout, self.stats, self.shards, mesh=self.mesh,
-            axis=self.axis, prev_owner=self._owner)
+            axis=self.axis, prev_owner=self._owner, cooc=self._cooc,
+            heat=self._heat, replicate_top=self._replicate_top)
         self.slayout = slayout
         self._owner = slayout.owner       # prev_owner for the next
         # re-balance; everything else reads the maps off self.slayout
         for key in ("shards", "t_local", "shard_bytes", "placement_skew",
-                    "moved_tiles"):
+                    "moved_tiles", "replicated_tiles", "cut_before",
+                    "cut_after"):
             if key in stats:
                 self.stats[key] = stats[key]
         self._oracle_jax = None
 
-    def _owner_scatter(self, arr, t_idx, slot_idx, vals):
-        """Owner-local scatter into a (D, T_local, ...) shard array at
-        global tiles ``t_idx`` — per-slot when ``slot_idx`` is given,
-        whole rows otherwise.  In-process this is a plain ``.at[]``
-        update on translated (owner, local) coordinates; under a mesh
-        it runs as a cached ``shard_map`` step in which each device
-        keeps only its own tiles' writes (non-owned rows index out of
-        bounds and ``mode="drop"``), so the update is SPMD with zero
-        cross-device traffic.  Plan sizes bucket up to the next power
-        of two (padding rows carry owner -1, which no device claims) to
-        bound the number of step retraces."""
+    def rebalance(self, heat=None, cooc=None) -> dict:
+        """Apply a heat-aware placement plan under traffic.
+
+        ``heat``/``cooc`` (a ``HeatTracker.snapshot()``) update the
+        stored signals; the tile→owner map is re-planned — co-locating
+        on the co-occurrence graph, seeded from the current owners so
+        only tiles whose move pays for itself travel — and the shard
+        arrays re-scatter from the host mirrors.  No re-staging: tile
+        contents, ids, slots, probe/chunk boxes are all unchanged, so
+        answers are bit-identical before and after, and shard shapes
+        are stable (cached exchange steps survive).  Returns a report;
+        re-stages keep using the stored signals.
+        """
+        if heat is not None:
+            self._heat = np.asarray(heat, np.float64)
+        if cooc is not None:
+            self._cooc = np.asarray(cooc, np.float64)
         s = self.slayout
+        layout = StagedLayout(
+            tiles=None, ids=self._ids_np, canon_tiles=self._canon_np,
+            tile_boxes=self._tb_np, probe_boxes=s.probe_boxes,
+            chunk_boxes=s.chunk_boxes, alive=self._alive_np, uni=s.uni)
+        self._install(layout)
+        s = self.slayout
+        nbytes = int(s.canon_shards.nbytes + s.id_shards.nbytes
+                     + s.alive_shards.nbytes)
+        if s.chunk_shards is not None:
+            nbytes += int(s.chunk_shards.nbytes)
+        return dict(placement=self.config.placement,
+                    moved_tiles=self.stats.get("moved_tiles", 0),
+                    replicated_tiles=self.stats.get("replicated_tiles", 0),
+                    cut_before=self.stats.get("cut_before"),
+                    cut_after=self.stats.get("cut_after"),
+                    bytes_transferred=nbytes)
+
+    def _placements(self, t_idx: np.ndarray):
+        """Expand global tiles to every resident copy: ``(owner, local,
+        sel)`` where ``sel`` indexes back into ``t_idx`` — one entry
+        per primary row plus one per live replica, so every shard write
+        fans out to all copies and replicas stay bit-exact."""
+        s = self.slayout
+        t_idx = np.asarray(t_idx)
         o = s.owner[t_idx].astype(np.int32)
         l = s.local[t_idx].astype(np.int32)
-        vals = np.ascontiguousarray(vals)
+        sel = np.arange(t_idx.shape[0])
+        if s.rep_owner is not None:
+            ro = s.rep_owner[t_idx]
+            rep = np.flatnonzero(ro >= 0)
+            if rep.size:
+                o = np.concatenate([o, ro[rep].astype(np.int32)])
+                l = np.concatenate(
+                    [l, s.rep_local[t_idx][rep].astype(np.int32)])
+                sel = np.concatenate([sel, rep])
+        return o, l, sel
+
+    def _owner_scatter(self, arr, t_idx, slot_idx, vals):
+        """Owner-local scatter into a (D, T_rows, ...) shard array at
+        global tiles ``t_idx`` — per-slot when ``slot_idx`` is given,
+        whole rows otherwise.  Writes fan out to every resident copy
+        (primary + replica rows, via ``_placements``), which is what
+        keeps replicated tiles bit-exact through the ingest lifecycle.
+        In-process this is a plain ``.at[]`` update on translated
+        (owner, local) coordinates; under a mesh it runs as a cached
+        ``shard_map`` step in which each device keeps only its own
+        tiles' writes (non-owned rows index out of bounds and
+        ``mode="drop"``), so the update is SPMD with zero cross-device
+        traffic.  Plan sizes bucket up to the next power of two
+        (padding rows carry owner -1, which no device claims) to bound
+        the number of step retraces."""
+        o, l, sel = self._placements(t_idx)
+        vals = np.ascontiguousarray(vals)[sel]
+        if slot_idx is not None:
+            slot_idx = np.asarray(slot_idx, np.int32)[sel]
         if self.mesh is None:
             if slot_idx is None:
                 return arr.at[jnp.asarray(o), jnp.asarray(l)].set(
@@ -1543,11 +1767,13 @@ class ShardedTiles(_TilesBase):
 
     def _exchange_plan(self, cand, costs: np.ndarray):
         """Host-side plan for one sharded batch: LPT query packing +
-        owner-local candidate translation (``router.owner_split``)."""
+        owner-local candidate translation (``router.owner_split``,
+        replica-aware when hot tiles hold a second copy)."""
         slots, pstats = pack_queries(costs, self.shards)
         send_slot, send_cand, xstats = router.owner_split(
             np.asarray(cand), slots, self.slayout.owner,
-            self.slayout.local)
+            self.slayout.local, alt_owner=self.slayout.rep_owner,
+            alt_local=self.slayout.rep_local)
         return slots, send_slot, send_cand, {**pstats, **xstats}
 
     def _put(self, arr):
@@ -1653,10 +1879,46 @@ class ShardedTiles(_TilesBase):
             rounds=int(np.asarray(rounds).max(initial=0)))
 
 
+class HeatSharded(ShardedTiles):
+    """Sharded placement that follows the query log: co-located
+    primaries + hot-tile replicas.
+
+    The replicated/sharded hybrid the ``TileLayout`` protocol was
+    built to host as a third implementation.  Placement differs from
+    ``ShardedTiles`` in two ways, both planned host-side from the
+    ``HeatTracker`` signals the server feeds through ``rebalance``:
+
+    - primaries co-locate on the candidate co-occurrence graph
+      (``placement.colocate_tiles``), cutting the cross-owner pairs
+      that force a query to message two devices;
+    - the ``config.policy.replicate_top`` hottest tiles keep a
+      bit-exact second copy on another owner, in the shard rows past
+      ``t_local`` — per-device rows are exactly ``ceil(T/D) +
+      replicate_top``, the explicit memory cost of the hybrid — and
+      ``router.owner_split`` routes each candidate to whichever copy
+      saves a message or carries less probe load.
+
+    Every ingest write fans out to all copies (``_placements``), so
+    answers stay bit-identical to the dense oracle through appends,
+    tombstone deletes, and compaction.  Cold (before any heat is
+    observed) it replicates by member counts and places primaries like
+    ``ShardedTiles`` — strictly a superset of the count-balanced plan.
+    """
+
+    mode = "heat"
+
+    @property
+    def _replicate_top(self) -> int:
+        return self.config.policy.replicate_top
+
+
+_PLACEMENT_CLS = {"replicated": ReplicatedTiles, "sharded": ShardedTiles,
+                  "heat": HeatSharded}
+
+
 def build_tiles(parts: api.Partitioning, mbrs: jax.Array,
                 config: ServeConfig, mesh: Mesh | None = None
                 ) -> TileLayout:
     """Construct the placement ``config`` names (the one place the
     placement string is dispatched)."""
-    cls = ShardedTiles if config.placement == "sharded" else ReplicatedTiles
-    return cls(parts, mbrs, config, mesh)
+    return _PLACEMENT_CLS[config.placement](parts, mbrs, config, mesh)

@@ -127,11 +127,65 @@ def candidate_range(boxes: jax.Array, qboxes: jax.Array, f_max: int
 
 
 # --------------------------------------------------------------------------
+# query-heat tracking (feeds heat-aware placement)
+# --------------------------------------------------------------------------
+
+class HeatTracker:
+    """EWMA per-tile hit counts + tile-pair co-occurrence sketch.
+
+    Accumulated host-side from the router's candidate lists — the
+    (Q, F) int32 arrays every batch already produces — so tracking
+    costs O(Q·F) numpy per batch and zero device work.  Two signals:
+
+    - ``heat[t]``: decayed count of queries whose candidate list
+      contained tile ``t`` — what hot-tile *replication* ranks by;
+    - ``cooc[i, j]``: decayed count of queries whose candidate list
+      contained both ``i`` and ``j`` — the pair weight *co-location*
+      cuts (``core.placement.colocate_tiles``), because each
+      cross-owner pair is a query messaging two devices.
+
+    Deterministic: same batch sequence ⇒ bit-identical state (pure
+    float64 numpy, no sampling).  ``decay`` < 1 forgets old traffic so
+    the plan can follow a moving hotspot.
+    """
+
+    def __init__(self, t: int, decay: float = 0.85):
+        if not 0.0 < decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.t = int(t)
+        self.decay = float(decay)
+        self.heat = np.zeros(self.t, np.float64)
+        self.cooc = np.zeros((self.t, self.t), np.float64)
+        self.batches = 0
+
+    def observe(self, cand: np.ndarray) -> None:
+        """Fold one batch's (Q, F) candidate lists (-1 padding) in."""
+        cand = np.asarray(cand)
+        if cand.ndim != 2:
+            raise ValueError(f"cand must be (Q, F), got {cand.shape}")
+        hot = np.zeros((cand.shape[0], self.t), np.float64)
+        q, f = np.nonzero(cand >= 0)
+        hot[q, cand[q, f]] = 1.0               # one-hot, dedups repeats
+        pair = hot.T @ hot                     # (T, T) co-occurrence
+        hits = np.diagonal(pair).copy()
+        np.fill_diagonal(pair, 0.0)
+        self.heat = self.decay * self.heat + hits
+        self.cooc = self.decay * self.cooc + pair
+        self.batches += 1
+
+    def snapshot(self) -> tuple[np.ndarray, np.ndarray]:
+        """Copies of ``(heat[T], cooc[T, T])`` for the planner."""
+        return self.heat.copy(), self.cooc.copy()
+
+
+# --------------------------------------------------------------------------
 # owner translation (sharded layouts: global tiles -> (owner, local))
 # --------------------------------------------------------------------------
 
 def owner_split(cand: np.ndarray, slots: np.ndarray, owner: np.ndarray,
-                local: np.ndarray, bucket: int = 8
+                local: np.ndarray, bucket: int = 8,
+                alt_owner: np.ndarray | None = None,
+                alt_local: np.ndarray | None = None,
                 ) -> tuple[np.ndarray, np.ndarray, dict]:
     """Translate global candidate lists into per-owner exchange tables.
 
@@ -151,14 +205,30 @@ def owner_split(cand: np.ndarray, slots: np.ndarray, owner: np.ndarray,
     and ``F_local`` are maxima over all pairs, rounded up to ``bucket``
     so jitted exchange steps recompile per size bucket, not per batch.
 
+    ``alt_owner``/``alt_local`` (both (T,) int32, ``-1`` = no replica)
+    describe a second live copy of some tiles (``HeatSharded``).  A
+    replicated candidate may be probed on either owner — both rows are
+    bit-exact — so the split routes it to whichever placement helps:
+    an owner the query *already* messages (saving a whole message),
+    else the owner with the fewest candidate rows gathered so far this
+    batch (spreading probe load off the hot device).  Deterministic:
+    fixed (home, slot, candidate) order, ties to the primary owner
+    then the lower device id.  Each candidate still reaches exactly
+    one owner, so the merge stays owner-disjoint and exact.
+
     Host-side numpy (runs once per batch, O(Q·F)); ``stats`` reports
-    the message/width geometry for the serving stats dict.
+    the message/width geometry for the serving stats dict, plus the
+    per-owner probe load (gathered candidate rows), its max/mean
+    imbalance, the padded exchange buffer bytes, and how many
+    candidate rows took the alternate replica.
     """
     d, qpd = slots.shape
     send: list[list[list[tuple[int, np.ndarray]]]] = \
         [[[] for _ in range(d)] for _ in range(d)]
     f_local = 1
     n_msgs = 0
+    probe_rows = np.zeros(d, np.int64)
+    routed_alt = 0
     for h in range(d):
         for s in range(qpd):
             qi = slots[h, s]
@@ -168,9 +238,30 @@ def owner_split(cand: np.ndarray, slots: np.ndarray, owner: np.ndarray,
             c = c[c >= 0]
             if c.size == 0:
                 continue
-            ow = owner[c]
+            ow = owner[c].copy()
+            lc = local[c].copy()
+            if alt_owner is not None:
+                flex = np.flatnonzero(alt_owner[c] >= 0)
+                if flex.size:
+                    fixed_owners = set(np.unique(np.delete(ow, flex)))
+                    for k in flex:
+                        o1, o2 = int(ow[k]), int(alt_owner[c[k]])
+                        if o1 in fixed_owners:
+                            pick = o1
+                        elif o2 in fixed_owners:
+                            pick = o2
+                        elif probe_rows[o2] < probe_rows[o1]:
+                            pick = o2
+                        else:
+                            pick = o1
+                        if pick != o1:
+                            ow[k] = pick
+                            lc[k] = alt_local[c[k]]
+                            routed_alt += 1
+                        fixed_owners.add(pick)
+            np.add.at(probe_rows, ow, 1)
             for o in np.unique(ow):
-                lt = np.sort(local[c[ow == o]])
+                lt = np.sort(lc[ow == o])
                 send[h][int(o)].append((s, lt))
                 f_local = max(f_local, int(lt.size))
                 n_msgs += 1
@@ -184,7 +275,18 @@ def owner_split(cand: np.ndarray, slots: np.ndarray, owner: np.ndarray,
             for j, (s, lt) in enumerate(send[h][o]):
                 send_slot[h, o, j] = s
                 send_cand[h, o, j, :lt.size] = lt
-    stats = dict(m_per_pair=m, f_local=f_local, messages=n_msgs)
+    # Padded all_to_all buffer estimate for one range_counts exchange:
+    # forward — per (home, owner) pair, m message slots each carrying a
+    # slot id (4 B), a query box (16 B) and f_local local tiles (4 B
+    # each); return — one count (4 B) per message slot.
+    xbytes = d * d * m * (4 + 16 + 4 * f_local) + d * d * m * 4
+    mean_rows = float(probe_rows.mean())
+    stats = dict(m_per_pair=m, f_local=f_local, messages=n_msgs,
+                 probe_rows=probe_rows.tolist(),
+                 probe_load_imbalance=(float(probe_rows.max()) /
+                                       max(mean_rows, 1e-9)),
+                 exchange_bytes=int(xbytes),
+                 routed_alt=int(routed_alt))
     return send_slot, send_cand, stats
 
 

@@ -311,6 +311,39 @@ def test_update_unknown_and_mismatch_raise(small_server):
         small_server.update(np.array([1, 2]), np.zeros((3, 4), np.float32))
 
 
+# -- slot reuse: appends drain tombstoned slots before slack ----------------
+
+def test_deleted_slots_reused_before_slack():
+    """Dead canonical slots opened by deletes are drained by later
+    appends before any fresh slack is consumed: sustained delete/append
+    churn holds the fill frontier (and so the overflow re-stage) flat
+    instead of marching through the slack, and answers stay exact."""
+    full = spatial_gen.dataset("osm", jax.random.PRNGKey(5), N_BASE)
+    parts = api.partition("bsp", full, PAYLOAD)
+    cfg = ServeConfig(slack=64, compact_dead_frac=None)
+    srv = SpatialServer(parts, full, cfg)
+    model = LiveSet(full)
+    rng = np.random.default_rng(17)
+    fill0 = int(srv.tiles._fill.sum())
+    for _ in range(6):
+        ids = _pick_live(model, rng, 40)
+        srv.delete(ids)
+        model.delete(ids)
+        assert srv.tiles._n_free.sum() > 0     # slots opened for reuse
+        nb = _boxes(rng, 40)
+        srv.append(jnp.asarray(nb))
+        model.append(nb)
+    # six 40-object rounds insert ≥ 240 copies; deletes free one
+    # canonical slot per object, so without reuse the frontier would
+    # march ≥ 240 slots.  Reuse holds the growth to the replicated
+    # residue (copies landing in tiles with no free slot), and the
+    # slack never overflows into a re-stage
+    assert int(srv.tiles._fill.sum()) - fill0 <= 120
+    assert srv.stats["restages"] == 0
+    _check(srv, model, rng)
+    _check_vs_fresh_staging(srv, model, cfg, rng)
+
+
 # -- scatter cost: appends and deletes no longer move the layout ------------
 
 def test_append_transfers_touched_cells_not_layout():
