@@ -1,0 +1,18 @@
+"""reprolint: static hazard analysis for the jax/pallas serving stack.
+
+Five repo-specific rules, each encoding a bug class this repo actually
+shipped (see docs/ARCHITECTURE.md "Static analysis"):
+
+  jit-closure-capture   R1  arrays baked into jitted callables (PR 5)
+  recompile-hazard      R2  unbucketed ints into static jit args (PR 7)
+  host-sync             R3  device->host folds on hot paths
+  kernel-twin-parity    R4  *_skip twins + alive threading (PR 4/7)
+  layout-conformance    R5  TileLayout contract + replica fan-out (PR 8)
+
+Entry point: ``repro.analysis.api.run`` (used by tools/reprolint.py).
+The analyzer is AST + ``jax.eval_shape`` only — it never executes a
+kernel.
+"""
+
+from .core import Finding  # noqa: F401
+from .api import RULE_IDS, run  # noqa: F401

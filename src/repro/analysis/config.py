@@ -1,0 +1,156 @@
+"""Rule configuration for reprolint.
+
+Everything repo-specific lives here so the rule engines in r1..r5 stay
+mechanical: sink names, the staging-attribute vocabulary, the hot-path
+module set for the host-sync audit, the module/function allowlist (each
+entry carries its rationale — the analyzer refuses entries without one),
+and the abstract-input synthesis table for kernel-twin parity.
+"""
+
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# R1 jit-closure-capture
+# ---------------------------------------------------------------------------
+
+# A call whose callee's final name is one of these stages the callable it
+# receives: closure-captured arrays become baked-in constants (the PR-5
+# replicated-staging bug: per-device copies silently became one traced
+# constant).  ``_call`` is the repo's own SPMD staging seam
+# (serve/layout.py), included so layout code gets the same scrutiny.
+JIT_SINKS = {"jit", "pmap", "pallas_call", "shard_map", "_call"}
+
+# Attribute names that hold staged device arrays.  An attribute access
+# with one of these names is classified "arrayish" regardless of the
+# object it hangs off — the vocabulary is the repo's staging convention
+# (StagedLayout / ShardedLayout / _TilesBase mirrors).
+STAGING_ATTRS = {
+    "tiles", "ids", "canon_tiles", "tile_boxes", "probe_boxes",
+    "chunk_boxes", "alive", "uni", "canon_shards", "id_shards",
+    "alive_shards", "chunk_shards", "staged", "slayout", "gtiles",
+}
+
+# Attribute accesses that read host-side metadata off a device array
+# without a transfer — never a sync, never arrayish.
+META_ATTRS = {"shape", "dtype", "ndim", "size", "nbytes", "itemsize",
+              "sharding", "weak_type"}
+
+# ---------------------------------------------------------------------------
+# R2 recompile-hazard
+# ---------------------------------------------------------------------------
+
+# Calls that launder a data-dependent int into a compile-safe one.  The
+# PR-7 bucketing helpers: round_up (core.partition.assign), _f_width
+# (serve/engine), _pad_pow2 (serve/layout).
+SANITIZER_FUNCS = {"round_up", "_f_width", "_pad_pow2"}
+# Method-call sanitizers: WidthPolicy.at_least/.start and the power-of-2
+# idiom ``(n - 1).bit_length()``.
+SANITIZER_METHODS = {"at_least", "start", "bit_length"}
+
+# ---------------------------------------------------------------------------
+# R3 host-sync audit
+# ---------------------------------------------------------------------------
+
+# Modules on the per-batch serving hot path: a device->host fold here is
+# a synchronization stall unless explicitly justified.  Matched as
+# posix-path suffixes against the scanned file's path.
+HOT_MODULES = (
+    "serve/layout.py",
+    "serve/engine.py",
+    "serve/exchange.py",
+    "serve/router.py",
+    "query/range.py",
+    "query/knn.py",
+    "kernels/range_probe/ops.py",
+    "kernels/range_probe/ref.py",
+    "kernels/range_probe/kernel.py",
+    "core/placement.py",
+)
+
+# Builtin casts that force a device->host transfer when fed a traced /
+# device value, and the numpy download calls.
+HOST_CAST_FUNCS = {"float", "int", "bool"}
+NUMPY_DOWNLOAD_FUNCS = {"asarray", "array"}
+HOST_SYNC_METHODS = {"item", "tolist"}
+
+# ---------------------------------------------------------------------------
+# Allowlist: (path suffix, function name or None for whole module, rule
+# id or None for all rules, rationale).  The rationale is mandatory —
+# these are deliberate host-side planes, documented here instead of
+# sprinkling dozens of inline suppressions over code that is host-side
+# by design.
+# ---------------------------------------------------------------------------
+
+ALLOWLIST = (
+    ("serve/router.py", None, "host-sync",
+     "global-index routing plane: folds overlap matrices to numpy by "
+     "design — one transfer per batch, the price of host-side LPT "
+     "packing and heat tracking"),
+    ("core/placement.py", None, "host-sync",
+     "placement planning is host-only numpy (capped LPT, co-location "
+     "local search); it never sees traced values"),
+    ("serve/layout.py", "stage_tiles", "host-sync",
+     "staging-time capacity sizing and stats fold once per (re)stage, "
+     "not per batch"),
+    ("serve/layout.py", "shard_staged", "host-sync",
+     "staging-time sharding planner: downloads the canonical staging "
+     "once per (re)shard for host placement and the dense-oracle "
+     "mirror"),
+    ("serve/layout.py", "_mirror", "host-sync",
+     "install-time host mirror download: ingest bookkeeping needs "
+     "numpy copies of the staged arrays, once per (re)install"),
+)
+
+# ---------------------------------------------------------------------------
+# R4 kernel-twin parity
+# ---------------------------------------------------------------------------
+
+# Modules making up the probe surface: every public function taking
+# member-slot data must thread the tombstone mask.  kernels/<fam>/ files
+# are matched by glob-ish suffix; the query/serve modules are explicit.
+PROBE_SURFACE_SUFFIXES = (
+    "query/range.py",
+    "query/knn.py",
+    "serve/exchange.py",
+)
+KERNEL_FAMILY_FILES = {"ops.py", "ref.py", "kernel.py"}
+
+# Parameters that carry per-slot member data (boxes at canonical slots).
+MEMBER_DATA_PARAMS = {"tiles", "gtiles", "canon_tiles"}
+# Acceptable names for the threaded tombstone mask.
+ALIVE_PARAMS = {"alive", "galive"}
+# Extra parameters a *_skip twin may add over its base twin.
+SKIP_EXTRA_PARAMS = {"cboxes", "gcboxes"}
+
+# Abstract-aval parity via jax.eval_shape runs for these family files
+# (row-major public surface).  kernel.py twins are component-major
+# pallas entry points — they get signature parity only; their avals are
+# covered transitively because ops.py calls them.
+ABSTRACT_PARITY_FILES = {"ops.py", "ref.py"}
+
+# Name-driven synthesis of abstract inputs: T=4 tiles, cap=128 slots,
+# Q=8 queries, F=2 candidates, C=1 chunk of 128.  A required parameter
+# missing from this table is itself a finding — a new family must
+# extend the table, it cannot silently dodge the parity check.
+ABSTRACT_SHAPES = {
+    "qboxes": ((8, 4), "float32"),
+    "tiles": ((4, 128, 4), "float32"),
+    "gtiles": ((8, 2, 128, 4), "float32"),
+    "cboxes": ((4, 1, 4), "float32"),
+    "gcboxes": ((8, 2, 1, 4), "float32"),
+    "cand": ((8, 2), "int32"),
+    "ids": ((4, 128), "int32"),
+    "alive": ((4, 128), "bool"),
+    "galive": ((8, 2, 128), "bool"),
+}
+
+# ---------------------------------------------------------------------------
+# R5 TileLayout conformance
+# ---------------------------------------------------------------------------
+
+PROTOCOL_NAME = "TileLayout"
+REGISTRY_NAME = "_PLACEMENT_CLS"
+# The PR-8 replica fan-out chain: a sharded layout's scatter must route
+# through _owner_scatter -> _placements -> rep_owner so every ingest
+# write lands on ALL replica copies.
+FANOUT_CHAIN = ("_scatter", "_owner_scatter", "_placements", "rep_owner")

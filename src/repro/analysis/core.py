@@ -1,0 +1,388 @@
+"""Analyzer core: findings, suppressions, the project index, and the
+small expression classifiers (arrayish / taint) the rules share.
+
+Pure stdlib (ast + re) — jax is imported only by the R4 abstract-parity
+pass, and only to trace, never to run.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+from pathlib import Path
+
+from . import config
+
+SUPPRESS_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Za-z0-9_\-, ]+?)\s*(?:--\s*(.*))?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # posix path relative to the scan root's parent
+    line: int
+    message: str
+    hint: str = ""
+    func: str = ""     # enclosing function, for allowlist matching
+
+    def fingerprint(self) -> str:
+        # line-free so the baseline survives unrelated edits above the site
+        return f"{self.rule}::{self.path}::{self.func}::{self.message}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "func": self.func, "message": self.message,
+                "hint": self.hint}
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}"
+        tail = f"  [fix: {self.hint}]" if self.hint else ""
+        return f"{loc}: {self.rule}: {self.message}{tail}"
+
+
+class Module:
+    """One parsed source file plus its suppression table."""
+
+    def __init__(self, path: Path, rel: str, text: str):
+        self.path = path
+        self.rel = rel
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=str(path))
+        # line -> set of rule ids suppressed on that line
+        self.suppress: dict[int, set[str]] = {}
+        self.bad_suppressions: list[Finding] = []
+        self._parse_suppressions()
+        self.imports = self._import_aliases()
+
+    # -- suppressions -----------------------------------------------------
+
+    def _parse_suppressions(self) -> None:
+        from .api import RULE_IDS
+        for i, raw in enumerate(self.lines, start=1):
+            m = SUPPRESS_RE.search(raw)
+            if not m:
+                continue
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            rationale = (m.group(2) or "").strip()
+            unknown = rules - set(RULE_IDS)
+            if unknown:
+                self.bad_suppressions.append(Finding(
+                    "bad-suppression", self.rel, i,
+                    f"unknown rule id(s) {sorted(unknown)} in suppression",
+                    hint="valid ids: " + ", ".join(RULE_IDS)))
+                rules &= set(RULE_IDS)
+            if not rationale:
+                self.bad_suppressions.append(Finding(
+                    "bad-suppression", self.rel, i,
+                    "suppression without a rationale",
+                    hint="append ' -- <why this host fold / exemption is "
+                         "deliberate>'"))
+                continue  # a rationale-free suppression suppresses nothing
+            target = i
+            if raw.lstrip().startswith("#"):
+                # standalone comment: applies to the next code line
+                j = i
+                while j < len(self.lines):
+                    nxt = self.lines[j].strip()
+                    if nxt and not nxt.startswith("#"):
+                        target = j + 1
+                        break
+                    j += 1
+            self.suppress.setdefault(target, set()).update(rules)
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        return rule in self.suppress.get(line, set())
+
+    # -- imports ----------------------------------------------------------
+
+    def _import_aliases(self) -> dict[str, str]:
+        """local name -> dotted module path ('' segments resolved against
+        this module's package for relative imports)."""
+        pkg_parts = self.rel.split("/")[:-1]  # package dirs of this module
+        out: dict[str, str] = {}
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    out[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom):
+                if node.level:
+                    base = pkg_parts[: len(pkg_parts) - (node.level - 1)]
+                else:
+                    base = []
+                mod = ".".join(base + (node.module or "").split("."))
+                for a in node.names:
+                    out[a.asname or a.name] = (
+                        f"{mod}.{a.name}" if mod else a.name)
+        return out
+
+
+class Project:
+    """All modules under a scan root, plus cross-module registries."""
+
+    def __init__(self, root: Path, files: list[Path] | None = None):
+        self.root = root.resolve()
+        self.modules: list[Module] = []
+        self.errors: list[Finding] = []
+        paths = files if files is not None else sorted(
+            p for p in self.root.rglob("*.py") if "__pycache__" not in p.parts)
+        anchor = self.root if self.root.is_dir() else self.root.parent
+        for p in paths:
+            rel = p.resolve().relative_to(anchor).as_posix()
+            try:
+                text = p.read_text()
+                self.modules.append(Module(p, rel, text))
+            except (SyntaxError, UnicodeDecodeError) as e:
+                self.errors.append(Finding(
+                    "parse-error", rel, getattr(e, "lineno", 0) or 0,
+                    f"could not parse: {e}"))
+        # dotted module name -> Module, for cross-module call resolution
+        self.by_dotted: dict[str, Module] = {}
+        for m in self.modules:
+            dotted = m.rel[:-3].replace("/", ".")
+            self.by_dotted[dotted] = m
+            # also register without the leading source dir (repro.x.y)
+            parts = dotted.split(".")
+            for i in range(1, len(parts)):
+                self.by_dotted.setdefault(".".join(parts[i:]), m)
+        self.jit_static = _index_jit_statics(self.modules)
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+def dotted_name(node: ast.expr) -> str:
+    """'jax.numpy.sum' for nested Attribute/Name chains, '' otherwise."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def last_attr(node: ast.expr) -> str:
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return ""
+
+
+def func_defs(tree: ast.AST):
+    """Yield (def_node, qualname-ish enclosing name) for all functions."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def param_names(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    return ([p.arg for p in a.posonlyargs] + [p.arg for p in a.args]
+            + [p.arg for p in a.kwonlyargs])
+
+
+def module_globals(tree: ast.Module) -> set[str]:
+    names: set[str] = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            names.add(node.name)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names.add(t.id)
+        elif isinstance(node, ast.AnnAssign) and isinstance(node.target,
+                                                            ast.Name):
+            names.add(node.target.id)
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                names.add(a.asname or a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom):
+            for a in node.names:
+                names.add(a.asname or a.name)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# arrayish classification (R1 / R3)
+# ---------------------------------------------------------------------------
+
+_DEVICE_ROOTS = {"jnp", "jax"}
+
+
+class ArrayishEnv:
+    """Forward-pass classification of local names as device-array-ish.
+
+    Deliberately conservative: unknown stays unknown (False), so the
+    rules built on it under-report rather than spam.  The vocabulary
+    that makes something arrayish: jnp./jax. call results, staging
+    attributes (config.STAGING_ATTRS), and values derived from either.
+    """
+
+    def __init__(self, fn: ast.FunctionDef, mod: Module):
+        self.mod = mod
+        self.env: dict[str, bool] = {}
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Assign):
+                val = self.is_arrayish(stmt.value)
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        self.env[t.id] = val
+            elif isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                if isinstance(stmt.target, ast.Name):
+                    self.env[stmt.target.id] = self.is_arrayish(stmt.value)
+
+    def is_arrayish(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, False)
+        if isinstance(node, ast.Attribute):
+            if node.attr in config.META_ATTRS:
+                return False
+            if node.attr in config.STAGING_ATTRS:
+                return True
+            return False
+        if isinstance(node, ast.Subscript):
+            return self.is_arrayish(node.value)
+        if isinstance(node, ast.Call):
+            root = dotted_name(node.func).split(".")[0]
+            if root in _DEVICE_ROOTS:
+                # jax.* / jnp.* produce device values; numpy stays host
+                return True
+            if isinstance(node.func, ast.Attribute):
+                # method call on an arrayish value returns arrayish
+                # (x.sum(), x.any(), x.astype(...))
+                return self.is_arrayish(node.func.value)
+            return False
+        if isinstance(node, ast.BinOp):
+            return (self.is_arrayish(node.left)
+                    or self.is_arrayish(node.right))
+        if isinstance(node, ast.UnaryOp):
+            return self.is_arrayish(node.operand)
+        if isinstance(node, ast.Compare):
+            return (self.is_arrayish(node.left)
+                    or any(self.is_arrayish(c) for c in node.comparators))
+        if isinstance(node, ast.IfExp):
+            return self.is_arrayish(node.body) or self.is_arrayish(node.orelse)
+        return False
+
+
+# ---------------------------------------------------------------------------
+# taint classification (R2)
+# ---------------------------------------------------------------------------
+
+class TaintEnv:
+    """Tracks Python ints whose value depends on the data (not just on
+    static shapes): ``len(...)``, host folds of device reductions, and
+    arithmetic thereon.  Calls through a bucketing sanitizer clear the
+    taint — that is exactly the PR-7 contract."""
+
+    def __init__(self, fn: ast.FunctionDef, mod: Module):
+        self.mod = mod
+        self.env: dict[str, bool] = {}
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Assign):
+                val = self.is_tainted(stmt.value)
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        self.env[t.id] = val
+
+    def is_tainted(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, False)
+        if isinstance(node, ast.Call):
+            fname = last_attr(node.func)
+            if fname in config.SANITIZER_FUNCS:
+                return False
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in config.SANITIZER_METHODS):
+                return False
+            if fname == "len":
+                return True
+            if fname in {"int", "float"} and node.args:
+                return self._is_device_fold(node.args[0])
+            if fname in {"max", "min", "sum", "abs"}:
+                return any(self.is_tainted(a) for a in node.args)
+            return False
+        if isinstance(node, ast.BinOp):
+            return self.is_tainted(node.left) or self.is_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_tainted(node.operand)
+        if isinstance(node, ast.IfExp):
+            return self.is_tainted(node.body) or self.is_tainted(node.orelse)
+        return False
+
+    @staticmethod
+    def _is_device_fold(node: ast.expr) -> bool:
+        """int(jnp.max(counts)) / int(x.max()) — a data-dependent host
+        int born from a device reduction."""
+        if not isinstance(node, ast.Call):
+            return False
+        root = dotted_name(node.func).split(".")[0]
+        if root in _DEVICE_ROOTS:
+            return True
+        return (isinstance(node.func, ast.Attribute)
+                and node.func.attr in {"max", "min", "sum", "item"})
+
+
+def _index_jit_statics(modules: list[Module]) -> dict:
+    """(module, fname) -> {'params': [...], 'statics': {...}} for every
+    function jitted with static_argnames, across the whole project."""
+    out: dict[tuple[str, str], dict] = {}
+    for m in modules:
+        for fn in func_defs(m.tree):
+            for dec in fn.decorator_list:
+                statics = _statics_from_decorator(dec)
+                if statics is None:
+                    continue
+                out[(m.rel, fn.name)] = {
+                    "params": param_names(fn), "statics": statics,
+                    "line": fn.lineno}
+    return out
+
+
+def _statics_from_decorator(dec: ast.expr) -> set[str] | None:
+    """static_argnames from @functools.partial(jax.jit, ...) or
+    @jax.jit(...) decorator forms; None if not a jit decorator."""
+    if not isinstance(dec, ast.Call):
+        return None
+    head = last_attr(dec.func)
+    target = None
+    if head == "partial" and dec.args:
+        if last_attr(dec.args[0]) == "jit":
+            target = dec
+    elif head == "jit":
+        target = dec
+    if target is None:
+        return None
+    for kw in target.keywords:
+        if kw.arg == "static_argnames":
+            vals: set[str] = set()
+            for el in ast.walk(kw.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    vals.add(el.value)
+            return vals
+    return set()
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: Path) -> set[str]:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("fingerprints", []))
+
+
+def write_baseline(path: Path, findings: list[Finding]) -> None:
+    path.write_text(json.dumps(
+        {"fingerprints": sorted(f.fingerprint() for f in findings)},
+        indent=2) + "\n")

@@ -1,0 +1,96 @@
+"""R1 jit-closure-capture.
+
+The PR-5 bug class: a staged device array captured by closure in a
+callable handed to jax.jit / shard_map / pallas_call becomes a baked-in
+traced constant — per-device copies silently collapse to one, and
+re-staging no longer reaches the compiled step.  Arrays must be passed
+as arguments (the repo's ``_call`` seam passes staging via ``consts``).
+
+Flags lambdas and locally-defined functions passed to a jit sink whose
+free variables are classified arrayish in the enclosing scope.  Module
+globals and unknown values are never flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+import builtins
+
+from . import config
+from .core import (ArrayishEnv, Finding, Module, Project, func_defs,
+                   last_attr, module_globals, param_names)
+
+RULE = "jit-closure-capture"
+_BUILTINS = set(dir(builtins))
+
+
+def check(project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for mod in project.modules:
+        globals_ = module_globals(mod.tree)
+        for fn in func_defs(mod.tree):
+            out.extend(_check_function(mod, fn, globals_))
+    return out
+
+
+def _check_function(mod: Module, fn: ast.FunctionDef,
+                    globals_: set[str]) -> list[Finding]:
+    env = ArrayishEnv(fn, mod)
+    local_defs = {n.name: n for n in ast.walk(fn)
+                  if isinstance(n, ast.FunctionDef) and n is not fn}
+    bound = set(param_names(fn)) | set(env.env) | set(local_defs)
+    out: list[Finding] = []
+    for call in ast.walk(fn):
+        if not (isinstance(call, ast.Call)
+                and last_attr(call.func) in config.JIT_SINKS):
+            continue
+        for arg in list(call.args) + [k.value for k in call.keywords]:
+            inner = None
+            if isinstance(arg, ast.Lambda):
+                inner = arg
+            elif isinstance(arg, ast.Name) and arg.id in local_defs:
+                inner = local_defs[arg.id]
+            if inner is None:
+                continue
+            for name in sorted(_free_vars(inner)):
+                if name in _BUILTINS or name in globals_:
+                    continue
+                if name in bound and env.env.get(name, False):
+                    label = ("lambda" if isinstance(inner, ast.Lambda)
+                             else inner.name)
+                    out.append(Finding(
+                        RULE, mod.rel, arg.lineno,
+                        f"device array '{name}' captured by closure in "
+                        f"'{label}' handed to "
+                        f"'{last_attr(call.func)}'",
+                        hint="pass it as an argument (staging goes "
+                             "through consts/in_specs), not a closure",
+                        func=fn.name))
+    return out
+
+
+def _free_vars(fn: ast.Lambda | ast.FunctionDef) -> set[str]:
+    """Names loaded inside fn that fn itself does not bind."""
+    local = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                             + fn.args.kwonlyargs)}
+    for va in (fn.args.vararg, fn.args.kwarg):
+        if va is not None:
+            local.add(va.arg)
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    loads: set[str] = set()
+    for stmt in body:
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Name):
+                if isinstance(node.ctx, ast.Load):
+                    loads.add(node.id)
+                else:
+                    local.add(node.id)
+            elif isinstance(node, (ast.FunctionDef, ast.Lambda)):
+                local.update(a.arg for a in (node.args.posonlyargs
+                                             + node.args.args
+                                             + node.args.kwonlyargs))
+            elif isinstance(node, ast.comprehension):
+                for t in ast.walk(node.target):
+                    if isinstance(t, ast.Name):
+                        local.add(t.id)
+    return loads - local

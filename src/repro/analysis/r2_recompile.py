@@ -1,0 +1,83 @@
+"""R2 recompile-hazard.
+
+The PR-7 bug class: a data-dependent Python int (``len(batch)``, a host
+fold of a device reduction, a running counter) passed as a *static* jit
+argument mints a fresh executable per distinct value — a recompile storm
+under traffic.  The repo's contract is that every such int passes
+through a bucketing sanitizer first (``round_up``, ``WidthPolicy
+.at_least``, ``_pad_pow2``, ``.bit_length()``).
+
+Uses a project-wide index of jit-staticized functions (decorator scan
+with import-alias resolution) and flags tainted expressions arriving in
+static parameter positions at their call sites.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Finding, Module, Project, TaintEnv, func_defs
+
+RULE = "recompile-hazard"
+
+
+def check(project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for mod in project.modules:
+        for fn in func_defs(mod.tree):
+            out.extend(_check_function(project, mod, fn))
+    return out
+
+
+def _check_function(project: Project, mod: Module,
+                    fn: ast.FunctionDef) -> list[Finding]:
+    taint = TaintEnv(fn, mod)
+    out: list[Finding] = []
+    for call in ast.walk(fn):
+        if not isinstance(call, ast.Call):
+            continue
+        target = _resolve(project, mod, call.func)
+        if target is None:
+            continue
+        info = project.jit_static.get(target)
+        if not info or not info["statics"]:
+            continue
+        params = info["params"]
+        for i, arg in enumerate(call.args):
+            if i < len(params) and params[i] in info["statics"]:
+                if taint.is_tainted(arg):
+                    out.append(_finding(mod, fn, call, params[i], target))
+        for kw in call.keywords:
+            if kw.arg in info["statics"] and taint.is_tainted(kw.value):
+                out.append(_finding(mod, fn, call, kw.arg, target))
+    return out
+
+
+def _finding(mod: Module, fn: ast.FunctionDef, call: ast.Call,
+             pname: str, target: tuple[str, str]) -> Finding:
+    return Finding(
+        RULE, mod.rel, call.lineno,
+        f"data-dependent int flows into static arg '{pname}' of "
+        f"jitted '{target[1]}' — one recompile per distinct value",
+        hint="bucket it first (round_up / WidthPolicy.at_least / "
+             "_pad_pow2 / .bit_length())",
+        func=fn.name)
+
+
+def _resolve(project: Project, mod: Module,
+             func: ast.expr) -> tuple[str, str] | None:
+    """Map a call's callee expression to a (module rel, fname) key in
+    the project's jit-static index, through import aliases."""
+    if isinstance(func, ast.Name):
+        key = (mod.rel, func.id)
+        return key if key in project.jit_static else None
+    if isinstance(func, ast.Attribute) and isinstance(func.value, ast.Name):
+        alias = mod.imports.get(func.value.id)
+        if alias is None:
+            return None
+        target_mod = project.by_dotted.get(alias)
+        if target_mod is None:
+            return None
+        key = (target_mod.rel, func.attr)
+        return key if key in project.jit_static else None
+    return None

@@ -1,0 +1,68 @@
+"""R3 host-sync audit.
+
+On the per-batch serving hot path (config.HOT_MODULES), ``float()`` /
+``int()`` / ``bool()`` / ``np.asarray()`` / ``.item()`` on a device
+value blocks the host on a device round-trip — a stall per call, per
+batch.  serve/layout.py alone has >100 such candidate call sites;
+almost all fold host numpy and are fine, which is why the rule only
+fires when the operand is positively classified arrayish (jnp results,
+staging attributes, values derived from them).
+
+Deliberate host-side planes are allowlisted in config.ALLOWLIST with a
+rationale; one-off deliberate folds carry inline suppressions.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from . import config
+from .core import (ArrayishEnv, Finding, Module, Project, dotted_name,
+                   func_defs)
+
+RULE = "host-sync"
+
+
+def check(project: Project) -> list[Finding]:
+    out: list[Finding] = []
+    for mod in project.modules:
+        if not mod.rel.endswith(config.HOT_MODULES):
+            continue
+        numpy_aliases = {name for name, dotted in mod.imports.items()
+                         if dotted == "numpy"}
+        for fn in func_defs(mod.tree):
+            env = ArrayishEnv(fn, mod)
+            for call in ast.walk(fn):
+                if not isinstance(call, ast.Call):
+                    continue
+                site = _classify_site(call, numpy_aliases)
+                if site is None or not call.args and site != "method":
+                    continue
+                operand = (call.func.value if site == "method"
+                           else call.args[0] if call.args else None)
+                if operand is None or not env.is_arrayish(operand):
+                    continue
+                label = (f".{call.func.attr}()" if site == "method"
+                         else f"{dotted_name(call.func)}()")
+                out.append(Finding(
+                    RULE, mod.rel, call.lineno,
+                    f"{label} on a device value blocks on a "
+                    "device->host transfer in a hot-path module",
+                    hint="keep the value on device, or fold once via a "
+                         "single np.asarray and suppress with a "
+                         "rationale if the sync is deliberate",
+                    func=fn.name))
+    return out
+
+
+def _classify_site(call: ast.Call, numpy_aliases: set[str]) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Name) and f.id in config.HOST_CAST_FUNCS:
+        return "cast"
+    if (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
+            and f.value.id in numpy_aliases
+            and f.attr in config.NUMPY_DOWNLOAD_FUNCS):
+        return "download"
+    if isinstance(f, ast.Attribute) and f.attr in config.HOST_SYNC_METHODS:
+        return "method"
+    return None

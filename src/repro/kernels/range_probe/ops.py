@@ -105,6 +105,9 @@ def _append_pad_row(table: jax.Array, pad_value) -> tuple[jax.Array, int]:
     return jnp.concatenate([table, row], axis=0), t
 
 
+# reprolint: disable=kernel-twin-parity -- pure data mover: gathers raw
+# member boxes for downstream twins; tombstones are enforced where the
+# hits are computed, via the parallel gathered_alive mask
 def gathered_rows(tiles: jax.Array, cand: jax.Array) -> jax.Array:
     """Row-major candidate gather: (T, cap, 4) x (Q, F) -> (Q, F, cap, 4)
     with -1 candidates remapped to an appended all-sentinel tile (the

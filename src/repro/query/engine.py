@@ -178,9 +178,8 @@ def run_join_pairs_masj(plan: JoinPlan, mesh: Mesh, axis: str = "d",
     """Paper-faithful MASJ: materialise per-tile pairs (duplicates
     included), all_gather, global sort-unique dedup."""
     from . import dedup as dd
-    uni = jnp.asarray(plan.universe)
 
-    def per_device(r_tiles, r_ids, s_tiles, s_ids, tile_boxes):
+    def per_device(r_tiles, r_ids, s_tiles, s_ids, tile_boxes, uni):
         def one_tile(args):
             rt, rid, st, sid, tb = args
             pr, ps, _ = join.tile_join_pairs(
@@ -198,9 +197,11 @@ def run_join_pairs_masj(plan: JoinPlan, mesh: Mesh, axis: str = "d",
     spec = P(axis)
     step = jax.jit(shard_map(
         per_device, mesh=mesh,
-        in_specs=(spec,) * 5, out_specs=P(), check_vma=False))
+        in_specs=(spec,) * 5 + (P(),), out_specs=P(), check_vma=False))
     sharding = NamedSharding(mesh, P(axis))
     args = [jax.device_put(jnp.asarray(x), sharding)
             for x in (plan.r_tiles, plan.r_ids, plan.s_tiles, plan.s_ids,
                       plan.tile_boxes)]
-    return int(step(*args))
+    uni = jax.device_put(jnp.asarray(plan.universe),
+                         NamedSharding(mesh, P()))
+    return int(step(*args, uni))

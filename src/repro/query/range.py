@@ -251,6 +251,9 @@ def merge_owner_ids(pids: jax.Array, pcounts: jax.Array, slots: jax.Array,
 # --------------------------------------------------------------------------
 
 @jax.jit
+# reprolint: disable=kernel-twin-parity -- reference-point research path
+# over full MASJ tiles of a static layout; not part of the tombstone
+# serving surface (serving goes through range_counts/pruned_*)
 def range_counts_rp(qboxes: jax.Array, tiles: jax.Array,
                     tile_boxes: jax.Array, uni: jax.Array) -> jax.Array:
     """Exact unique counts via reference-point ownership (FG/BSP/SLC/BOS).
@@ -267,6 +270,9 @@ def range_counts_rp(qboxes: jax.Array, tiles: jax.Array,
 
 
 @functools.partial(jax.jit, static_argnames=("max_fanout",))
+# reprolint: disable=kernel-twin-parity -- reference-point research path
+# (see range_counts_rp): static layouts only, outside the tombstone
+# serving surface
 def routed_range_counts(qboxes: jax.Array, tiles: jax.Array,
                         tile_boxes: jax.Array, uni: jax.Array,
                         route_mask: jax.Array, max_fanout: int) -> jax.Array:

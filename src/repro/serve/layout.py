@@ -220,6 +220,8 @@ def membership(parts: api.Partitioning, mbrs: jax.Array) -> jax.Array:
     b = parts.boxes
     hit = geometry.intersect_matrix(mbrs, b) & parts.valid[None, :]
     none = ~jnp.any(hit, axis=1)
+    # reprolint: disable=host-sync -- staging-time guard, eager by
+    # contract: skips the adoption pass in the covering common case
     if not bool(none.any()):       # host-called, eager: the covering /
         return hit                 # in-universe common case pays nothing
     dx = jnp.maximum(jnp.maximum(b[None, :, 0] - mbrs[:, None, 2],

@@ -1,0 +1,460 @@
+"""reprolint analyzer tests: per-rule known-bad / known-good fixtures
+(each bad fixture stops firing when its rule is disabled — the guard
+that a rule can't silently be deleted), suppression-rationale policy,
+CLI exit codes, and the live-tree self-check.
+
+Fixture trees are written under tmp_path mimicking the repo's layout
+(serve/, kernels/<fam>/) because rule applicability is path-driven.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import api
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def run_on(tmp_path, files, disable=()):
+    root = tmp_path / "src"
+    for rel, text in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return api.run(root, disable=set(disable), use_allowlist=False)
+
+
+def rule_findings(report, rule):
+    return [f for f in report.findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# R1 jit-closure-capture
+# ---------------------------------------------------------------------------
+
+R1_BAD = {"repro/serve/stage.py": """
+    import jax
+    import jax.numpy as jnp
+
+    def build_step(data):
+        tiles = jnp.asarray(data)
+        step = jax.jit(lambda q: q @ tiles)
+        return step
+    """}
+
+R1_GOOD = {"repro/serve/stage.py": """
+    import jax
+    import jax.numpy as jnp
+
+    def build_step(data):
+        tiles = jnp.asarray(data)
+        step = jax.jit(lambda q, t: q @ t)
+        return step, tiles
+    """}
+
+
+def test_r1_flags_closure_captured_array(tmp_path):
+    found = rule_findings(run_on(tmp_path, R1_BAD), "jit-closure-capture")
+    assert len(found) == 1
+    assert "'tiles'" in found[0].message
+
+
+def test_r1_local_def_capture(tmp_path):
+    files = {"repro/serve/stage.py": """
+        import jax
+        import jax.numpy as jnp
+
+        def build_step(data):
+            tiles = jnp.asarray(data)
+            def step(q):
+                return q @ tiles
+            return jax.jit(step)
+        """}
+    found = rule_findings(run_on(tmp_path, files), "jit-closure-capture")
+    assert len(found) == 1 and found[0].func == "build_step"
+
+
+def test_r1_good_and_disabled(tmp_path):
+    assert not run_on(tmp_path, R1_GOOD).findings
+    assert not run_on(tmp_path, R1_BAD,
+                      disable=["jit-closure-capture"]).findings
+
+
+# ---------------------------------------------------------------------------
+# R2 recompile-hazard
+# ---------------------------------------------------------------------------
+
+R2_BAD = {"repro/serve/width.py": """
+    import functools
+    import jax
+
+    @functools.partial(jax.jit, static_argnames=("width",))
+    def probe(x, width):
+        return x[:width]
+
+    def serve(xs, batch):
+        n = len(batch)
+        return probe(xs, width=n)
+    """}
+
+R2_GOOD = {"repro/serve/width.py": """
+    import functools
+    import jax
+
+    def round_up(x, m):
+        return (x + m - 1) // m * m
+
+    @functools.partial(jax.jit, static_argnames=("width",))
+    def probe(x, width):
+        return x[:width]
+
+    def serve(xs, batch):
+        n = round_up(len(batch), 8)
+        return probe(xs, width=n)
+    """}
+
+
+def test_r2_flags_unbucketed_static(tmp_path):
+    found = rule_findings(run_on(tmp_path, R2_BAD), "recompile-hazard")
+    assert len(found) == 1
+    assert "'width'" in found[0].message
+
+
+def test_r2_positional_and_cross_module(tmp_path):
+    files = {
+        "repro/kernels/fam/ops.py": """
+            import functools
+            import jax
+
+            @functools.partial(jax.jit, static_argnames=("bq",))
+            def probe_counts(qboxes, bq=128, *, alive=None):
+                return qboxes[:bq]
+            """,
+        "repro/serve/caller.py": """
+            from ..kernels.fam import ops as rops
+
+            def serve(qboxes, batch):
+                return rops.probe_counts(qboxes, len(batch))
+            """,
+    }
+    found = rule_findings(run_on(tmp_path, files), "recompile-hazard")
+    assert len(found) == 1 and found[0].path.endswith("caller.py")
+
+
+def test_r2_good_and_disabled(tmp_path):
+    assert not rule_findings(run_on(tmp_path, R2_GOOD), "recompile-hazard")
+    assert not run_on(tmp_path, R2_BAD,
+                      disable=["recompile-hazard"]).findings
+
+
+# ---------------------------------------------------------------------------
+# R3 host-sync
+# ---------------------------------------------------------------------------
+
+R3_BAD = {"repro/serve/exchange.py": """
+    import jax.numpy as jnp
+
+    def merge(parts):
+        total = jnp.sum(parts)
+        return float(total)
+    """}
+
+R3_GOOD = {"repro/serve/exchange.py": """
+    import jax.numpy as jnp
+
+    def merge(parts):
+        return jnp.sum(parts)
+
+    def host_merge(host_counts):
+        return float(sum(host_counts))
+    """}
+
+
+def test_r3_flags_hot_path_sync(tmp_path):
+    found = rule_findings(run_on(tmp_path, R3_BAD), "host-sync")
+    assert len(found) == 1
+    assert "float()" in found[0].message
+
+
+def test_r3_cold_module_exempt(tmp_path):
+    files = {"repro/serve/coldplane.py": R3_BAD["repro/serve/exchange.py"]}
+    assert not run_on(tmp_path, files).findings
+
+
+def test_r3_good_and_disabled(tmp_path):
+    assert not run_on(tmp_path, R3_GOOD).findings
+    assert not run_on(tmp_path, R3_BAD, disable=["host-sync"]).findings
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_suppression_with_rationale_silences(tmp_path):
+    files = {"repro/serve/exchange.py": """
+        import jax.numpy as jnp
+
+        def merge(parts):
+            total = jnp.sum(parts)
+            # reprolint: disable=host-sync -- merge result must come home
+            return float(total)
+        """}
+    rep = run_on(tmp_path, files)
+    assert not rep.findings
+    assert len(rep.suppressed) == 1
+
+
+def test_suppression_without_rationale_is_a_finding(tmp_path):
+    files = {"repro/serve/exchange.py": """
+        import jax.numpy as jnp
+
+        def merge(parts):
+            total = jnp.sum(parts)
+            # reprolint: disable=host-sync
+            return float(total)
+        """}
+    rep = run_on(tmp_path, files)
+    rules = sorted(f.rule for f in rep.findings)
+    # the rationale-free suppression suppresses nothing AND is flagged
+    assert rules == ["bad-suppression", "host-sync"]
+
+
+def test_suppression_unknown_rule_is_a_finding(tmp_path):
+    files = {"repro/serve/exchange.py": """
+        # reprolint: disable=no-such-rule -- rationale present
+        X = 1
+        """}
+    rep = run_on(tmp_path, files)
+    assert [f.rule for f in rep.findings] == ["bad-suppression"]
+
+
+# ---------------------------------------------------------------------------
+# R4 kernel-twin-parity
+# ---------------------------------------------------------------------------
+
+R4_HEADER = """
+    import jax.numpy as jnp
+
+    def probe_counts(qboxes, tiles, *, alive=None):
+        hit = qboxes[:, None, 0, None] <= tiles[None, :, :, 2]
+        if alive is not None:
+            hit = hit & alive[None]
+        return jnp.sum(hit, axis=2).astype(jnp.int32)
+    """
+
+R4_BAD_AVAL = {"repro/kernels/fake/ops.py": R4_HEADER + """
+    def probe_counts_skip(qboxes, tiles, cboxes, *, alive=None):
+        hit = qboxes[:, None, 0, None] <= tiles[None, :, :, 2]
+        if alive is not None:
+            hit = hit & alive[None]
+        return jnp.sum(hit, axis=(1, 2)).astype(jnp.int32)
+    """}
+
+R4_GOOD = {"repro/kernels/fake/ops.py": R4_HEADER + """
+    def probe_counts_skip(qboxes, tiles, cboxes, *, alive=None):
+        hit = qboxes[:, None, 0, None] <= tiles[None, :, :, 2]
+        live = qboxes[:, None, 0, None] <= cboxes[None, :, :, 2]
+        if alive is not None:
+            hit = hit & alive[None]
+        return (jnp.sum(hit, axis=2) * live[..., 0]).astype(jnp.int32)
+    """}
+
+
+def test_r4_missing_alive(tmp_path):
+    files = {"repro/kernels/fake/ops.py": """
+        import jax.numpy as jnp
+
+        def probe_counts(qboxes, tiles):
+            return jnp.sum(tiles, axis=(1, 2))
+        """}
+    found = rule_findings(run_on(tmp_path, files), "kernel-twin-parity")
+    assert len(found) == 1 and "tombstone" in found[0].message
+
+
+def test_r4_unused_alive(tmp_path):
+    files = {"repro/kernels/fake/ops.py": """
+        import jax.numpy as jnp
+
+        def probe_counts(qboxes, tiles, *, alive=None):
+            return jnp.sum(tiles, axis=(1, 2))
+        """}
+    found = rule_findings(run_on(tmp_path, files), "kernel-twin-parity")
+    assert len(found) == 1 and "never uses" in found[0].message
+
+
+R4_BAD_SIG = {"repro/kernels/fake/ops.py": R4_HEADER + """
+    def probe_counts_skip(qboxes, tiles, cboxes, extra, *, alive=None):
+        if alive is not None:
+            tiles = tiles * alive[..., None]
+        return jnp.sum(tiles * extra, axis=(1, 2))
+    """}
+
+
+def test_r4_twin_signature_mismatch(tmp_path):
+    found = rule_findings(run_on(tmp_path, R4_BAD_SIG),
+                          "kernel-twin-parity")
+    assert any("signature mismatch" in f.message for f in found)
+
+
+def test_r4_orphan_skip_twin(tmp_path):
+    files = {"repro/kernels/fake/ops.py": """
+        import jax.numpy as jnp
+
+        def gathered_mask_skip(qboxes, gtiles, gcboxes, *, galive=None):
+            m = qboxes[:, None, 0, None] <= gtiles[..., 2]
+            if galive is not None:
+                m = m & galive
+            return m
+        """}
+    found = rule_findings(run_on(tmp_path, files), "kernel-twin-parity")
+    assert any("no base twin" in f.message for f in found)
+
+
+def test_r4_aval_mismatch_via_eval_shape(tmp_path):
+    found = rule_findings(run_on(tmp_path, R4_BAD_AVAL),
+                          "kernel-twin-parity")
+    assert any("output avals differ" in f.message for f in found)
+
+
+def test_r4_good_and_disabled(tmp_path):
+    assert not run_on(tmp_path, R4_GOOD).findings
+    assert not run_on(tmp_path, R4_BAD_AVAL,
+                      disable=["kernel-twin-parity"]).findings
+
+
+# ---------------------------------------------------------------------------
+# R5 layout-conformance
+# ---------------------------------------------------------------------------
+
+R5_PRELUDE = """
+    from typing import Protocol
+
+    class TileLayout(Protocol):
+        mode: str
+        def append(self, mbrs): ...
+        def range_counts(self, qboxes): ...
+
+    class Base:
+        def __init__(self):
+            self.mode = "x"
+        def append(self, mbrs):
+            return self._scatter({})
+        def _scatter(self, plan):
+            return 0
+    """
+
+R5_BAD = {"repro/serve/layout.py": R5_PRELUDE + """
+    class Good(Base):
+        def range_counts(self, qboxes):
+            return 0
+
+    class Bad(Base):
+        pass
+
+    _PLACEMENT_CLS = {"good": Good, "bad": Bad}
+    """}
+
+R5_GOOD = {"repro/serve/layout.py": R5_PRELUDE + """
+    class Good(Base):
+        def range_counts(self, qboxes):
+            return 0
+
+    _PLACEMENT_CLS = {"good": Good}
+    """}
+
+
+def test_r5_missing_member(tmp_path):
+    found = rule_findings(run_on(tmp_path, R5_BAD), "layout-conformance")
+    assert len(found) == 1
+    assert "'Bad'" in found[0].message and "range_counts" in found[0].message
+
+
+def test_r5_unregistered_subclass(tmp_path):
+    files = {"repro/serve/layout.py": R5_GOOD["repro/serve/layout.py"] + """
+
+    class Rogue(Base):
+        def range_counts(self, qboxes):
+            return 1
+    """}
+    found = rule_findings(run_on(tmp_path, files), "layout-conformance")
+    assert len(found) == 1 and "not registered" in found[0].message
+
+
+def test_r5_replica_fanout_chain(tmp_path):
+    files = {"repro/serve/layout.py": R5_PRELUDE + """
+    class Sharded(Base):
+        def range_counts(self, qboxes):
+            return 0
+        def _placements(self, t_idx):
+            return [t_idx]          # never consults rep_owner
+        def _owner_scatter(self, arr, t_idx, slot_idx, vals):
+            return self._placements(t_idx)
+        def _scatter(self, plan):
+            return 1                # skips _owner_scatter entirely
+
+    _PLACEMENT_CLS = {"sharded": Sharded}
+    """}
+    found = rule_findings(run_on(tmp_path, files), "layout-conformance")
+    msgs = " | ".join(f.message for f in found)
+    assert "_owner_scatter" in msgs and "rep_owner" in msgs
+
+
+def test_r5_good_and_disabled(tmp_path):
+    assert not run_on(tmp_path, R5_GOOD).findings
+    assert not run_on(tmp_path, R5_BAD,
+                      disable=["layout-conformance"]).findings
+
+
+# ---------------------------------------------------------------------------
+# live tree + CLI
+# ---------------------------------------------------------------------------
+
+def test_live_src_tree_is_clean():
+    rep = api.run(REPO / "src",
+                  baseline=REPO / "tools" / "reprolint_baseline.json")
+    assert rep.findings == [], "\n".join(f.render() for f in rep.findings)
+
+
+def test_live_suppressions_all_carry_rationales():
+    rep = api.run(REPO / "src")
+    assert not [f for f in rep.findings if f.rule == "bad-suppression"]
+    assert rep.suppressed, "expected deliberate suppressed sites in src/"
+
+
+def test_baseline_file_is_empty():
+    data = json.loads(
+        (REPO / "tools" / "reprolint_baseline.json").read_text())
+    assert data == {"fingerprints": []}
+
+
+@pytest.mark.slow
+def test_cli_json_and_exit_codes(tmp_path):
+    env_root = str(REPO)
+    out = subprocess.run(
+        [sys.executable, "tools/reprolint.py", "src", "--json"],
+        cwd=env_root, capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+    payload = json.loads(out.stdout)
+    assert payload["counts"]["findings"] == 0
+
+    bad = tmp_path / "src" / "repro" / "serve" / "stage.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text(textwrap.dedent(
+        R1_BAD["repro/serve/stage.py"]))
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "reprolint.py"),
+         str(tmp_path / "src"), "--no-baseline"],
+        capture_output=True, text=True)
+    assert out.returncode == 1
+    assert "jit-closure-capture" in out.stdout
+
+    out = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "reprolint.py"), "src",
+         "--disable", "no-such-rule"],
+        cwd=env_root, capture_output=True, text=True)
+    assert out.returncode == 2

@@ -1,0 +1,45 @@
+"""Shared CLI plumbing for the tools/ checkers (check_links, reprolint).
+
+Exit-code contract for every tool here:
+  0  clean
+  1  findings / broken checks
+  2  usage or internal error
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+EXIT_OK = 0
+EXIT_FINDINGS = 1
+EXIT_USAGE = 2
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+def make_parser(prog: str, description: str) -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(prog=prog, description=description)
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit machine-readable JSON on stdout")
+    p.add_argument("--out", type=Path, default=None, metavar="PATH",
+                   help="also write the JSON report to PATH")
+    return p
+
+
+def emit(payload: dict, human: str, as_json: bool,
+         out: Path | None = None) -> None:
+    """Print either the JSON payload or the human rendering; --out gets
+    the JSON regardless of the stdout mode (CI artifact)."""
+    text = json.dumps(payload, indent=2)
+    if out is not None:
+        out.write_text(text + "\n")
+    print(text if as_json else human)
+
+
+def ensure_src_on_path() -> None:
+    src = REPO_ROOT / "src"
+    if str(src) not in sys.path:
+        sys.path.insert(0, str(src))

@@ -12,15 +12,19 @@ PAPERS.md, docs/** including subdirectories) and verifies:
   ``-1``/``-2`` suffixes).
 
 External (http/https/mailto) links are skipped — CI must not depend on
-the network.  Exits non-zero listing every broken link.
+the network.  Exit codes follow tools/_cli.py: 0 clean, 1 broken links,
+2 usage error.
 
-    python tools/check_links.py [repo_root]
+    python tools/check_links.py [repo_root] [--json] [--out PATH]
 """
 from __future__ import annotations
 
 import pathlib
 import re
 import sys
+
+import _cli
+from _cli import EXIT_FINDINGS, EXIT_OK, EXIT_USAGE
 
 # [text](target) — target captured up to the first unescaped ')'
 _LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
@@ -97,18 +101,29 @@ def check(root: pathlib.Path) -> list[str]:
     return broken
 
 
-def main() -> int:
-    root = pathlib.Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()
+def main(argv: list[str] | None = None) -> int:
+    p = _cli.make_parser("check_links",
+                         "markdown link + anchor checker (stdlib only)")
+    p.add_argument("root", nargs="?", default=".",
+                   help="repo root to scan (default: .)")
+    args = p.parse_args(argv)
+    root = pathlib.Path(args.root).resolve()
+    if not root.is_dir():
+        print(f"no such directory: {root}", file=sys.stderr)
+        return EXIT_USAGE
     broken = check(root)
     n_files = len(md_files(root))
+    payload = {"broken": broken,
+               "counts": {"broken": len(broken), "files": n_files}}
     if broken:
-        print("\n".join(broken))
-        print(f"FAILED: {len(broken)} broken link(s) across "
-              f"{n_files} markdown file(s)", file=sys.stderr)
-        return 1
-    print(f"OK: all relative links and anchors valid across "
-          f"{n_files} markdown file(s)")
-    return 0
+        human = "\n".join(broken) + (
+            f"\nFAILED: {len(broken)} broken link(s) across "
+            f"{n_files} markdown file(s)")
+    else:
+        human = (f"OK: all relative links and anchors valid across "
+                 f"{n_files} markdown file(s)")
+    _cli.emit(payload, human, args.as_json, args.out)
+    return EXIT_FINDINGS if broken else EXIT_OK
 
 
 if __name__ == "__main__":

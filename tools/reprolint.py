@@ -1,0 +1,89 @@
+#!/usr/bin/env python3
+"""reprolint — static hazard analysis for the serving stack.
+
+    python tools/reprolint.py src/              # human findings, exit 1 if any
+    python tools/reprolint.py src/ --json       # machine-readable
+    python tools/reprolint.py src/ --write-baseline   # accept current debt
+
+Rules (see docs/ARCHITECTURE.md "Static analysis"): jit-closure-capture,
+recompile-hazard, host-sync, kernel-twin-parity, layout-conformance.
+Suppress inline with ``# reprolint: disable=<rule> -- <rationale>``;
+a suppression without a rationale is itself a finding.
+
+AST + jax.eval_shape only — never executes a kernel.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import _cli
+from _cli import EXIT_FINDINGS, EXIT_OK, EXIT_USAGE
+
+_cli.ensure_src_on_path()
+
+DEFAULT_BASELINE = _cli.REPO_ROOT / "tools" / "reprolint_baseline.json"
+
+
+def main(argv: list[str] | None = None) -> int:
+    p = _cli.make_parser("reprolint",
+                         "static hazard analyzer for the jax/pallas "
+                         "serving stack")
+    p.add_argument("root", nargs="?", default="src",
+                   help="directory tree to scan (default: src)")
+    p.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                   help="baseline file of accepted fingerprints")
+    p.add_argument("--no-baseline", action="store_true",
+                   help="ignore the baseline (report all findings)")
+    p.add_argument("--write-baseline", action="store_true",
+                   help="accept current findings into the baseline")
+    p.add_argument("--no-allowlist", action="store_true",
+                   help="also report findings the config allowlist "
+                        "silences (audit mode)")
+    p.add_argument("--disable", action="append", default=[],
+                   metavar="RULE", help="disable a rule id (repeatable)")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print the rule catalogue and exit")
+    args = p.parse_args(argv)
+
+    from repro.analysis import api
+    from repro.analysis.core import write_baseline
+
+    if args.list_rules:
+        for rid in api.RULE_IDS:
+            print(f"{rid:22s} {api.RULE_DOCS[rid]}")
+        return EXIT_OK
+
+    bad = set(args.disable) - set(api.RULE_IDS)
+    if bad:
+        print(f"unknown rule id(s): {sorted(bad)}", file=sys.stderr)
+        return EXIT_USAGE
+    root = Path(args.root)
+    if not root.exists():
+        print(f"no such path: {root}", file=sys.stderr)
+        return EXIT_USAGE
+
+    report = api.run(
+        root, disable=set(args.disable),
+        baseline=None if args.no_baseline else args.baseline,
+        use_allowlist=not args.no_allowlist)
+
+    if args.write_baseline:
+        write_baseline(args.baseline, report.findings)
+        print(f"baseline: {len(report.findings)} fingerprint(s) -> "
+              f"{args.baseline}")
+        return EXIT_OK
+
+    lines = [f.render() for f in report.findings]
+    summary = (f"reprolint: {len(report.findings)} finding(s), "
+               f"{len(report.suppressed)} suppressed, "
+               f"{len(report.allowlisted)} allowlisted, "
+               f"{len(report.baselined)} baselined")
+    human = "\n".join(lines + [summary]) if lines else summary + " — OK"
+    _cli.emit(report.to_json(), human, args.as_json, args.out)
+    return EXIT_FINDINGS if report.findings else EXIT_OK
+
+
+if __name__ == "__main__":
+    sys.exit(main())
